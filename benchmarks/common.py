@@ -1,0 +1,32 @@
+"""Shared benchmark utilities. Output convention (benchmarks/run.py):
+
+    name,us_per_call,derived
+
+Every row is also collected into a global list for the EXPERIMENTS.md tables.
+"""
+from __future__ import annotations
+
+import statistics
+import time
+from typing import Callable, List, Tuple
+
+ROWS: List[Tuple[str, float, str]] = []
+
+
+def timeit(fn: Callable, trials: int = 5, warmup: int = 1) -> Tuple[float, float]:
+    """Returns (mean_seconds, stdev_seconds) over trials."""
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(trials):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    return (statistics.mean(times),
+            statistics.stdev(times) if len(times) > 1 else 0.0)
+
+
+def report(name: str, seconds: float, derived: str = "") -> None:
+    us = seconds * 1e6
+    ROWS.append((name, us, derived))
+    print(f"{name},{us:.1f},{derived}")

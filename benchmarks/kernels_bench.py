@@ -1,0 +1,54 @@
+"""Kernel-layer benchmark: the data-pipeline hot spots (filter, group-by)
+on the host path vs the jit'd JAX path, plus attention-oracle timing.
+
+On this CPU container the Pallas kernels run in interpret mode (correctness
+path), so wall-clock here benchmarks the XLA oracle implementations that the
+kernels must beat on TPU; kernel-vs-oracle equivalence is enforced in
+tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import report, timeit
+from repro.kernels import ref
+
+
+def run(n_rows: int = 1_000_000, n_groups: int = 128) -> None:
+    rng = np.random.default_rng(0)
+    vals = rng.standard_normal(n_rows).astype(np.float32)
+    codes = rng.integers(0, n_groups, n_rows).astype(np.int32)
+
+    # host (numpy) group-by
+    def np_groupby():
+        np.bincount(codes, weights=vals, minlength=n_groups)
+
+    t, _ = timeit(np_groupby, trials=5)
+    report("kernels/groupby_numpy", t, f"{n_rows} rows x {n_groups} groups")
+
+    jv, jc = jnp.asarray(vals), jnp.asarray(codes)
+    seg = jax.jit(lambda v, c: ref.ref_groupby(v, c, n_groups, "sum"))
+    seg(jv, jc).block_until_ready()
+    t, _ = timeit(lambda: seg(jv, jc).block_until_ready(), trials=5)
+    report("kernels/groupby_xla_oracle", t, "jit segment_sum")
+
+    mask = jnp.asarray(rng.random(n_rows) < 0.3)
+    comp = jax.jit(lambda m: ref.ref_compact(m))
+    comp(mask)[0].block_until_ready()
+    t, _ = timeit(lambda: comp(mask)[0].block_until_ready(), trials=5)
+    report("kernels/compact_xla_oracle", t, f"{n_rows} rows")
+
+    B, S, H, D = 1, 1024, 4, 64
+    q = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+    att = jax.jit(lambda q: ref.ref_attention(q, q, q))
+    att(q).block_until_ready()
+    t, _ = timeit(lambda: att(q).block_until_ready(), trials=3)
+    flops = 4 * B * H * S * S * D
+    report("kernels/attention_xla_oracle", t,
+           f"S={S} {flops / t / 1e9:.1f} GFLOP/s host")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,58 @@
+"""Benchmark harness — one module per paper table + system benches.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.py).
+--full uses paper-scale sizes (10M-row tables); the default sizes finish in
+a couple of minutes on this container.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sizes (slower)")
+    ap.add_argument("--only", default=None,
+                    help="run a single bench module (e.g. table3_passing)")
+    args = ap.parse_args()
+
+    from benchmarks import (kernels_bench, pipeline_cache, table1_limits,
+                            table2_envs, table3_passing, training_throughput)
+
+    plan = [
+        ("table1_limits", lambda: table1_limits.run(
+            payload_mb=1024 if args.full else 128)),
+        ("table2_envs", lambda: table2_envs.run(
+            files_per_package=400 if args.full else 120)),
+        ("table3_passing", lambda: table3_passing.run(
+            n_rows=10_000_000 if args.full else 1_000_000)),
+        ("pipeline_cache", lambda: pipeline_cache.run(
+            n_rows=2_000_000 if args.full else 200_000)),
+        ("kernels_bench", lambda: kernels_bench.run(
+            n_rows=4_000_000 if args.full else 500_000)),
+        ("training_throughput", lambda: training_throughput.run(
+            steps=16 if args.full else 4)),
+    ]
+    failed = []
+    print("name,us_per_call,derived")
+    for name, fn in plan:
+        if args.only and args.only != name:
+            continue
+        print(f"# --- {name} ---")
+        try:
+            fn()
+        except Exception:  # noqa: BLE001
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"# FAILED: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""End-to-end training throughput on this container (reduced config).
+
+Trains the xlstm-125m smoke config for a few steps and reports tokens/s —
+the CPU-scale sanity number behind examples/train_lm.py (full-scale numbers
+come from the dry-run roofline, EXPERIMENTS.md §Roofline).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import report
+from repro.configs import smoke_config
+from repro.models import build_model
+from repro.train import train_step as ts
+
+
+def run(steps: int = 8, batch: int = 4, seq: int = 128) -> None:
+    cfg = smoke_config("codeqwen1.5-7b")
+    model = build_model(cfg)
+    step_fn = jax.jit(ts.make_train_step(model, cfg), donate_argnums=(0,))
+    state = ts.make_train_state(model, jax.random.PRNGKey(0),
+                                dtype=jnp.float32)
+    rng = np.random.default_rng(0)
+    batch_data = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (batch, seq)),
+                              jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (batch, seq)),
+                              jnp.int32)}
+    state, m = step_fn(state, batch_data)      # compile
+    jax.block_until_ready(m)
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        state, m = step_fn(state, batch_data)
+    jax.block_until_ready(m)
+    dt = (time.perf_counter() - t0) / steps
+    report("training/step_time_smoke", dt,
+           f"{batch * seq / dt:.0f} tok/s loss={float(m['loss']):.3f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,34 @@
+"""The Fig.1 DAG as an importable project module for the CLI:
+
+    PYTHONPATH=src:examples python -m repro.launch.run_pipeline \
+        --project quickstart_project --workdir /tmp/bp_cli
+"""
+import repro as bp
+from repro.columnar import compute
+
+PROJECT = bp.Project("quickstart-cli")
+
+
+@PROJECT.model()
+@PROJECT.python("3.11", pip={"pandas": "2.0"})
+def euro_selection(
+    data=bp.Model("transactions", columns=["id", "usd", "country"],
+                  filter="eventTime BETWEEN 2023-01-01 AND 2023-02-01")):
+    print(f"euro_selection sees {data.num_rows} rows")
+    return compute.filter_table(
+        data, "country IN ('IT','FR','DE','ES','NL','GB')")
+
+
+@PROJECT.model(materialize=True)
+@PROJECT.python("3.10", pip={"pandas": "1.5.3"})
+def usd_by_country(data=bp.Model("euro_selection")):
+    return compute.group_by(data, ["country"], {"usd": ("usd", "sum")})
+
+
+def seed_catalog(catalog) -> None:
+    if "transactions" not in catalog.list_tables():
+        from repro.data.synthetic import make_transactions_table
+
+        catalog.write_table("transactions",
+                            make_transactions_table(200_000),
+                            rows_per_file=50_000)

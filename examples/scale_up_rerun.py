@@ -1,0 +1,68 @@
+"""Scale-up rerun — the paper's signature workflow (§2, §3.1):
+
+  "running a pipeline first on January data, then on the full year"
+
+The SAME decorated function re-runs against a 12x bigger input with zero code
+changes: the planner re-resolves the semantic reference, sizes the request,
+and provisions an on-demand worker when the fleet's VMs are too small
+(ephemeral functions = per-invocation sizing).
+
+    PYTHONPATH=src python examples/scale_up_rerun.py
+"""
+import os
+import sys
+import tempfile
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import repro as bp                                        # noqa: E402
+from repro.columnar import Catalog, ObjectStore, compute  # noqa: E402
+from repro.core import Client, LocalCluster               # noqa: E402
+from repro.core.runtime import execute_run                # noqa: E402
+from repro.data.synthetic import make_transactions_table  # noqa: E402
+
+workdir = tempfile.mkdtemp(prefix="scaleup_")
+store = ObjectStore(os.path.join(workdir, "s3"))
+catalog = Catalog(store)
+catalog.write_table("transactions", make_transactions_table(1_200_000),
+                    rows_per_file=100_000)  # 12 "months" of files
+
+cluster = LocalCluster(catalog, store, os.path.join(workdir, "dp"),
+                       n_workers=2, memory_gb=0.5)    # deliberately small VMs
+
+
+def build_project(date_filter: str, memory_gb: float) -> bp.Project:
+    proj = bp.Project(f"scaleup-{memory_gb}")
+
+    @proj.model(resources=bp.ResourceHint(memory_gb=memory_gb))
+    def monthly_revenue(
+        data=bp.Model("transactions", columns=["usd", "country"],
+                      filter=date_filter)):
+        print(f"aggregating {data.num_rows} rows")
+        return compute.group_by(data, ["country"], {"usd": ("usd", "sum")})
+
+    return proj
+
+
+client = Client()
+
+# -- run 1: January, small request, fits the small fleet --------------------
+jan = build_project("eventTime BETWEEN 2023-01-01 AND 2023-01-31",
+                    memory_gb=0.02)
+t0 = time.time()
+res1 = execute_run(jan, catalog=catalog, cluster=cluster, client=client)
+print(f"January: {time.time() - t0:.2f}s on worker "
+      f"{res1.plan.tasks['func:monthly_revenue'].worker}")
+
+# -- run 2: full year, 12x the data, bigger hint -> on-demand scale-up ------
+year = build_project("eventTime BETWEEN 2023-01-01 AND 2023-12-31",
+                     memory_gb=2.0)
+t0 = time.time()
+res2 = execute_run(year, catalog=catalog, cluster=cluster, client=client)
+worker2 = res2.plan.tasks["func:monthly_revenue"].worker
+print(f"full year: {time.time() - t0:.2f}s on worker {worker2}")
+assert worker2.startswith("ondemand-"), "expected an on-demand worker"
+print("scale-up rerun OK — same code, 12x data, bigger ephemeral VM")
+print(res2.read("monthly_revenue", cluster).to_pydict())
+cluster.close()

@@ -1,0 +1,82 @@
+"""Batched serving: requests ride the zero-copy fabric into a decode loop.
+
+    PYTHONPATH=src python examples/serve_pipeline.py
+
+A request table (prompts as a ColumnTable) flows through a bauplan function
+that batches/buckets it, then a reduced gemma2-style model prefils and
+decodes greedily with ring-buffer KV caches. Throughput and a sample
+completion are printed.
+"""
+import os
+import sys
+import tempfile
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import dataclasses                                       # noqa: E402
+import jax                                               # noqa: E402
+import jax.numpy as jnp                                  # noqa: E402
+import numpy as np                                       # noqa: E402
+
+import repro as bp                                       # noqa: E402
+from repro.columnar import Catalog, ColumnTable, ObjectStore  # noqa: E402
+from repro.core import Client, LocalCluster              # noqa: E402
+from repro.core.runtime import execute_run               # noqa: E402
+from repro.configs import smoke_config                   # noqa: E402
+from repro.data.tokenizer import ByteTokenizer           # noqa: E402
+from repro.models import build_model                     # noqa: E402
+from repro.train import serve_step as ss                 # noqa: E402
+
+# -- 1. requests arrive as a dataframe --------------------------------------
+prompts = ["the quick brown fox", "data pipelines stream arrow",
+           "zero copy functions", "ephemeral workers in the cloud"]
+workdir = tempfile.mkdtemp(prefix="serve_")
+store = ObjectStore(os.path.join(workdir, "s3"))
+catalog = Catalog(store)
+catalog.write_table("requests", ColumnTable.from_pydict(
+    {"request_id": np.arange(len(prompts), dtype=np.int64),
+     "prompt": prompts}))
+
+tok = ByteTokenizer()
+project = bp.Project("serving")
+
+
+@project.model()
+def batched_requests(data=bp.Model("requests",
+                                   columns=["request_id", "prompt"])):
+    """Tokenize + right-pad into one decode bucket (a tiny batcher)."""
+    ids = [tok.encode(str(p), eos=False)
+           for p in data.column("prompt").to_numpy()]
+    width = max(len(i) for i in ids)
+    padded = np.zeros((len(ids), width), np.int32)
+    for r, i in enumerate(ids):
+        padded[r, width - len(i):] = i          # left-pad to align last token
+    print(f"bucketed {len(ids)} prompts to width {width}")
+    return {"slot": np.repeat(np.arange(len(ids), dtype=np.int64), width),
+            "tokens": padded.reshape(-1)}
+
+
+cluster = LocalCluster(catalog, store, os.path.join(workdir, "dp"))
+client = Client()
+res = execute_run(project, catalog=catalog, cluster=cluster, client=client)
+batch_table = res.read("batched_requests", cluster)
+n_req = 4
+width = batch_table.column("tokens").num_rows // n_req
+prompt_batch = jnp.asarray(
+    batch_table.column("tokens").to_numpy().reshape(n_req, width))
+
+# -- 2. decode with ring-buffer caches ---------------------------------------
+cfg = dataclasses.replace(smoke_config("gemma2-27b"),
+                          vocab_size=max(tok.vocab_size, 512))
+model = build_model(cfg)
+params = model.init(jax.random.PRNGKey(0), dtype=jnp.float32)
+steps = 24
+t0 = time.time()
+out = ss.generate(model, cfg, params, prompt_batch, steps=steps,
+                  max_seq=width + steps + 1)
+dt = time.time() - t0
+print(f"decoded {n_req}x{steps} tokens in {dt:.2f}s "
+      f"({n_req * steps / dt:.1f} tok/s)")
+print("sample completion bytes:", tok.decode(np.asarray(out)[0])[:80])
+cluster.close()

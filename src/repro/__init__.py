@@ -1,0 +1,28 @@
+"""repro — a zero-copy, scale-up FaaS runtime for data + ML pipelines in JAX.
+
+Reproduction of "Bauplan: zero-copy, scale-up FaaS for data pipelines"
+(Tagliabue, Caraza-Harter, Greco; CS.DB 2024), extended into a multi-pod
+JAX training/inference framework. See DESIGN.md.
+
+The public SDK mirrors the paper's programming model:
+
+    import repro as bp
+
+    @bp.model()
+    @bp.python("3.11", pip={"pandas": "2.0"})
+    def euro_selection(data=bp.Model("transactions",
+                                     columns=["id", "usd", "country"],
+                                     filter="eventTime BETWEEN 2023-01-01 AND 2023-02-01")):
+        ...
+        return df
+"""
+from repro.api import (Model, Project, default_project, model, python,
+                       resources, run)
+from repro.core.spec import EnvSpec, ModelRef, ResourceHint
+
+__version__ = "1.0.0"
+
+__all__ = [
+    "Model", "Project", "default_project", "model", "python", "resources",
+    "run", "EnvSpec", "ModelRef", "ResourceHint",
+]

@@ -1,0 +1,134 @@
+"""The user-facing SDK — the paper's programming model (§3.3), verbatim shape:
+
+    import repro as bp
+
+    @bp.model()
+    @bp.python("3.11", pip={"pandas": "2.0"})
+    def euro_selection(
+        data=bp.Model(
+            "transactions",
+            columns=["id", "usd", "country"],
+            filter="eventTime BETWEEN 2023-01-01 AND 2023-02-01",
+        )
+    ):
+        ...
+        return _df
+
+    @bp.model(materialize=True)
+    @bp.python("3.10", pip={"pandas": "1.5.3"})
+    def usd_by_country(data=bp.Model("euro_selection")):
+        ...
+        return _df
+
+    bp.run(project, cluster=...)   # or the CLI: python -m repro.launch.run_pipeline
+"""
+from __future__ import annotations
+
+import threading
+from typing import Callable, Dict, List, Optional, Sequence, Union
+
+from repro.core.spec import (EnvSpec, FunctionSpec, ModelRef, ResourceHint,
+                             extract_inputs)
+
+_ENV_ATTR = "__repro_env__"
+_RES_ATTR = "__repro_resources__"
+
+
+def Model(name: str, columns: Optional[Sequence[str]] = None,
+          filter: Optional[str] = None) -> ModelRef:
+    """Reference a parent dataframe by name, with optional pushdown hints."""
+    return ModelRef.create(name, columns, filter)
+
+
+class Project:
+    """A registry of decorated functions — one deployable pipeline codebase."""
+
+    def __init__(self, name: str = "default"):
+        self.name = name
+        self.functions: Dict[str, FunctionSpec] = {}
+        self._lock = threading.Lock()
+
+    # -- decorators ---------------------------------------------------------
+    def model(self, name: Optional[str] = None, materialize: bool = False,
+              resources: Optional[ResourceHint] = None) -> Callable:
+        def deco(fn: Callable) -> Callable:
+            spec = FunctionSpec(
+                name=name or fn.__name__,
+                fn=fn,
+                inputs=extract_inputs(fn),
+                env=getattr(fn, _ENV_ATTR, EnvSpec.create()),
+                materialize=materialize,
+                resources=resources or getattr(fn, _RES_ATTR, ResourceHint()),
+            )
+            with self._lock:
+                if spec.name in self.functions:
+                    raise ValueError(f"duplicate model {spec.name!r} in project "
+                                     f"{self.name!r}")
+                self.functions[spec.name] = spec
+            fn.__repro_spec__ = spec
+            return fn
+
+        return deco
+
+    def python(self, version: str = "3.11",
+               pip: Optional[Dict[str, str]] = None) -> Callable:
+        """Declare the function's runtime environment. MUST be applied under
+        @model (closer to the function), matching the paper's listing."""
+
+        def deco(fn: Callable) -> Callable:
+            setattr(fn, _ENV_ATTR, EnvSpec.create(version, pip))
+            return fn
+
+        return deco
+
+    def resources(self, memory_gb: float = 1.0, cpus: int = 1,
+                  device_mesh=None, timeout_s: float = 600.0) -> Callable:
+        """Scale-up hint: rerun the same function with different sizing."""
+
+        def deco(fn: Callable) -> Callable:
+            setattr(fn, _RES_ATTR, ResourceHint(memory_gb, cpus,
+                                                tuple(device_mesh) if device_mesh else None,
+                                                timeout_s))
+            return fn
+
+        return deco
+
+    # -- queries ---------------------------------------------------------------
+    def source_tables(self) -> List[str]:
+        produced = set(self.functions)
+        refs = {r.name for f in self.functions.values() for _, r in f.inputs}
+        return sorted(refs - produced)
+
+    def clear(self) -> None:
+        self.functions.clear()
+
+
+# A module-level default project so the paper's exact snippet works.
+_default_project = Project("default")
+
+
+def default_project() -> Project:
+    return _default_project
+
+
+def model(*args, **kwargs):
+    return _default_project.model(*args, **kwargs)
+
+
+def python(*args, **kwargs):
+    return _default_project.python(*args, **kwargs)
+
+
+def resources(*args, **kwargs):
+    return _default_project.resources(*args, **kwargs)
+
+
+def run(project: Optional[Project] = None, *, catalog=None, cluster=None,
+        branch: str = "main", targets: Optional[Sequence[str]] = None,
+        client=None, run_id: Optional[str] = None):
+    """Plan + execute a project. Thin wrapper over core.runtime.execute_run."""
+    from repro.core.runtime import execute_run
+
+    return execute_run(project or _default_project, catalog=catalog,
+                       cluster=cluster, branch=branch, targets=targets,
+                       client=client, run_id=run_id)

@@ -1,0 +1,232 @@
+"""Columnar compute kernels over ColumnTable.
+
+Host (numpy) implementations are the reference path used by pipeline workers.
+The hot aggregation / filter kernels also have device paths in
+``repro.kernels`` (Pallas TPU kernels with jnp oracles); ``backend="jax"``
+routes through those jit'd wrappers so a worker placed on an accelerator runs
+the same logical plan on-device.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.columnar.expr import Expr, parse_predicate
+from repro.columnar.table import Column, ColumnTable, numeric_column, pack_validity
+
+AGG_FUNCS = ("sum", "mean", "count", "min", "max")
+
+
+# ---------------------------------------------------------------------------
+# filter / project
+# ---------------------------------------------------------------------------
+
+
+def filter_table(table: ColumnTable, predicate: Union[str, Expr],
+                 backend: str = "numpy") -> ColumnTable:
+    """Row filter; predicate is an Expr or Bauplan filter string."""
+    expr = parse_predicate(predicate)
+    if expr is None:
+        return table
+    mask = np.asarray(expr.evaluate(table), dtype=bool)
+    if backend == "jax":
+        # Device path: mask+compact through the Pallas-backed op for numeric
+        # columns; utf8 columns fall back to host gather.
+        from repro.kernels import ops as kops
+
+        numeric = {n: table.column(n) for n in table.column_names
+                   if table.column(n).kind != "utf8"}
+        if numeric:
+            idx = np.asarray(kops.compact_indices(mask))
+        else:
+            idx = np.nonzero(mask)[0]
+        return table.take(idx)
+    return table.filter(mask)
+
+
+def project(table: ColumnTable, columns: Sequence[str]) -> ColumnTable:
+    return table.project(columns)
+
+
+# ---------------------------------------------------------------------------
+# sorting
+# ---------------------------------------------------------------------------
+
+
+def _sort_indices(table: ColumnTable, by: Sequence[str],
+                  descending: bool = False) -> np.ndarray:
+    keys = []
+    for name in reversed(list(by)):
+        c = table.column(name)
+        vals = c.to_numpy()
+        if c.kind == "utf8":
+            # lexicographic on decoded strings (object array sorts fine)
+            vals = np.asarray(vals, dtype=object)
+        keys.append(vals)
+    idx = np.lexsort(keys)
+    return idx[::-1] if descending else idx
+
+
+def sort_by(table: ColumnTable, by: Sequence[str],
+            descending: bool = False) -> ColumnTable:
+    return table.take(_sort_indices(table, by, descending))
+
+
+# ---------------------------------------------------------------------------
+# group-by aggregate
+# ---------------------------------------------------------------------------
+
+
+def _encode_keys(table: ColumnTable, keys: Sequence[str]) -> Tuple[np.ndarray, np.ndarray]:
+    """Map group keys to dense integer codes. Returns (codes, first_row_idx)."""
+    cols = []
+    for k in keys:
+        c = table.column(k)
+        vals = c.to_numpy()
+        cols.append(np.asarray(vals, dtype=object) if c.kind == "utf8" else vals)
+    if len(cols) == 1:
+        uniques, codes = np.unique(cols[0], return_inverse=True)
+        first = np.zeros(len(uniques), dtype=np.int64)
+        seen = np.full(len(uniques), -1, dtype=np.int64)
+        order = np.argsort(codes, kind="stable")
+        sorted_codes = codes[order]
+        boundaries = np.searchsorted(sorted_codes, np.arange(len(uniques)))
+        first = order[boundaries]
+        del seen
+        return codes, first
+    # multi-key: build structured codes via successive uniquification
+    combined = np.zeros(table.num_rows, dtype=np.int64)
+    for c in cols:
+        _, sub = np.unique(c, return_inverse=True)
+        combined = combined * (sub.max(initial=0) + 1) + sub
+    uniques, codes = np.unique(combined, return_inverse=True)
+    order = np.argsort(codes, kind="stable")
+    boundaries = np.searchsorted(codes[order], np.arange(len(uniques)))
+    first = order[boundaries]
+    return codes, first
+
+
+def group_by(table: ColumnTable, keys: Sequence[str],
+             aggs: Dict[str, Tuple[str, str]],
+             backend: str = "numpy") -> ColumnTable:
+    """Group-by aggregate.
+
+    aggs maps output column name -> (input column, agg func). Example::
+
+        group_by(t, ["country"], {"total_usd": ("usd", "sum")})
+
+    Output rows are ordered by first appearance? No — by key code order
+    (np.unique order), which is deterministic; tests rely on determinism
+    only.
+    """
+    if table.num_rows == 0:
+        data = {k: table.column(k).take(np.array([], np.int64)) for k in keys}
+        for out_name, (src, fn) in aggs.items():
+            data[out_name] = numeric_column(np.array([], dtype=np.float64))
+        return ColumnTable(data)
+    codes, first = _encode_keys(table, keys)
+    n_groups = len(first)
+    out: Dict[str, Column] = {k: table.column(k).take(first) for k in keys}
+    for out_name, (src, fn) in aggs.items():
+        if fn not in AGG_FUNCS:
+            raise ValueError(f"unknown agg {fn!r}; supported: {AGG_FUNCS}")
+        if fn == "count":
+            out[out_name] = numeric_column(np.bincount(codes, minlength=n_groups)
+                                           .astype(np.int64))
+            continue
+        src_col = table.column(src)
+        vals = src_col.data.astype(np.float64)
+        if backend == "jax":
+            from repro.kernels import ops as kops
+
+            agg = np.asarray(kops.groupby_aggregate(vals, codes, n_groups, fn))
+        else:
+            if fn in ("sum", "mean"):
+                sums = np.bincount(codes, weights=vals, minlength=n_groups)
+                if fn == "sum":
+                    agg = sums
+                else:
+                    counts = np.bincount(codes, minlength=n_groups)
+                    agg = sums / np.maximum(counts, 1)
+            elif fn in ("min", "max"):
+                init = np.inf if fn == "min" else -np.inf
+                agg = np.full(n_groups, init, dtype=np.float64)
+                ufunc = np.minimum if fn == "min" else np.maximum
+                ufunc.at(agg, codes, vals)
+        if np.issubdtype(src_col.dtype, np.integer) and fn in ("sum", "min", "max"):
+            agg = agg.astype(np.int64)
+        out[out_name] = numeric_column(agg)
+    return ColumnTable(out)
+
+
+# ---------------------------------------------------------------------------
+# join
+# ---------------------------------------------------------------------------
+
+
+def hash_join(left: ColumnTable, right: ColumnTable, on: Sequence[str],
+              how: str = "inner", suffix: str = "_r") -> ColumnTable:
+    """Hash join on equal column names. Supports inner and left joins."""
+    if how not in ("inner", "left"):
+        raise ValueError("how must be inner|left")
+    keys_l = [left.column(k).to_numpy() for k in on]
+    keys_r = [right.column(k).to_numpy() for k in on]
+    index: Dict[tuple, List[int]] = {}
+    for i in range(right.num_rows):
+        index.setdefault(tuple(k[i] for k in keys_r), []).append(i)
+    li, ri, lmiss = [], [], []
+    for i in range(left.num_rows):
+        matches = index.get(tuple(k[i] for k in keys_l))
+        if matches:
+            for j in matches:
+                li.append(i)
+                ri.append(j)
+        elif how == "left":
+            lmiss.append(i)
+    li_arr = np.asarray(li + lmiss, dtype=np.int64)
+    ri_arr = np.asarray(ri, dtype=np.int64)
+    out = {n: left.column(n).take(li_arr) for n in left.column_names}
+    n_miss = len(lmiss)
+    for n in right.column_names:
+        if n in on:
+            continue
+        name = n if n not in out else n + suffix
+        c = right.column(n).take(ri_arr)
+        if n_miss:
+            # pad left-join misses with nulls
+            pad_valid = np.concatenate([c.valid_mask(), np.zeros(n_miss, bool)])
+            if c.kind == "utf8":
+                from repro.columnar.table import utf8_column
+
+                vals = list(c.to_numpy()) + [None] * n_miss
+                c = utf8_column(vals)
+            else:
+                data = np.concatenate([c.data, np.zeros(n_miss, c.data.dtype)])
+                c = Column(c.kind, data, None, pack_validity(pad_valid))
+        out[name] = c
+    return ColumnTable(out)
+
+
+# ---------------------------------------------------------------------------
+# table stats (feed Iceberg-style manifests)
+# ---------------------------------------------------------------------------
+
+
+def column_stats(table: ColumnTable) -> Dict[str, Dict]:
+    stats: Dict[str, Dict] = {}
+    for name in table.column_names:
+        c = table.column(name)
+        entry: Dict = {"null_count": c.null_count}
+        vals = c.to_numpy()
+        mask = c.valid_mask()
+        if c.kind != "utf8" and mask.any():
+            v = vals[mask]
+            entry["min"] = v.min().item()
+            entry["max"] = v.max().item()
+        elif c.kind == "utf8" and mask.any():
+            v = [x for x, m in zip(vals, mask) if m]
+            entry["min"] = min(v)
+            entry["max"] = max(v)
+        stats[name] = entry
+    return stats

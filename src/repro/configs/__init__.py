@@ -1,0 +1,39 @@
+"""Config registry: ``get_config(arch_id)`` / ``smoke_config(arch_id)``.
+
+The 10 assigned architectures plus the paper's own demo pipeline config.
+"""
+from typing import Callable, Dict, List
+
+from repro.configs import (codeqwen15_7b, gemma2_27b, jamba_15_large,
+                           llama4_maverick, llama4_scout, minitron_4b,
+                           paligemma_3b, whisper_small, xlstm_125m, yi_9b)
+from repro.configs.common import (SHAPES, LayerSpec, MambaConfig, ModelConfig,
+                                  MoEConfig, ShapeConfig, XLSTMConfig,
+                                  applicable_shapes)
+
+_MODULES = (gemma2_27b, codeqwen15_7b, yi_9b, minitron_4b, xlstm_125m,
+            jamba_15_large, paligemma_3b, whisper_small, llama4_maverick,
+            llama4_scout)
+
+_REGISTRY: Dict[str, object] = {m.ARCH_ID: m for m in _MODULES}
+
+ARCH_IDS: List[str] = list(_REGISTRY)
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in _REGISTRY:
+        raise KeyError(f"unknown arch {arch_id!r}; have {ARCH_IDS}")
+    return _REGISTRY[arch_id].get_config()
+
+
+def smoke_config(arch_id: str) -> ModelConfig:
+    if arch_id not in _REGISTRY:
+        raise KeyError(f"unknown arch {arch_id!r}; have {ARCH_IDS}")
+    return _REGISTRY[arch_id].smoke_config()
+
+
+__all__ = [
+    "ARCH_IDS", "SHAPES", "get_config", "smoke_config", "applicable_shapes",
+    "ModelConfig", "ShapeConfig", "LayerSpec", "MoEConfig", "MambaConfig",
+    "XLSTMConfig",
+]

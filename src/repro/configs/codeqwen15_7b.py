@@ -1,0 +1,33 @@
+"""codeqwen1.5-7b [dense] — 32L d_model=4096 32H (MHA kv=32) d_ff=13440
+vocab=92416; qwen1.5 architecture [hf:Qwen/CodeQwen1.5-7B; hf]."""
+import dataclasses
+
+from repro.configs.common import LayerSpec, ModelConfig
+
+ARCH_ID = "codeqwen1.5-7b"
+
+
+def get_config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        family="decoder",
+        n_layers=32,
+        d_model=4096,
+        n_heads=32,
+        n_kv_heads=32,
+        head_dim=128,
+        d_ff=13440,
+        vocab_size=92416,
+        pattern=(LayerSpec("attn", "dense"),),
+        rope_theta=1_000_000.0,        # 64k context rope base
+        tie_embeddings=False,
+        act="silu",
+        supports_long_context=False,   # pure full attention -> skip long_500k
+        notes="qwen1.5 arch: MHA, SwiGLU, untied embeddings",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(
+        get_config(), n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+        head_dim=16, d_ff=128, vocab_size=512)

@@ -1,0 +1,202 @@
+"""Model/shape configuration system.
+
+Every assigned architecture is a ``ModelConfig`` built from per-layer
+``LayerSpec``s. Layers are grouped into a repeating *super-block pattern*
+(e.g. gemma2's (local, global) alternation, jamba's 1-attention-per-8 with
+MoE on odd layers); the model stacks parameters per pattern-position and
+scans over groups — compile time stays O(pattern), not O(n_layers).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+# mixer kinds: attn | attn_local | mamba | mlstm | slstm
+# ffn kinds:   dense | moe | none
+MIXERS = ("attn", "attn_local", "mamba", "mlstm", "slstm")
+FFNS = ("dense", "moe", "none")
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    mixer: str = "attn"
+    ffn: str = "dense"
+
+    def __post_init__(self):
+        assert self.mixer in MIXERS, self.mixer
+        assert self.ffn in FFNS, self.ffn
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    capacity_factor: float = 1.25
+    shared_expert: bool = False          # llama4-style always-on expert
+    router_z_loss: float = 1e-3
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaConfig:
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int = 0                     # 0 -> ceil(d_model/16)
+    chunk: int = 256                     # parallel-scan chunk length
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMConfig:
+    proj_factor_m: float = 2.0           # mLSTM up-projection
+    proj_factor_s: float = 4.0 / 3.0     # sLSTM FFN factor
+    chunk: int = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                          # decoder | hybrid | xlstm | whisper | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+    pattern: Tuple[LayerSpec, ...]       # len(pattern) divides n_layers
+    # attention details
+    rope_theta: float = 10000.0
+    window: int = 4096                   # for attn_local
+    attn_softcap: Optional[float] = None     # gemma2: 50.0
+    final_softcap: Optional[float] = None    # gemma2: 30.0
+    sandwich_norm: bool = False          # gemma2 post-norms
+    prefix_len_attr: Optional[str] = None    # vlm: bidirectional prefix
+    # sub-configs
+    moe: Optional[MoEConfig] = None
+    mamba: Optional[MambaConfig] = None
+    xlstm: Optional[XLSTMConfig] = None
+    # encoder (whisper): number of bidirectional encoder layers; the conv
+    # frontend is a stub — input_specs() provides precomputed frame embeds
+    encoder_layers: int = 0
+    encoder_seq: int = 1500
+    # vlm stub: number of image patch embeddings prepended to the text
+    vision_patches: int = 0
+    # misc
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = True
+    act: str = "silu"                    # dense-FFN activation
+    ffn_gated: bool = True               # SwiGLU-style gate (False: whisper)
+    dtype: str = "bfloat16"
+    remat: str = "block"                 # none | block | full
+    attention_impl: str = "xla"          # xla | pallas (TPU hardware)
+    scan_unroll: bool = False            # unroll layer scan (cost analysis)
+    # long-context applicability (pure full-attention archs skip long_500k)
+    supports_long_context: bool = False
+    notes: str = ""
+
+    # -- derived -------------------------------------------------------------
+    def __post_init__(self):
+        assert self.n_layers % len(self.pattern) == 0, \
+            f"{self.name}: pattern {len(self.pattern)} !| layers {self.n_layers}"
+        assert self.n_heads % self.n_kv_heads == 0
+
+    @property
+    def n_groups(self) -> int:
+        return self.n_layers // len(self.pattern)
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab padded to a multiple of 256 so (16, 16) meshes shard it."""
+        return (self.vocab_size + 255) // 256 * 256
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.n_heads // self.n_kv_heads
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embeddings + blocks), used for 6ND."""
+        d, v = self.d_model, self.padded_vocab
+        total = v * d                          # embedding
+        if not self.tie_embeddings:
+            total += v * d
+        kinds: Dict[str, int] = {}
+        for spec in self.pattern:
+            kinds[spec.mixer] = kinds.get(spec.mixer, 0) + 1
+            kinds["ffn_" + spec.ffn] = kinds.get("ffn_" + spec.ffn, 0) + 1
+        g = self.n_groups
+        H, KV, hd = self.n_heads, self.n_kv_heads, self.head_dim
+        attn = d * H * hd + 2 * d * KV * hd + H * hd * d
+        if self.mamba:
+            di = self.mamba.expand * d
+            dt_rank = self.mamba.dt_rank or -(-d // 16)
+            mamba = (d * 2 * di + di * self.mamba.d_conv
+                     + di * (dt_rank + 2 * self.mamba.d_state)
+                     + dt_rank * di + di * self.mamba.d_state + di + di * d)
+        else:
+            mamba = 0
+        if self.xlstm:
+            dm = int(self.xlstm.proj_factor_m * d)
+            mlstm = d * 2 * dm + 3 * dm * dm // max(self.n_heads, 1) + 4 * dm + dm * d
+            ds = d
+            slstm = 4 * d * ds + 4 * ds * ds // max(self.n_heads, 1) + \
+                int(2 * self.xlstm.proj_factor_s * d * d)
+        else:
+            mlstm = slstm = 0
+        dense_ffn = (3 if self.ffn_gated else 2) * d * self.d_ff
+        moe_ffn = 0
+        if self.moe:
+            moe_ffn = (d * self.moe.num_experts
+                       + self.moe.num_experts * 3 * d * self.moe.d_ff_expert)
+            if self.moe.shared_expert:
+                moe_ffn += 3 * d * self.moe.d_ff_expert
+        total += g * (kinds.get("attn", 0) + kinds.get("attn_local", 0)) * attn
+        total += g * kinds.get("mamba", 0) * mamba
+        total += g * kinds.get("mlstm", 0) * mlstm
+        total += g * kinds.get("slstm", 0) * slstm
+        total += g * kinds.get("ffn_dense", 0) * dense_ffn
+        total += g * kinds.get("ffn_moe", 0) * moe_ffn
+        # encoder (whisper)
+        if self.encoder_layers:
+            enc = self.encoder_layers * (attn + dense_ffn)
+            dec_cross = self.n_layers * attn          # cross-attention
+            total += enc + dec_cross
+        return int(total)
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: top_k of num_experts)."""
+        if not self.moe:
+            return self.param_count()
+        full = self.param_count()
+        moe_layers = sum(1 for s in self.pattern if s.ffn == "moe") * self.n_groups
+        per_expert = 3 * self.d_model * self.moe.d_ff_expert
+        inactive = moe_layers * (self.moe.num_experts - self.moe.top_k) * per_expert
+        return int(full - inactive)
+
+
+# ---------------------------------------------------------------------------
+# assigned input shapes (seq_len x global_batch)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+def applicable_shapes(cfg: ModelConfig) -> List[str]:
+    out = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.supports_long_context:
+        out.append("long_500k")
+    return out

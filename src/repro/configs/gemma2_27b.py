@@ -1,0 +1,43 @@
+"""gemma2-27b [dense] — 46L d_model=4608 32H (GQA kv=16) d_ff=36864
+vocab=256000; local+global alternating attention, logit softcaps
+[arXiv:2408.00118; hf]."""
+import dataclasses
+
+from repro.configs.common import LayerSpec, ModelConfig
+
+ARCH_ID = "gemma2-27b"
+
+
+def get_config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        family="decoder",
+        n_layers=46,
+        d_model=4608,
+        n_heads=32,
+        n_kv_heads=16,
+        head_dim=128,
+        d_ff=36864,
+        vocab_size=256000,
+        pattern=(LayerSpec("attn_local", "dense"),
+                 LayerSpec("attn", "dense")),
+        window=4096,
+        attn_softcap=50.0,
+        final_softcap=30.0,
+        sandwich_norm=True,
+        rope_theta=10000.0,
+        tie_embeddings=True,
+        act="gelu",                # gemma2 uses GeGLU
+        ffn_gated=True,
+        # local layers are windowed (4096) and global layers decode over a
+        # sequence-sharded cache -> long_500k is runnable (DESIGN.md §5)
+        supports_long_context=True,
+        notes="alternating local(4096)/global attention; attn softcap 50, "
+              "final softcap 30; sandwich norms (gemma2 style)",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(
+        get_config(), n_layers=4, d_model=64, n_heads=4, n_kv_heads=2,
+        head_dim=16, d_ff=128, vocab_size=512, window=16)

@@ -1,0 +1,54 @@
+"""jamba-1.5-large-398b [hybrid] — 72L d_model=8192 64H (GQA kv=8)
+d_ff=24576 vocab=65536; Mamba+attention 1:7 interleave, MoE 16e top-2
+[arXiv:2403.19887; hf].
+
+Super-block of 8 layers: attention at index 4, mamba elsewhere; MoE replaces
+the dense FFN on odd indices (every other layer). With 9 groups this yields
+9 attention / 63 mamba / 36 MoE / 36 dense layers and ~398B params
+(ModelConfig.param_count() reproduces the total analytically)."""
+import dataclasses
+
+from repro.configs.common import (LayerSpec, MambaConfig, ModelConfig,
+                                  MoEConfig)
+
+ARCH_ID = "jamba-1.5-large-398b"
+
+
+def get_config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        family="hybrid",
+        n_layers=72,
+        d_model=8192,
+        n_heads=64,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=24576,
+        vocab_size=65536,
+        pattern=(LayerSpec("mamba", "dense"),
+                 LayerSpec("mamba", "moe"),
+                 LayerSpec("mamba", "dense"),
+                 LayerSpec("mamba", "moe"),
+                 LayerSpec("attn", "dense"),
+                 LayerSpec("mamba", "moe"),
+                 LayerSpec("mamba", "dense"),
+                 LayerSpec("mamba", "moe")),
+        moe=MoEConfig(num_experts=16, top_k=2, d_ff_expert=24576,
+                      capacity_factor=1.25),
+        mamba=MambaConfig(d_state=16, d_conv=4, expand=2, chunk=256),
+        rope_theta=10000.0,
+        tie_embeddings=False,
+        act="silu",
+        supports_long_context=True,      # hybrid: mamba state + 1:7 attention
+        notes="1 attn per 8 layers; MoE every other layer; 398B total / "
+              "~94B active (top-2 of 16)",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(
+        get_config(), n_layers=8, d_model=64, n_heads=4, n_kv_heads=2,
+        head_dim=16, d_ff=128,
+        moe=MoEConfig(num_experts=4, top_k=2, d_ff_expert=128),
+        mamba=MambaConfig(d_state=4, d_conv=4, expand=2, chunk=16),
+        vocab_size=512)

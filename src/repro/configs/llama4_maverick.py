@@ -1,0 +1,44 @@
+"""llama4-maverick-400b-a17b [moe] — 48L d_model=5120 40H (GQA kv=8)
+d_ff=8192 vocab=202048; MoE 128e top-1, early fusion
+[hf:meta-llama/Llama-4-Scout-17B-16E; unverified].
+
+Maverick interleaves dense and MoE layers (every other layer MoE) with a
+shared expert; top-1 routing. 40 heads don't divide the 16-way model axis:
+attention activations use the sequence-sharding rule set."""
+import dataclasses
+
+from repro.configs.common import LayerSpec, ModelConfig, MoEConfig
+
+ARCH_ID = "llama4-maverick-400b-a17b"
+
+
+def get_config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        family="moe",
+        n_layers=48,
+        d_model=5120,
+        n_heads=40,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=8192,
+        vocab_size=202048,
+        pattern=(LayerSpec("attn", "dense"),
+                 LayerSpec("attn", "moe")),
+        moe=MoEConfig(num_experts=128, top_k=1, d_ff_expert=8192,
+                      capacity_factor=1.25, shared_expert=True),
+        rope_theta=500000.0,
+        tie_embeddings=False,
+        act="silu",
+        supports_long_context=False,
+        notes="MoE every other layer, 128 experts top-1 + shared expert",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(
+        get_config(), n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+        head_dim=16, d_ff=128,
+        moe=MoEConfig(num_experts=4, top_k=1, d_ff_expert=128,
+                      shared_expert=True),
+        vocab_size=512)

@@ -1,0 +1,38 @@
+"""minitron-4b [dense] — 32L d_model=3072 24H (GQA kv=8) d_ff=9216
+vocab=256000; pruned nemotron [arXiv:2407.14679; hf].
+
+Nemotron-style: squared-ReLU MLP (non-gated), untied embeddings.
+24 heads don't divide the 16-way model axis: attention activations use the
+sequence-sharding rule set (DESIGN.md §4, distributed.sharding)."""
+import dataclasses
+
+from repro.configs.common import LayerSpec, ModelConfig
+
+ARCH_ID = "minitron-4b"
+
+
+def get_config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        family="decoder",
+        n_layers=32,
+        d_model=3072,
+        n_heads=24,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=9216,
+        vocab_size=256000,
+        pattern=(LayerSpec("attn", "dense"),),
+        rope_theta=10000.0,
+        tie_embeddings=False,
+        act="relu2",                # nemotron squared-ReLU
+        ffn_gated=False,
+        supports_long_context=False,
+        notes="pruned nemotron; squared-ReLU non-gated MLP",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(
+        get_config(), n_layers=2, d_model=48, n_heads=6, n_kv_heads=2,
+        head_dim=8, d_ff=96, vocab_size=512)

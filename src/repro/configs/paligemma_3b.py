@@ -1,0 +1,40 @@
+"""paligemma-3b [vlm] — 18L d_model=2048 8H (MQA kv=1) d_ff=16384
+vocab=257216; SigLIP + gemma [arXiv:2407.07726; hf].
+
+The SigLIP vision tower is a STUB per the assignment: ``input_specs()``
+provides 256 precomputed patch embeddings (B, 256, d_model) which are
+prepended to the token stream with PaliGemma's prefix-LM masking
+(bidirectional attention within the image+prefix block)."""
+import dataclasses
+
+from repro.configs.common import LayerSpec, ModelConfig
+
+ARCH_ID = "paligemma-3b"
+
+
+def get_config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        family="vlm",
+        n_layers=18,
+        d_model=2048,
+        n_heads=8,
+        n_kv_heads=1,
+        head_dim=256,
+        d_ff=16384,
+        vocab_size=257216,
+        pattern=(LayerSpec("attn", "dense"),),
+        rope_theta=10000.0,
+        tie_embeddings=True,
+        act="gelu",
+        ffn_gated=True,               # gemma GeGLU
+        vision_patches=256,
+        supports_long_context=False,
+        notes="gemma backbone + stubbed SigLIP patches, prefix-LM mask",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(
+        get_config(), n_layers=2, d_model=64, n_heads=4, n_kv_heads=1,
+        head_dim=16, d_ff=128, vocab_size=512, vision_patches=8)

@@ -1,0 +1,41 @@
+"""whisper-small [audio] — 12L d_model=768 12H d_ff=3072 vocab=51865;
+encoder-decoder, conv frontend stubbed [arXiv:2212.04356; unverified].
+
+12 encoder + 12 decoder layers (whisper-small's true layout). The log-mel +
+conv1d frontend is a STUB: ``input_specs()`` provides precomputed frame
+embeddings (B, 1500, d_model)."""
+import dataclasses
+
+from repro.configs.common import LayerSpec, ModelConfig
+
+ARCH_ID = "whisper-small"
+
+
+def get_config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        family="whisper",
+        n_layers=12,                  # decoder layers
+        encoder_layers=12,
+        encoder_seq=1500,
+        d_model=768,
+        n_heads=12,
+        n_kv_heads=12,
+        head_dim=64,
+        d_ff=3072,
+        vocab_size=51865,
+        pattern=(LayerSpec("attn", "dense"),),
+        rope_theta=10000.0,
+        tie_embeddings=True,
+        act="gelu",
+        ffn_gated=False,              # whisper's plain GELU MLP
+        supports_long_context=False,
+        notes="enc-dec; cross-attention K/V precomputed per request",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(
+        get_config(), n_layers=2, encoder_layers=2, encoder_seq=24,
+        d_model=64, n_heads=4, n_kv_heads=4, head_dim=16, d_ff=128,
+        vocab_size=512)

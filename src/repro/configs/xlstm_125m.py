@@ -1,0 +1,41 @@
+"""xlstm-125m [ssm] — 12L d_model=768 4H d_ff=0 vocab=50304; sLSTM + mLSTM
+blocks [arXiv:2405.04517; unverified].
+
+Block ratio: 3 mLSTM : 1 sLSTM per 4-layer super-block (the paper's
+xLSTM[7:1] ratio is not representable in 12 layers; noted in DESIGN.md).
+Blocks carry their own up/down projections (d_ff=0, ffn='none')."""
+import dataclasses
+
+from repro.configs.common import LayerSpec, ModelConfig, XLSTMConfig
+
+ARCH_ID = "xlstm-125m"
+
+
+def get_config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        family="xlstm",
+        n_layers=12,
+        d_model=768,
+        n_heads=4,
+        n_kv_heads=4,
+        head_dim=192,
+        d_ff=0,
+        vocab_size=50304,
+        pattern=(LayerSpec("mlstm", "none"),
+                 LayerSpec("mlstm", "none"),
+                 LayerSpec("mlstm", "none"),
+                 LayerSpec("slstm", "none")),
+        xlstm=XLSTMConfig(proj_factor_m=2.0, proj_factor_s=4.0 / 3.0,
+                          chunk=256),
+        tie_embeddings=True,
+        supports_long_context=True,     # recurrent: O(1) state per token
+        notes="mLSTM chunkwise-parallel, sLSTM sequential scan",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(
+        get_config(), n_layers=4, d_model=64, n_heads=2, n_kv_heads=2,
+        head_dim=32, vocab_size=512,
+        xlstm=XLSTMConfig(chunk=16))

@@ -1,0 +1,33 @@
+"""yi-9b [dense] — 48L d_model=4096 32H (GQA kv=4) d_ff=11008 vocab=64000;
+llama-arch GQA [arXiv:2403.04652; hf]."""
+import dataclasses
+
+from repro.configs.common import LayerSpec, ModelConfig
+
+ARCH_ID = "yi-9b"
+
+
+def get_config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        family="decoder",
+        n_layers=48,
+        d_model=4096,
+        n_heads=32,
+        n_kv_heads=4,
+        head_dim=128,
+        d_ff=11008,
+        vocab_size=64000,
+        pattern=(LayerSpec("attn", "dense"),),
+        rope_theta=5_000_000.0,
+        tie_embeddings=False,
+        act="silu",
+        supports_long_context=False,
+        notes="llama-style GQA (8 q heads per kv head)",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(
+        get_config(), n_layers=2, d_model=64, n_heads=8, n_kv_heads=2,
+        head_dim=8, d_ff=128, vocab_size=512)

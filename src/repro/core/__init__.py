@@ -1,0 +1,19 @@
+# The paper's primary contribution: the co-designed FaaS programming model
+# and data-aware runtime (logical/physical planning, zero-copy channels,
+# columnar differential caching, ephemeral package-level environments,
+# fault-tolerant scheduling).
+from repro.core.spec import EnvSpec, FunctionSpec, ModelRef, ResourceHint
+from repro.core.logical import LogicalPlan, PlanError, build_logical_plan
+from repro.core.physical import (FunctionTask, PhysicalPlan, Planner,
+                                 ScanTask, WorkerProfile)
+from repro.core.runtime import (Client, Event, LocalCluster, TaskError,
+                                Worker, WorkerFailure, execute_run)
+from repro.core.scheduler import RunResult, Scheduler
+
+__all__ = [
+    "EnvSpec", "FunctionSpec", "ModelRef", "ResourceHint",
+    "LogicalPlan", "PlanError", "build_logical_plan",
+    "FunctionTask", "PhysicalPlan", "Planner", "ScanTask", "WorkerProfile",
+    "Client", "Event", "LocalCluster", "TaskError", "Worker", "WorkerFailure",
+    "execute_run", "RunResult", "Scheduler",
+]

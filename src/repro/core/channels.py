@@ -1,0 +1,276 @@
+"""Intermediate-dataframe channels (paper §4.3, Table 3).
+
+"As a pipeline is executed, the platform transparently picks a sharing
+mechanism: shared memory or local disk (for co-located functions) or Arrow
+Flight (across workers)." Four channels, one contract:
+
+  * ``zerocopy``   — same-process shared memory: the child receives the SAME
+                     buffers as the parent output (no copy, no serialization).
+                     A 10 GB table with three children costs 10 GB, not 30.
+  * ``mmap``       — Arrow-IPC-style spill: parent writes one RCF file; each
+                     child memory-maps it (zero deserialization; OS page cache
+                     shared across children).
+  * ``flight``     — Arrow-Flight-style stream: raw column buffers over a
+                     localhost TCP socket with a tiny do_get protocol; one
+                     copy at the receiver, no (de)serialization.
+  * ``objectstore``— the FaaS-platform baseline: serialize a file, PUT it to
+                     object storage, child GETs + parses (what Step Functions
+                     / Durable Functions force on you).
+
+Column projection is pushed INTO every channel (seekable format / flight
+ticket), so differential reads touch only requested bytes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import socket
+import struct
+import threading
+import uuid
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.columnar import colfile
+from repro.columnar.objectstore import ObjectStore
+from repro.columnar.table import Column, ColumnTable
+
+
+@dataclasses.dataclass(frozen=True)
+class TableHandle:
+    key: str
+    channel: str
+    nbytes: int
+    num_rows: int
+    location: str = ""      # path (mmap/objectstore) or host:port (flight)
+
+
+# ---------------------------------------------------------------------------
+# Flight: length-prefixed do_get over TCP
+# ---------------------------------------------------------------------------
+
+_U64 = struct.Struct("<Q")
+
+
+def _send_frame(sock: socket.socket, payload: bytes) -> None:
+    sock.sendall(_U64.pack(len(payload)))
+    sock.sendall(payload)
+
+
+def _recv_exact(sock: socket.socket, n: int, into: Optional[memoryview] = None) -> bytes:
+    if into is None:
+        buf = bytearray(n)
+        into = memoryview(buf)
+    else:
+        buf = None
+    got = 0
+    while got < n:
+        r = sock.recv_into(into[got:], n - got)
+        if r == 0:
+            raise ConnectionError("flight peer closed")
+        got += r
+    return bytes(into) if buf is not None else b""
+
+
+def _recv_frame(sock: socket.socket) -> bytes:
+    (n,) = _U64.unpack(_recv_exact(sock, 8))
+    buf = bytearray(n)
+    _recv_exact(sock, n, memoryview(buf))
+    return bytes(buf)
+
+
+class FlightServer:
+    """Per-worker 'Arrow Flight' endpoint streaming raw column buffers."""
+
+    def __init__(self, host: str = "127.0.0.1"):
+        self._tables: Dict[str, ColumnTable] = {}
+        self._lock = threading.Lock()
+        self._srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._srv.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._srv.bind((host, 0))
+        self._srv.listen(64)
+        self.host, self.port = self._srv.getsockname()
+        self._stop = False
+        self._thread = threading.Thread(target=self._serve, daemon=True,
+                                        name=f"flight-{self.port}")
+        self._thread.start()
+
+    # -- registry -------------------------------------------------------------
+    def register(self, key: str, table: ColumnTable) -> None:
+        with self._lock:
+            self._tables[key] = table
+
+    def unregister(self, key: str) -> None:
+        with self._lock:
+            self._tables.pop(key, None)
+
+    # -- server loop ------------------------------------------------------------
+    def _serve(self) -> None:
+        while not self._stop:
+            try:
+                conn, _ = self._srv.accept()
+            except OSError:
+                return
+            threading.Thread(target=self._handle, args=(conn,),
+                             daemon=True).start()
+
+    def _handle(self, conn: socket.socket) -> None:
+        try:
+            req = json.loads(_recv_frame(conn).decode())
+            with self._lock:
+                table = self._tables.get(req["key"])
+            if table is None:
+                _send_frame(conn, json.dumps({"error": "unknown key"}).encode())
+                return
+            cols = req.get("columns") or table.column_names
+            table = table.project(cols)
+            header: Dict = {"num_rows": table.num_rows, "columns": []}
+            buffers: List[np.ndarray] = []
+            for name in cols:
+                c = table.column(name)
+                spec = {"name": name, "kind": c.kind, "buffers": []}
+                for role, arr in c.buffers().items():
+                    arr = np.ascontiguousarray(arr)
+                    spec["buffers"].append({"role": role,
+                                            "dtype": str(arr.dtype),
+                                            "size": int(arr.nbytes)})
+                    buffers.append(arr)
+                header["columns"].append(spec)
+            _send_frame(conn, json.dumps(header).encode())
+            for arr in buffers:     # raw buffers — no serialization
+                conn.sendall(memoryview(arr).cast("B"))
+        except (ConnectionError, json.JSONDecodeError, KeyError, OSError):
+            pass
+        finally:
+            conn.close()
+
+    def close(self) -> None:
+        self._stop = True
+        try:
+            self._srv.close()
+        except OSError:
+            pass
+
+
+def flight_get(host: str, port: int, key: str,
+               columns: Optional[Sequence[str]] = None) -> ColumnTable:
+    sock = socket.create_connection((host, port))
+    try:
+        _send_frame(sock, json.dumps({"key": key,
+                                      "columns": list(columns) if columns else None})
+                    .encode())
+        header = json.loads(_recv_frame(sock).decode())
+        if "error" in header:
+            raise KeyError(f"flight: {header['error']} ({key})")
+        out: Dict[str, Column] = {}
+        for spec in header["columns"]:
+            bufs = {}
+            for b in spec["buffers"]:
+                raw = bytearray(b["size"])
+                _recv_exact(sock, b["size"], memoryview(raw))
+                bufs[b["role"]] = np.frombuffer(raw, dtype=np.dtype(b["dtype"]))
+            out[spec["name"]] = Column(spec["kind"], bufs["data"],
+                                       bufs.get("offsets"),
+                                       bufs.get("validity"))
+        return ColumnTable(out)
+    finally:
+        sock.close()
+
+
+# ---------------------------------------------------------------------------
+# DataTransport: one façade over all four channels
+# ---------------------------------------------------------------------------
+
+
+class DataTransport:
+    def __init__(self, spill_dir: str, object_store: Optional[ObjectStore] = None,
+                 flight: Optional[FlightServer] = None):
+        self.spill_dir = os.path.abspath(spill_dir)
+        os.makedirs(self.spill_dir, exist_ok=True)
+        self.object_store = object_store
+        self.flight = flight or FlightServer()
+        self._shm: Dict[str, ColumnTable] = {}
+        self._lock = threading.Lock()
+        self.stats = {"zerocopy_puts": 0, "mmap_puts": 0, "flight_puts": 0,
+                      "objectstore_puts": 0, "gets": 0}
+
+    # -- put ---------------------------------------------------------------------
+    def put(self, key: str, table: ColumnTable, channel: str) -> TableHandle:
+        self.stats[f"{channel}_puts"] += 1
+        flight_loc = f"{self.flight.host}:{self.flight.port}"
+        if channel == "zerocopy":
+            with self._lock:
+                self._shm[key] = table
+            # zero-copy tables are also flight-visible for remote children
+            self.flight.register(key, table)
+            return TableHandle(key, "zerocopy", table.nbytes, table.num_rows,
+                               flight_loc)
+        if channel == "mmap":
+            path = os.path.join(self.spill_dir, f"{key}.rcf")
+            colfile.write_table(path, table)
+            self.flight.register(key, table)
+            return TableHandle(key, "mmap", table.nbytes, table.num_rows, path)
+        if channel == "flight":
+            self.flight.register(key, table)
+            return TableHandle(key, "flight", table.nbytes, table.num_rows,
+                               f"{self.flight.host}:{self.flight.port}")
+        if channel == "objectstore":
+            if self.object_store is None:
+                raise RuntimeError("objectstore channel requires an ObjectStore")
+            tmp = os.path.join(self.spill_dir, f"{key}-{uuid.uuid4().hex}.rcf")
+            colfile.write_table(tmp, table)
+            okey = f"intermediates/{key}.rcf"
+            self.object_store.put_file(okey, tmp)
+            os.remove(tmp)
+            return TableHandle(key, "objectstore", table.nbytes,
+                               table.num_rows, okey)
+        raise ValueError(f"unknown channel {channel!r}")
+
+    # -- get ---------------------------------------------------------------------
+    def get(self, handle: TableHandle, columns: Optional[Sequence[str]] = None,
+            via: Optional[str] = None) -> ColumnTable:
+        """Fetch a table. `via` overrides the edge's preferred channel (the
+        planner may colocate a zero-copy edge with a producer that spilled);
+        unavailable local paths degrade to flight."""
+        self.stats["gets"] += 1
+        channel = via or handle.channel
+        if channel == "mmap" and handle.channel != "mmap":
+            channel = handle.channel    # no spill file exists; use producer's
+        if channel == "zerocopy" and handle.channel == "objectstore":
+            channel = "objectstore"
+        handle = dataclasses.replace(handle, channel=channel)
+        if handle.channel == "zerocopy":
+            with self._lock:
+                table = self._shm.get(handle.key)
+            if table is None:  # remote zero-copy degrades to flight
+                loc = handle.location or f"{self.flight.host}:{self.flight.port}"
+                host, port = loc.rsplit(":", 1)
+                return flight_get(host, int(port), handle.key, columns)
+            return table.project(columns) if columns else table
+        if handle.channel == "mmap":
+            return colfile.read_table(handle.location, columns=columns,
+                                      mmap=True)
+        if handle.channel == "flight":
+            host, port = handle.location.rsplit(":", 1)
+            return flight_get(host, int(port), handle.key, columns)
+        if handle.channel == "objectstore":
+            tmp = os.path.join(self.spill_dir,
+                               f"dl-{uuid.uuid4().hex}.rcf")
+            self.object_store.get_to_file(handle.location, tmp)
+            try:
+                return colfile.read_table(tmp, columns=columns, mmap=False)
+            finally:
+                os.remove(tmp)
+        raise ValueError(f"unknown channel {handle.channel!r}")
+
+    def evict(self, handle: TableHandle) -> None:
+        with self._lock:
+            self._shm.pop(handle.key, None)
+        self.flight.unregister(handle.key)
+        if handle.channel == "mmap" and os.path.exists(handle.location):
+            os.remove(handle.location)
+
+    def close(self) -> None:
+        self.flight.close()

@@ -1,0 +1,282 @@
+"""Physical plan: logical DAG + system operations (paper §4.1, Fig. 3 middle).
+
+The planner resolves semantic dataframe references against the catalog
+(snapshots, file manifests), inserts system nodes (scans with column/predicate
+pushdown, materialize writes), assigns workers (bin-packing + on-demand
+scale-up), picks a data channel per edge (zero-copy / mmap / flight /
+object-store), and precomputes content-addressed cache keys so workers can
+skip recomputation. Output is pure metadata — executable by any worker.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import time
+import uuid
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.columnar.catalog import Catalog
+from repro.columnar.expr import parse_predicate
+from repro.core.logical import LogicalPlan, PlanError
+from repro.core.spec import ModelRef
+
+
+def _key_hash(*parts: str) -> str:
+    h = hashlib.sha256()
+    for p in parts:
+        h.update(p.encode())
+        h.update(b"\0")
+    return h.hexdigest()[:16]
+
+
+CHANNELS = ("zerocopy", "mmap", "flight", "objectstore")
+
+
+@dataclasses.dataclass
+class WorkerProfile:
+    worker_id: str
+    memory_gb: float = 4.0
+    cpus: int = 4
+    on_demand: bool = False
+
+
+@dataclasses.dataclass
+class InputEdge:
+    param: str
+    parent_task: str
+    ref: ModelRef
+    channel: str = "zerocopy"
+
+
+@dataclasses.dataclass
+class ScanTask:
+    task_id: str
+    table: str
+    branch: str
+    snapshot_id: str
+    columns: Optional[Tuple[str, ...]]     # union of consumer needs (None=all)
+    files: Tuple[str, ...]                 # after stats-based pruning
+    estimated_bytes: int
+    worker: str = ""
+    kind: str = "scan"
+
+
+@dataclasses.dataclass
+class FunctionTask:
+    task_id: str
+    name: str
+    env_id: str
+    code_hash: str
+    cache_key: str                          # content-addressed result identity
+    inputs: List[InputEdge]
+    materialize: bool
+    estimated_bytes: int
+    memory_gb: float
+    timeout_s: float
+    worker: str = ""
+    kind: str = "function"
+
+
+@dataclasses.dataclass
+class PhysicalPlan:
+    plan_id: str
+    run_id: str
+    branch: str
+    tasks: Dict[str, object]
+    order: List[str]
+    targets: List[str]
+    created_at: float = dataclasses.field(default_factory=time.time)
+
+    def task(self, task_id: str):
+        return self.tasks[task_id]
+
+    def children(self, task_id: str) -> List[str]:
+        out = []
+        for tid in self.order:
+            t = self.tasks[tid]
+            if isinstance(t, FunctionTask) and any(e.parent_task == task_id
+                                                   for e in t.inputs):
+                out.append(tid)
+        return out
+
+    def describe(self) -> str:
+        lines = [f"plan {self.plan_id} (run {self.run_id}, branch {self.branch})"]
+        for tid in self.order:
+            t = self.tasks[tid]
+            if isinstance(t, ScanTask):
+                cols = ",".join(t.columns) if t.columns else "*"
+                lines.append(f"  SCAN {t.table}@{t.snapshot_id[:8]} [{cols}] "
+                             f"files={len(t.files)} -> {t.worker}")
+            else:
+                edges = ", ".join(f"{e.ref.name}<{e.channel}>" for e in t.inputs)
+                mat = " MATERIALIZE" if t.materialize else ""
+                lines.append(f"  FUNC {t.name}({edges}){mat} env={t.env_id} "
+                             f"cache={t.cache_key[:8]} -> {t.worker}")
+        return "\n".join(lines)
+
+
+class Planner:
+    """Control-plane planner: metadata in, physical plan out."""
+
+    def __init__(self, catalog: Catalog,
+                 workers: Sequence[WorkerProfile],
+                 force_channel: Optional[str] = None,
+                 mmap_spill_fraction: float = 0.5):
+        self.catalog = catalog
+        self.workers = list(workers)
+        if force_channel is not None and force_channel not in CHANNELS:
+            raise PlanError(f"unknown channel {force_channel}")
+        self.force_channel = force_channel
+        self.mmap_spill_fraction = mmap_spill_fraction
+
+    # -- helpers --------------------------------------------------------------
+    def _column_union(self, consumers: List[Tuple[str, ModelRef]],
+                      schema: Dict[str, str]) -> Optional[Tuple[str, ...]]:
+        cols: List[str] = []
+        for _, ref in consumers:
+            if ref.columns is None:
+                return None  # someone wants everything
+            for c in ref.columns:
+                if c not in cols:
+                    cols.append(c)
+            pred = ref.predicate()
+            if pred is not None:
+                for c in pred.referenced_columns():
+                    if c not in cols:
+                        cols.append(c)
+        unknown = [c for c in cols if c not in schema]
+        if unknown:
+            raise PlanError(f"columns {unknown} not in table schema {list(schema)}")
+        return tuple(cols)
+
+    # -- planning ---------------------------------------------------------------
+    def plan(self, logical: LogicalPlan, branch: str = "main",
+             run_id: Optional[str] = None) -> PhysicalPlan:
+        run_id = run_id or uuid.uuid4().hex[:12]
+        tasks: Dict[str, object] = {}
+        order: List[str] = []
+        cache_keys: Dict[str, str] = {}     # logical name -> identity
+        est_bytes: Dict[str, int] = {}
+
+        for name in logical.order:
+            node = logical.nodes[name]
+            if node.kind == "source":
+                snap = self.catalog.get_table(name, branch=branch)
+                cols = self._column_union(node.consumers, snap.schema)
+                # file pruning: a file survives if ANY consumer's predicate
+                # might match it (per-edge filters re-applied at delivery)
+                preds = [ref.predicate() for _, ref in node.consumers]
+                if preds and all(p is not None for p in preds):
+                    files = []
+                    for f in snap.files:
+                        if any(p.maybe_matches(f.column_stats) for p in preds):
+                            files.append(f)
+                else:
+                    files = list(snap.files)
+                frac = (len(cols) / max(len(snap.schema), 1)) if cols else 1.0
+                est = int(sum(f.size_bytes for f in files) * frac)
+                tid = f"scan:{name}"
+                tasks[tid] = ScanTask(task_id=tid, table=name, branch=branch,
+                                      snapshot_id=snap.snapshot_id,
+                                      columns=cols,
+                                      files=tuple(f.key for f in files),
+                                      estimated_bytes=est)
+                cache_keys[name] = _key_hash("scan", snap.snapshot_id,
+                                             ",".join(cols or ("*",)))
+                est_bytes[name] = est
+                order.append(tid)
+            else:
+                spec = node.spec
+                edge_ids = []
+                est = 0
+                for _, ref in spec.inputs:
+                    parent_key = cache_keys[ref.name]
+                    edge_ids.append(_key_hash(parent_key,
+                                              ",".join(ref.columns or ("*",)),
+                                              ref.filter or ""))
+                    est += est_bytes.get(ref.name, 0)
+                cache_key = _key_hash("func", spec.code_hash, spec.env.env_id,
+                                      *edge_ids)
+                cache_keys[name] = cache_key
+                est = max(int(est * 1.2), 1)
+                est_bytes[name] = est
+                tid = f"func:{name}"
+                inputs = []
+                for param, ref in spec.inputs:
+                    ptid = (f"func:{ref.name}" if f"func:{ref.name}" in tasks
+                            else f"scan:{ref.name}")
+                    inputs.append(InputEdge(param=param, parent_task=ptid,
+                                            ref=ref))
+                tasks[tid] = FunctionTask(
+                    task_id=tid, name=name, env_id=spec.env.env_id,
+                    code_hash=spec.code_hash, cache_key=cache_key,
+                    inputs=inputs, materialize=spec.materialize,
+                    estimated_bytes=est, memory_gb=spec.resources.memory_gb,
+                    timeout_s=spec.resources.timeout_s)
+                order.append(tid)
+
+        plan = PhysicalPlan(plan_id=_key_hash(run_id, *order), run_id=run_id,
+                            branch=branch, tasks=tasks, order=order,
+                            targets=list(logical.targets))
+        self._assign_workers(plan)
+        self._pick_channels(plan)
+        return plan
+
+    # -- worker assignment: first-fit-decreasing bin packing + scale-up --------
+    def _assign_workers(self, plan: PhysicalPlan) -> None:
+        budgets = {w.worker_id: w.memory_gb * 1e9 for w in self.workers}
+        profiles = {w.worker_id: w for w in self.workers}
+        # Seed: group children with their largest parent (locality first —
+        # the paper's zero-copy win requires co-location).
+        assignment: Dict[str, str] = {}
+        for tid in plan.order:
+            t = plan.tasks[tid]
+            need = getattr(t, "estimated_bytes", 0)
+            if isinstance(t, FunctionTask):
+                need = max(need, int(t.memory_gb * 1e9))
+                parent_workers = [assignment.get(e.parent_task)
+                                  for e in t.inputs]
+                parent_workers = [w for w in parent_workers if w]
+            else:
+                parent_workers = []
+            placed = None
+            for w in parent_workers:        # prefer co-location
+                if budgets[w] >= need:
+                    placed = w
+                    break
+            if placed is None:              # first fit by remaining budget
+                for w, b in sorted(budgets.items(), key=lambda kv: -kv[1]):
+                    if b >= need:
+                        placed = w
+                        break
+            if placed is None:              # on-demand scale-up (paper Fig 2)
+                wid = f"ondemand-{len(budgets)}"
+                prof = WorkerProfile(wid, memory_gb=max(need / 1e9 * 1.5, 1.0),
+                                     on_demand=True)
+                self.workers.append(prof)
+                profiles[wid] = prof
+                budgets[wid] = prof.memory_gb * 1e9
+                placed = wid
+            budgets[placed] -= need
+            assignment[tid] = placed
+            t.worker = placed
+
+    # -- channel selection ------------------------------------------------------
+    def _pick_channels(self, plan: PhysicalPlan) -> None:
+        for tid in plan.order:
+            t = plan.tasks[tid]
+            if not isinstance(t, FunctionTask):
+                continue
+            for edge in t.inputs:
+                if self.force_channel:
+                    edge.channel = self.force_channel
+                    continue
+                parent = plan.tasks[edge.parent_task]
+                same_worker = parent.worker == t.worker
+                big = (getattr(parent, "estimated_bytes", 0)
+                       > self.mmap_spill_fraction * 4e9)
+                if same_worker:
+                    edge.channel = "mmap" if big else "zerocopy"
+                else:
+                    edge.channel = "flight"

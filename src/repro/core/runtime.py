@@ -1,0 +1,371 @@
+"""Worker runtime + cluster (paper §3.2, Fig. 2/3 bottom).
+
+Workers are the only components that touch customer data (Data Plane); the
+planner/scheduler only handle metadata (Control Plane). Each worker owns:
+
+  * a DataTransport (its shared-memory table store + Flight endpoint + spill
+    dir) — the zero-copy fabric;
+  * a ColumnarScanCache + IntermediateCache — single-tenant hosts can share
+    disk/memory across subsequent ephemeral invocations (paper §4.2);
+  * a PackageLinkBuilder — O(100 ms) ephemeral environment assembly.
+
+Every user `print` and system event streams back to the Client in real time
+("runs in the cloud, but feels local").
+"""
+from __future__ import annotations
+
+import dataclasses
+import sys
+import threading
+import time
+import traceback
+import uuid
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from typing import TYPE_CHECKING
+
+from repro.columnar import compute
+from repro.columnar.catalog import Catalog
+from repro.columnar.objectstore import ObjectStore
+from repro.columnar.table import ColumnTable
+from repro.core.cache import ColumnarScanCache, IntermediateCache
+from repro.core.channels import DataTransport, TableHandle
+from repro.core.envs import PackageLinkBuilder, PackageStore
+from repro.core.logical import build_logical_plan
+from repro.core.physical import (FunctionTask, PhysicalPlan, Planner, ScanTask,
+                                 WorkerProfile)
+
+if TYPE_CHECKING:
+    from repro.api import Project
+
+
+class TaskError(RuntimeError):
+    pass
+
+
+class WorkerFailure(RuntimeError):
+    """Raised by tasks running on a worker that was killed (chaos testing /
+    real node loss)."""
+
+
+class HandleUnavailable(RuntimeError):
+    """An input's buffers were lost (producer worker died) — recoverable by
+    re-executing the producer."""
+
+
+# ---------------------------------------------------------------------------
+# event streaming
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Event:
+    kind: str                 # plan|task_start|log|env_built|cache_hit|task_done|task_failed|speculative
+    task_id: str
+    worker: str
+    payload: Dict
+    ts: float = dataclasses.field(default_factory=time.time)
+
+
+class Client:
+    """The user's terminal: collects the real-time event stream."""
+
+    def __init__(self, verbose: bool = False):
+        self.verbose = verbose
+        self.events: List[Event] = []
+        self._lock = threading.Lock()
+
+    def emit(self, event: Event) -> None:
+        with self._lock:
+            self.events.append(event)
+        if self.verbose:
+            p = event.payload
+            line = p.get("line") or ", ".join(f"{k}={v}" for k, v in p.items())
+            print(f"[{event.worker or 'cp'}] {event.kind} {event.task_id} {line}",
+                  file=sys.stderr)
+
+    def logs(self, task_id: Optional[str] = None) -> List[str]:
+        with self._lock:
+            return [e.payload["line"] for e in self.events
+                    if e.kind == "log" and (task_id is None or e.task_id == task_id)]
+
+    def of_kind(self, kind: str) -> List[Event]:
+        with self._lock:
+            return [e for e in self.events if e.kind == kind]
+
+
+class _StdoutRouter:
+    """Per-thread stdout capture so user `print`s stream as events while
+    workers run concurrently in one process."""
+
+    _installed = None
+
+    def __init__(self, real):
+        self.real = real
+        self.routes: Dict[int, Callable[[str], None]] = {}
+        self._buf: Dict[int, str] = {}
+
+    def write(self, s: str) -> int:
+        cb = self.routes.get(threading.get_ident())
+        if cb is None:
+            return self.real.write(s)
+        tid = threading.get_ident()
+        buf = self._buf.get(tid, "") + s
+        while "\n" in buf:
+            line, buf = buf.split("\n", 1)
+            cb(line)
+        self._buf[tid] = buf
+        return len(s)
+
+    def flush(self) -> None:
+        self.real.flush()
+
+    @classmethod
+    def install(cls) -> "_StdoutRouter":
+        if not isinstance(sys.stdout, cls):
+            sys.stdout = cls(sys.stdout)
+        return sys.stdout
+
+    def route(self, cb: Callable[[str], None]):
+        router = self
+
+        class _Ctx:
+            def __enter__(self):
+                router.routes[threading.get_ident()] = cb
+
+            def __exit__(self, *exc):
+                tid = threading.get_ident()
+                tail = router._buf.pop(tid, "")
+                if tail:
+                    cb(tail)
+                router.routes.pop(tid, None)
+
+        return _Ctx()
+
+
+# ---------------------------------------------------------------------------
+# Worker
+# ---------------------------------------------------------------------------
+
+
+class Worker:
+    def __init__(self, profile: WorkerProfile, catalog: Catalog,
+                 object_store: ObjectStore, scratch_root: str,
+                 package_store: PackageStore):
+        self.profile = profile
+        self.worker_id = profile.worker_id
+        self.catalog = catalog
+        self.transport = DataTransport(
+            spill_dir=f"{scratch_root}/{self.worker_id}/spill",
+            object_store=object_store)
+        self.scan_cache = ColumnarScanCache(
+            catalog, scratch_dir=f"{scratch_root}/{self.worker_id}/scan")
+        self.result_cache = IntermediateCache()
+        self.env_builder = PackageLinkBuilder(
+            package_store, envs_root=f"{scratch_root}/{self.worker_id}/envs")
+        self.alive = True
+        self._router = _StdoutRouter.install()
+
+    # -- chaos hook -----------------------------------------------------------
+    def kill(self) -> None:
+        """Simulate node loss: in-memory buffers are gone, new tasks refused."""
+        self.alive = False
+        self.transport._shm.clear()
+        self.transport.flight.close()
+
+    def _check_alive(self) -> None:
+        if not self.alive:
+            raise WorkerFailure(f"worker {self.worker_id} is down")
+
+    # -- task execution -----------------------------------------------------------
+    def execute(self, plan: PhysicalPlan, task, handles: Dict[str, TableHandle],
+                client: Client, put_channel: str,
+                project: Optional["Project"] = None) -> TableHandle:
+        self._check_alive()
+        t0 = time.perf_counter()
+        if isinstance(task, ScanTask):
+            table = self._run_scan(task, client)
+        else:
+            table = self._run_function(plan, task, handles, client, project)
+        self._check_alive()
+        handle = self.transport.put(task.task_id, table, put_channel)
+        client.emit(Event("task_done", task.task_id, self.worker_id,
+                          {"rows": table.num_rows, "bytes": table.nbytes,
+                           "seconds": round(time.perf_counter() - t0, 6),
+                           "channel": put_channel}))
+        return handle
+
+    def _run_scan(self, task: ScanTask, client: Client) -> ColumnTable:
+        snap = self.catalog.get_snapshot(task.snapshot_id)
+        cols = list(task.columns) if task.columns else None
+        before = dict(self.scan_cache.stats)
+        table = self.scan_cache.read_snapshot(snap, cols, file_keys=task.files)
+        after = self.scan_cache.stats
+        client.emit(Event("cache_probe", task.task_id, self.worker_id,
+                          {"kind": "scan",
+                           "hits": after["hits"] - before["hits"],
+                           "misses": after["misses"] - before["misses"]}))
+        return table
+
+    def _run_function(self, plan: PhysicalPlan, task: FunctionTask,
+                      handles: Dict[str, TableHandle], client: Client,
+                      project: Optional["Project"]) -> ColumnTable:
+        cached = self.result_cache.get(task.cache_key)
+        if cached is not None:
+            client.emit(Event("cache_hit", task.task_id, self.worker_id,
+                              {"cache_key": task.cache_key}))
+            return cached
+        from repro.api import default_project
+        project = project or default_project()
+        spec = project.functions[task.name]
+        # 1. ephemeral environment (paper §4.2)
+        report = self.env_builder.build(spec.env, fresh=True)
+        client.emit(Event("env_built", task.task_id, self.worker_id,
+                          {"env_id": report.env_id,
+                           "seconds": round(report.duration_s, 6),
+                           "cache_hit": report.cache_hit}))
+        # 2. inputs via the planned channels (paper §4.3)
+        kwargs = {}
+        for edge in task.inputs:
+            handle = handles.get(edge.parent_task)
+            if handle is None:
+                raise HandleUnavailable(edge.parent_task)
+            pred = edge.ref.predicate()
+            need = None
+            if edge.ref.columns is not None:
+                need = list(edge.ref.columns)
+                for c in (pred.referenced_columns() if pred else []):
+                    if c not in need:
+                        need.append(c)
+            try:
+                table = self.transport.get(handle, columns=need,
+                                           via=edge.channel)
+            except (OSError, ConnectionError, KeyError) as e:
+                raise HandleUnavailable(edge.parent_task) from e
+            if pred is not None:
+                table = compute.filter_table(table, pred)
+            if edge.ref.columns is not None:
+                table = table.project(list(edge.ref.columns))
+            kwargs[edge.param] = table
+        # 3. run business logic with real-time log streaming
+        emit_log = lambda line: client.emit(Event("log", task.task_id,
+                                                  self.worker_id,
+                                                  {"line": line}))
+        # (re)install at execution time: test harnesses swap sys.stdout
+        # between phases; production never re-wraps
+        router = _StdoutRouter.install()
+        try:
+            with router.route(emit_log):
+                out = spec.fn(**kwargs)
+        except Exception as e:  # noqa: BLE001 — user code
+            raise TaskError(f"{task.name}: {type(e).__name__}: {e}\n"
+                            f"{traceback.format_exc()}") from e
+        finally:
+            self.env_builder.destroy(report)  # truly ephemeral
+        table = _coerce_output(task.name, out)
+        table = self.result_cache.put(task.cache_key, table)
+        # 4. materialization writes back to the lakehouse (paper Listing 1)
+        if task.materialize:
+            snap = self.catalog.write_table(task.name, table,
+                                            branch=plan.branch,
+                                            message=f"run {plan.run_id}")
+            client.emit(Event("materialized", task.task_id, self.worker_id,
+                              {"snapshot": snap.snapshot_id}))
+        return table
+
+
+def _coerce_output(name: str, out) -> ColumnTable:
+    if isinstance(out, ColumnTable):
+        return out
+    if isinstance(out, dict):
+        return ColumnTable.from_pydict(out)
+    raise TaskError(f"model {name!r} must return a dataframe "
+                    f"(ColumnTable or dict of columns), got {type(out)}")
+
+
+# ---------------------------------------------------------------------------
+# Cluster
+# ---------------------------------------------------------------------------
+
+
+class LocalCluster:
+    """A single-tenant Data Plane: a fleet of (in-process) workers."""
+
+    def __init__(self, catalog: Catalog, object_store: ObjectStore,
+                 scratch_root: str, n_workers: int = 2,
+                 memory_gb: float = 4.0,
+                 package_store: Optional[PackageStore] = None):
+        self.catalog = catalog
+        self.object_store = object_store
+        self.scratch_root = scratch_root
+        self.package_store = package_store or PackageStore(
+            f"{scratch_root}/pkgstore")
+        self.workers: Dict[str, Worker] = {}
+        for i in range(n_workers):
+            self._add(WorkerProfile(f"worker-{i}", memory_gb=memory_gb))
+
+    def _add(self, profile: WorkerProfile) -> Worker:
+        w = Worker(profile, self.catalog, self.object_store,
+                   self.scratch_root, self.package_store)
+        self.workers[profile.worker_id] = w
+        return w
+
+    def profiles(self) -> List[WorkerProfile]:
+        return [w.profile for w in self.workers.values() if w.alive]
+
+    def provision(self, profile: WorkerProfile) -> Worker:
+        """On-demand VM (paper Fig. 2 step 3)."""
+        return self._add(profile)
+
+    def get(self, worker_id: str) -> Worker:
+        if worker_id not in self.workers:
+            # the planner may have appended an on-demand profile
+            self.provision(WorkerProfile(worker_id, memory_gb=8.0,
+                                         on_demand=True))
+        return self.workers[worker_id]
+
+    def healthy_workers(self) -> List[Worker]:
+        return [w for w in self.workers.values() if w.alive]
+
+    def kill_worker(self, worker_id: str) -> None:
+        self.workers[worker_id].kill()
+
+    def close(self) -> None:
+        for w in self.workers.values():
+            w.transport.close()
+
+
+# ---------------------------------------------------------------------------
+# run entry point (used by repro.api.run and the CLI)
+# ---------------------------------------------------------------------------
+
+
+def execute_run(project: "Project", catalog: Catalog = None, cluster=None,
+                branch: str = "main", targets: Optional[Sequence[str]] = None,
+                client: Optional[Client] = None, run_id: Optional[str] = None,
+                force_channel: Optional[str] = None,
+                journal_path: Optional[str] = None):
+    import tempfile
+
+    from repro.core.scheduler import Scheduler
+
+    owns_cluster = cluster is None
+    if cluster is None:
+        if catalog is None:
+            raise ValueError("execute_run needs a catalog or a cluster")
+        scratch = tempfile.mkdtemp(prefix="repro_dp_")
+        cluster = LocalCluster(catalog, catalog.store, scratch)
+    catalog = catalog or cluster.catalog
+    client = client or Client()
+    logical = build_logical_plan(project, targets)
+    planner = Planner(catalog, cluster.profiles(), force_channel=force_channel)
+    plan = planner.plan(logical, branch=branch, run_id=run_id)
+    client.emit(Event("plan", plan.plan_id, "", {"tasks": len(plan.order)}))
+    scheduler = Scheduler(cluster, client, journal_path=journal_path)
+    try:
+        return scheduler.run(plan, project)
+    finally:
+        if owns_cluster:
+            cluster.close()

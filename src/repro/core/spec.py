@@ -1,0 +1,145 @@
+"""Declarative specs behind the programming model (paper §3.3).
+
+Everything a user *declares* — model inputs, runtime environments, resource
+hints — is captured as data. The planner consumes these specs; user code never
+touches infrastructure directly (the paper's "principled division of labor").
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import inspect
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
+
+from repro.columnar.expr import Expr, parse_predicate
+
+
+def _stable_hash(*parts: str) -> str:
+    h = hashlib.sha256()
+    for p in parts:
+        h.update(p.encode("utf-8"))
+        h.update(b"\0")
+    return h.hexdigest()[:16]
+
+
+# ---------------------------------------------------------------------------
+# environments (paper §4.2: declarative, per-function runtimes)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class EnvSpec:
+    python_version: str = "3.11"
+    pip: Tuple[Tuple[str, str], ...] = ()
+
+    @classmethod
+    def create(cls, python_version: str = "3.11",
+               pip: Optional[Dict[str, str]] = None) -> "EnvSpec":
+        return cls(python_version, tuple(sorted((pip or {}).items())))
+
+    @property
+    def env_id(self) -> str:
+        return _stable_hash(self.python_version,
+                            ";".join(f"{n}=={v}" for n, v in self.pip))
+
+    def packages(self) -> List[Tuple[str, str]]:
+        return list(self.pip)
+
+
+# ---------------------------------------------------------------------------
+# data references (paper §3.3: inputs are *semantic* dataframes, not files)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelRef:
+    """A reference to a parent dataframe by NAME, with optional pushdown hints."""
+
+    name: str
+    columns: Optional[Tuple[str, ...]] = None
+    filter: Optional[str] = None
+
+    @classmethod
+    def create(cls, name: str, columns: Optional[Sequence[str]] = None,
+               filter: Optional[Union[str, Expr]] = None) -> "ModelRef":
+        if isinstance(filter, Expr):
+            filter = repr(filter)
+        return cls(name, tuple(columns) if columns is not None else None, filter)
+
+    def predicate(self) -> Optional[Expr]:
+        return parse_predicate(self.filter)
+
+    @property
+    def ref_id(self) -> str:
+        return _stable_hash(self.name, ",".join(self.columns or ()),
+                            self.filter or "")
+
+
+# ---------------------------------------------------------------------------
+# resources (paper §2: scale-UP between runs, not horizontal replicas)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ResourceHint:
+    """Per-invocation sizing. Ephemeral functions can be re-run with a
+    different hint without code changes (the January -> full-year story)."""
+
+    memory_gb: float = 1.0
+    cpus: int = 1
+    device_mesh: Optional[Tuple[int, ...]] = None  # for model-step nodes
+    timeout_s: float = 600.0
+
+
+# ---------------------------------------------------------------------------
+# functions
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class FunctionSpec:
+    """One user transformation: f(dataframe(s)) -> dataframe."""
+
+    name: str                       # == output table name (paper: "the table
+                                    # name is the name of the function")
+    fn: Callable
+    inputs: Tuple[Tuple[str, ModelRef], ...]  # (param name, ref)
+    env: EnvSpec
+    materialize: bool = False
+    resources: ResourceHint = dataclasses.field(default_factory=ResourceHint)
+
+    @property
+    def code_hash(self) -> str:
+        """Hash of the function's code object — drives cache invalidation
+        when the user edits business logic (paper §4.2: 'tracks both code
+        and data changes')."""
+        code = self.fn.__code__
+        try:
+            src = inspect.getsource(self.fn)
+            # hash the function BODY only: decorator lines mention project /
+            # registry names that don't affect behaviour
+            if "def " in src:
+                src = "def " + src.split("def ", 1)[1]
+        except (OSError, TypeError):
+            src = ""
+        consts = repr([c for c in code.co_consts if not inspect.iscode(c)])
+        return _stable_hash(src or code.co_code.hex(), consts,
+                            repr(code.co_names))
+
+    @property
+    def parents(self) -> List[str]:
+        return [ref.name for _, ref in self.inputs]
+
+    def signature_id(self) -> str:
+        return _stable_hash(self.name, self.code_hash, self.env.env_id,
+                            *[r.ref_id for _, r in self.inputs])
+
+
+def extract_inputs(fn: Callable) -> Tuple[Tuple[str, ModelRef], ...]:
+    """DAG topology is implicit in the signature: params whose default is a
+    ModelRef are parent dataframes (paper Listing 1)."""
+    out = []
+    for pname, param in inspect.signature(fn).parameters.items():
+        if isinstance(param.default, ModelRef):
+            out.append((pname, param.default))
+    return tuple(out)

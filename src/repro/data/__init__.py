@@ -1,0 +1,6 @@
+from repro.data.tokenizer import ByteTokenizer
+from repro.data.synthetic import (make_corpus_table, make_transactions_table)
+from repro.data.pipeline import TokenBatchStream, build_data_project
+
+__all__ = ["ByteTokenizer", "make_corpus_table", "make_transactions_table",
+           "TokenBatchStream", "build_data_project"]

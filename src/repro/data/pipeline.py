@@ -1,0 +1,117 @@
+"""Token pipeline AS a bauplan DAG — the paper's runtime feeding training.
+
+The data path is expressed in the paper's programming model (corpus table ->
+tokenize -> pack), executed by the bauplan workers with zero-copy channels
+and columnar caching; the packed token table then streams into the trainer as
+device batches. Re-running with a changed tokenizer/seq_len re-executes only
+the invalidated suffix of the DAG (code+data content addressing).
+
+`TokenBatchStream` is deterministic and *seekable*: `state()` / `seek()`
+round-trip through the training checkpoint, so a restarted job resumes
+mid-epoch without replaying data.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional, Tuple
+
+import numpy as np
+
+from repro.api import Model, Project
+from repro.columnar.table import ColumnTable
+from repro.data.tokenizer import PAD, ByteTokenizer
+
+
+def build_data_project(tokenizer: ByteTokenizer, seq_len: int,
+                       source_table: str = "corpus",
+                       project: Optional[Project] = None) -> Project:
+    """DAG: corpus --tokenize--> token_rows --pack--> packed_tokens."""
+    proj = project or Project("data-pipeline")
+
+    @proj.model(name="token_rows")
+    def token_rows(data=Model(source_table, columns=["doc_id", "text"],
+                              filter=None)):
+        texts = data.column("text").to_numpy()
+        ids_col, len_col = [], []
+        flat = []
+        for t in texts:
+            ids = tokenizer.encode(str(t))
+            flat.extend(ids)
+            len_col.append(len(ids))
+        print(f"tokenized {len(texts)} docs -> {len(flat)} tokens")
+        return {
+            "token": np.asarray(flat, dtype=np.int32),
+            "doc_len_marker": np.repeat(
+                np.asarray(len_col, np.int32),
+                np.asarray(len_col, np.int32)).astype(np.int32),
+        }
+
+    @proj.model(name="packed_tokens", materialize=True)
+    def packed_tokens(data=Model("token_rows", columns=["token"])):
+        toks = data.column("token").to_numpy()
+        n = (len(toks) - 1) // seq_len
+        n = max(n, 1)
+        need = n * seq_len + 1
+        reps = -(-need // max(len(toks), 1))
+        toks = np.tile(toks, reps)[:need]
+        x = toks[:-1].reshape(n, seq_len)
+        y = toks[1:].reshape(n, seq_len)
+        print(f"packed {n} rows of {seq_len}")
+        return {
+            "tokens": x.reshape(-1).astype(np.int32),   # row-major flattened
+            "labels": y.reshape(-1).astype(np.int32),
+        }
+
+    return proj
+
+
+@dataclasses.dataclass
+class StreamState:
+    epoch: int
+    cursor: int
+
+
+class TokenBatchStream:
+    """Deterministic, seekable batch iterator over a packed token table."""
+
+    def __init__(self, packed: ColumnTable, seq_len: int, batch_size: int,
+                 seed: int = 0):
+        self.seq_len = seq_len
+        self.batch = batch_size
+        self.seed = seed
+        self.tokens = packed.column("tokens").to_numpy().reshape(-1, seq_len)
+        self.labels = packed.column("labels").to_numpy().reshape(-1, seq_len)
+        self.n_rows = self.tokens.shape[0]
+        self._state = StreamState(0, 0)
+        self._order = self._perm(0)
+
+    def _perm(self, epoch: int) -> np.ndarray:
+        rng = np.random.default_rng(self.seed + epoch)
+        return rng.permutation(self.n_rows)
+
+    # -- checkpointable state -------------------------------------------------
+    def state(self) -> Dict:
+        return dataclasses.asdict(self._state)
+
+    def seek(self, state: Dict) -> None:
+        self._state = StreamState(**state)
+        self._order = self._perm(self._state.epoch)
+
+    # -- iteration ---------------------------------------------------------------
+    def __next__(self) -> Dict[str, np.ndarray]:
+        idx = []
+        while len(idx) < self.batch:
+            take = min(self.batch - len(idx),
+                       self.n_rows - self._state.cursor)
+            idx.extend(self._order[self._state.cursor:
+                                   self._state.cursor + take])
+            self._state.cursor += take
+            if self._state.cursor >= self.n_rows:
+                self._state = StreamState(self._state.epoch + 1, 0)
+                self._order = self._perm(self._state.epoch)
+        idx = np.asarray(idx)
+        return {"tokens": self.tokens[idx].astype(np.int32),
+                "labels": self.labels[idx].astype(np.int32)}
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        return self

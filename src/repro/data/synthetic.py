@@ -1,0 +1,58 @@
+"""Synthetic datasets: a learnable text corpus (for the training examples)
+and the paper's `transactions` table (for pipeline demos/benchmarks)."""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import numpy as np
+
+from repro.columnar.table import ColumnTable
+
+_WORDS = ("the quick brown fox jumps over a lazy dog while data pipelines "
+          "stream arrow tables through zero copy functions on ephemeral "
+          "workers in the cloud feeling local to every scientist").split()
+
+COUNTRIES = ["IT", "FR", "DE", "ES", "NL", "US", "GB", "JP", "BR", "IN"]
+
+
+def make_corpus(n_docs: int = 512, min_words: int = 8, max_words: int = 64,
+                seed: int = 0) -> List[str]:
+    """Markov-ish word soup with local structure (so a small LM can learn)."""
+    rng = np.random.default_rng(seed)
+    docs = []
+    for _ in range(n_docs):
+        n = int(rng.integers(min_words, max_words))
+        start = int(rng.integers(0, len(_WORDS)))
+        words = []
+        pos = start
+        for _ in range(n):
+            words.append(_WORDS[pos % len(_WORDS)])
+            pos += 1 if rng.random() < 0.8 else int(rng.integers(1, 5))
+        docs.append(" ".join(words))
+    return docs
+
+
+def make_corpus_table(n_docs: int = 512, seed: int = 0) -> ColumnTable:
+    docs = make_corpus(n_docs, seed=seed)
+    return ColumnTable.from_pydict({
+        "doc_id": np.arange(n_docs, dtype=np.int64),
+        "text": docs,
+        "split": ["train" if i % 10 else "eval" for i in range(n_docs)],
+    })
+
+
+def make_transactions_table(n_rows: int = 1_000_000, seed: int = 0,
+                            year: int = 2023) -> ColumnTable:
+    """The paper's Fig.1 source table: transactions(id, usd, country,
+    eventTime[, client_id])."""
+    rng = np.random.default_rng(seed)
+    months = rng.integers(1, 13, n_rows)
+    days = rng.integers(1, 29, n_rows)
+    return ColumnTable.from_pydict({
+        "id": np.arange(n_rows, dtype=np.int64),
+        "usd": np.round(rng.gamma(2.0, 50.0, n_rows), 2),
+        "country": [COUNTRIES[i] for i in rng.integers(0, len(COUNTRIES),
+                                                       n_rows)],
+        "eventTime": (year * 10000 + months * 100 + days).astype(np.int64),
+        "client_id": rng.integers(0, 10_000, n_rows).astype(np.int64),
+    })

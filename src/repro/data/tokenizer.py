@@ -1,0 +1,91 @@
+"""Byte-level tokenizer with a small learned-merge layer (BPE-lite).
+
+Self-contained (offline container): 256 byte tokens + optional merges built
+from a sample corpus + special tokens. Deterministic, picklable, and fast
+enough for the CPU training examples.
+"""
+from __future__ import annotations
+
+from collections import Counter
+from typing import Dict, Iterable, List, Optional, Tuple
+
+import numpy as np
+
+PAD, BOS, EOS = 0, 1, 2
+_SPECIALS = 3
+
+
+class ByteTokenizer:
+    def __init__(self, merges: Optional[List[Tuple[int, int]]] = None):
+        self.merges = list(merges or [])
+        self._ranks: Dict[Tuple[int, int], int] = {
+            pair: i for i, pair in enumerate(self.merges)}
+
+    # -- vocab -----------------------------------------------------------
+    @property
+    def vocab_size(self) -> int:
+        return _SPECIALS + 256 + len(self.merges)
+
+    @classmethod
+    def train(cls, texts: Iterable[str], num_merges: int = 256
+              ) -> "ByteTokenizer":
+        seqs = [list(t.encode("utf-8")) for t in texts]
+        merges: List[Tuple[int, int]] = []
+        tok = cls()
+        for _ in range(num_merges):
+            counts: Counter = Counter()
+            for s in seqs:
+                counts.update(zip(s, s[1:]))
+            if not counts:
+                break
+            pair, n = counts.most_common(1)[0]
+            if n < 2:
+                break
+            new_id = 256 + len(merges)
+            merges.append(pair)
+            seqs = [_merge(s, pair, new_id) for s in seqs]
+        return cls(merges)
+
+    # -- encode/decode ------------------------------------------------------
+    def encode(self, text: str, bos: bool = True, eos: bool = True
+               ) -> List[int]:
+        ids = list(text.encode("utf-8"))
+        for i, pair in enumerate(self.merges):
+            ids = _merge(ids, pair, 256 + i)
+        out = [t + _SPECIALS for t in ids]
+        if bos:
+            out.insert(0, BOS)
+        if eos:
+            out.append(EOS)
+        return out
+
+    def decode(self, ids: Iterable[int]) -> str:
+        expand: Dict[int, List[int]] = {}
+
+        def blow(t: int) -> List[int]:
+            if t < 256:
+                return [t]
+            if t not in expand:
+                a, b = self.merges[t - 256]
+                expand[t] = blow(a) + blow(b)
+            return expand[t]
+
+        data: List[int] = []
+        for t in ids:
+            t = int(t) - _SPECIALS
+            if t < 0 or t >= 256 + len(self.merges):
+                continue              # specials / out-of-vocab (padded) ids
+            data.extend(blow(t))
+        return bytes(data).decode("utf-8", errors="replace")
+
+
+def _merge(seq: List[int], pair: Tuple[int, int], new_id: int) -> List[int]:
+    out, i = [], 0
+    while i < len(seq):
+        if i + 1 < len(seq) and (seq[i], seq[i + 1]) == pair:
+            out.append(new_id)
+            i += 2
+        else:
+            out.append(seq[i])
+            i += 1
+    return out

@@ -1,0 +1,7 @@
+"""Distribution layer: logical-axis sharding rules, collective utilities,
+and elastic re-meshing. Meshes come from repro.launch.mesh."""
+from repro.distributed.sharding import (ShardingPlan, make_constrain,
+                                        make_sharding_plan, resolve_axes)
+
+__all__ = ["ShardingPlan", "make_constrain", "make_sharding_plan",
+           "resolve_axes"]

@@ -1,0 +1,50 @@
+"""Elastic scaling: rebuild the mesh after node loss and reshard state.
+
+The checkpoint format is mesh-agnostic (host numpy per leaf), so elasticity
+reduces to: (1) pick a new mesh shape from the surviving device count,
+(2) rebuild the ShardingPlan, (3) restore/device_put with the new shardings.
+The trainer calls `shrink_mesh` when the runtime reports lost hosts (here:
+simulated) and resumes from the last committed step.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def largest_mesh_shape(n_devices: int, model_parallelism: int,
+                       pods: int = 1) -> Tuple[int, ...]:
+    """Largest (pod, data, model) grid that fits the surviving devices while
+    preserving model parallelism (weights must still fit)."""
+    per_pod = n_devices // pods
+    data = per_pod // model_parallelism
+    if data < 1:
+        raise ValueError(
+            f"{n_devices} devices cannot sustain model={model_parallelism}")
+    if pods > 1:
+        return (pods, data, model_parallelism)
+    return (data, model_parallelism)
+
+
+def shrink_mesh(devices: Sequence, model_parallelism: int,
+                pods: int = 1) -> Mesh:
+    """Build the largest viable mesh from surviving devices (drops
+    stragglers that don't fit the grid)."""
+    shape = largest_mesh_shape(len(devices), model_parallelism, pods)
+    n = int(np.prod(shape))
+    grid = np.asarray(devices[:n]).reshape(shape)
+    names = ("pod", "data", "model") if len(shape) == 3 else ("data", "model")
+    return Mesh(grid, names)
+
+
+def reshard_state(state, plan, model):
+    """device_put an (any-mesh/host) state onto a new plan's shardings."""
+    from repro.train.train_step import state_axes, state_shapes
+
+    axes = state_axes(model)
+    shapes = state_shapes(model)
+    shardings = plan.tree_shardings(axes, shapes)
+    return jax.tree.map(lambda x, s: jax.device_put(x, s), state, shardings)

@@ -1,0 +1,157 @@
+"""Logical-axis sharding: one rule table per (config, mesh, workload).
+
+Models annotate tensors with *logical* axis names (layers/vocab/embed/heads/
+mlp/expert/... for params; act_batch/act_seq/act_heads/... for activations).
+This module resolves names to mesh axes, with automatic fallbacks:
+
+  * a dim whose size doesn't divide the assigned mesh-axis size is left
+    unsharded (e.g. llama4's 40 heads or minitron's 24 on a 16-way model
+    axis -> those archs get the *sequence-sharding* attention rules instead);
+  * decode with global_batch < batch-axis size (long_500k: B=1) flips the KV
+    cache to sequence sharding over "data" — XLA then lowers the softmax over
+    the sharded axis into a logsumexp-combining all-reduce (distributed
+    flash-decode).
+
+Baseline parallelism (paper-faithful posture: FSDP x TP, DP across pods):
+params FSDP over ("pod","data") on the embed dim + TP over "model" on
+heads/mlp/vocab; activations batch-sharded over ("pod","data").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.common import ModelConfig, ShapeConfig
+
+Axes = Optional[Union[str, Tuple[str, ...]]]
+
+
+def _mesh_size(mesh: Mesh, axes: Axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+@dataclasses.dataclass
+class ShardingPlan:
+    mesh: Mesh
+    rules: Dict[str, Axes]
+    ep: bool = False                 # expert-parallel MoE (perf variant)
+
+    def spec_for(self, logical_axes: Sequence[Optional[str]],
+                 shape: Optional[Sequence[int]] = None) -> P:
+        parts = []
+        used = set()
+        for i, name in enumerate(logical_axes):
+            ax = self.rules.get(name) if name else None
+            if ax is not None:
+                key = tuple(ax) if isinstance(ax, tuple) else (ax,)
+                if any(k in used for k in key):
+                    ax = None        # an axis may shard only one dim
+                elif shape is not None and shape[i] % _mesh_size(self.mesh, ax):
+                    ax = None        # indivisible -> replicate this dim
+                else:
+                    used.update(key)
+            parts.append(ax)
+        while parts and parts[-1] is None:
+            parts.pop()
+        return P(*parts)
+
+    def sharding_for(self, logical_axes, shape=None) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec_for(logical_axes, shape))
+
+    def tree_shardings(self, axes_tree, shapes_tree):
+        """Map (axes pytree, ShapeDtypeStruct pytree) -> NamedSharding tree."""
+        return jax.tree.map(
+            lambda axes, sds: self.sharding_for(axes, sds.shape),
+            axes_tree, shapes_tree,
+            is_leaf=lambda x: isinstance(x, tuple) and all(
+                isinstance(e, (str, type(None))) for e in x))
+
+
+def make_constrain(plan: Optional[ShardingPlan]):
+    """Build the `constrain(x, logical_axes)` callback models call between
+    blocks. Outside a mesh context (CPU tests) it's a no-op."""
+    if plan is None:
+        noop = lambda x, axes: x
+        noop.plan = None
+        return noop
+
+    def constrain(x, axes):
+        spec = plan.spec_for(axes, x.shape)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(plan.mesh, spec))
+
+    constrain.plan = plan   # modules needing shard_map (MoE) read this
+    return constrain
+
+
+def make_sharding_plan(cfg: ModelConfig, mesh: Mesh,
+                       shape: Optional[ShapeConfig] = None,
+                       ep: bool = False,
+                       fsdp: bool = True,
+                       seq_parallel: bool = False,
+                       moe_weight_stationary: bool = False) -> ShardingPlan:
+    model_n = mesh.shape.get("model", 1)
+    batch_axes: Axes = (("pod", "data") if "pod" in mesh.axis_names
+                        else ("data",))
+    heads_divisible = cfg.n_heads % model_n == 0
+    kv_divisible = cfg.n_kv_heads % model_n == 0
+    inner = None
+    if cfg.mamba is not None:
+        inner = "model" if (cfg.mamba.expand * cfg.d_model) % model_n == 0 else None
+    if cfg.xlstm is not None:
+        inner = "model" if cfg.d_model % model_n == 0 else None
+
+    decode = shape is not None and shape.kind == "decode"
+    batch_n = _mesh_size(mesh, batch_axes)
+    small_batch = shape is not None and shape.global_batch < batch_n
+
+    rules: Dict[str, Axes] = {
+        # ---- params ----
+        "layers": None,
+        "vocab": "model",
+        "embed": ("pod", "data") if (fsdp and "pod" in mesh.axis_names)
+                 else (("data",) if fsdp else None),
+        "heads": "model" if heads_divisible else None,
+        "kv_heads": "model" if kv_divisible else None,
+        "head_dim": None,
+        "mlp": "model",
+        "expert": "model" if ep else None,
+        "inner": "model" if inner else None,
+        "state": None,
+        # ---- activations ----
+        "act_batch": None if small_batch else batch_axes,
+        # sequence sharding on the model axis: always when heads can't use
+        # that axis; optionally (Megatron-style sequence parallelism, §Perf)
+        # for the residual stream between blocks — attention/FFN re-gather
+        "act_seq": ("model" if (seq_parallel or not heads_divisible)
+                    else None),
+        "act_kv_seq": None,
+        "act_heads": "model" if heads_divisible else None,
+        "act_embed": None,
+        "act_mlp": "model",
+        "act_inner": "model" if inner else None,
+        "act_expert": "model" if ep else None,
+        # KV cache: batch-sharded normally; sequence-sharded over "data" when
+        # the batch can't cover the data axis (long-context decode), and over
+        # "model" when heads can't use that axis (llama4/minitron decode) —
+        # both give distributed flash-decode via logsumexp all-reduce.
+        "cache_seq": (("data",) if (decode and small_batch)
+                      else (None if heads_divisible else "model")),
+        # serving-path MoE layout (see models.moe._moe_sharded): experts
+        # resident on the batch axes, activations broadcast instead of
+        # weights gathered
+        "moe_weight_stationary": moe_weight_stationary,
+    }
+    return ShardingPlan(mesh=mesh, rules=rules, ep=ep)
+
+
+def resolve_axes(plan: ShardingPlan, axes_tree, shapes_tree):
+    return plan.tree_shardings(axes_tree, shapes_tree)

@@ -1,0 +1,71 @@
+"""Predicate filter + compaction as Pallas TPU kernels.
+
+The paper's `euro_selection` hot spot: evaluate a mask, then gather the
+surviving row indices contiguously. The GPU idiom (warp ballot + atomic
+offset) has no TPU analogue; instead:
+
+  pass 1 (kernel): per-block survivor counts           (grid over row blocks)
+  stitch (XLA):    exclusive cumsum -> per-block base offsets
+  pass 2 (kernel): per-block local compaction via cumsum positions and a
+                   one-hot permutation matmul (VPU/MXU, no scatter), emitting
+                   (block, slot) -> row-index tiles
+  stitch (XLA):    scatter tiles to base offsets (static shapes end to end).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _count_kernel(mask_ref, o_ref, *, bn: int):
+    o_ref[...] = jnp.sum(mask_ref[...].astype(jnp.int32))[None]
+
+
+def block_counts(mask: jax.Array, block_n: int = 1024,
+                 interpret: bool = False) -> jax.Array:
+    n = mask.shape[0]
+    bn = min(block_n, n)
+    assert n % bn == 0
+    grid = (n // bn,)
+    return pl.pallas_call(
+        functools.partial(_count_kernel, bn=bn),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bn,), lambda b: (b,))],
+        out_specs=pl.BlockSpec((1,), lambda b: (b,)),
+        out_shape=jax.ShapeDtypeStruct((grid[0],), jnp.int32),
+        interpret=interpret,
+    )(mask)
+
+
+def _compact_kernel(mask_ref, o_ref, *, bn: int):
+    b = pl.program_id(0)
+    mask = mask_ref[...]
+    rows = b * bn + jax.lax.broadcasted_iota(jnp.int32, (bn,), 0)
+    # local destination slot for each surviving row
+    pos = jnp.cumsum(mask.astype(jnp.int32)) - 1          # (bn,)
+    pos = jnp.where(mask, pos, bn)                        # dead rows -> slot bn
+    # one-hot permutation: slot s receives row r iff pos[r] == s
+    slots = jax.lax.broadcasted_iota(jnp.int32, (bn, bn), 1)
+    perm = (pos[:, None] == slots).astype(jnp.int32)      # (bn rows, bn slots)
+    packed = jnp.sum(perm * rows[:, None], axis=0)        # (bn,)
+    o_ref[0, :] = packed.astype(jnp.int32)
+
+
+def block_compact(mask: jax.Array, block_n: int = 1024,
+                  interpret: bool = False) -> jax.Array:
+    """Returns (n_blocks, bn) tiles of compacted row indices (0-padded)."""
+    n = mask.shape[0]
+    bn = min(block_n, n)
+    assert n % bn == 0
+    grid = (n // bn,)
+    return pl.pallas_call(
+        functools.partial(_compact_kernel, bn=bn),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bn,), lambda b: (b,))],
+        out_specs=pl.BlockSpec((1, bn), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((grid[0], bn), jnp.int32),
+        interpret=interpret,
+    )(mask)

@@ -1,0 +1,113 @@
+"""jit'd public wrappers over the Pallas kernels (+ padding & dispatch).
+
+On CPU (this container) kernels run in interpret mode; on TPU they compile.
+`ref.py` holds the pure-jnp oracles tests compare against.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import filter_compact as _fc
+from repro.kernels import flash_attention as _fa
+from repro.kernels import groupby_agg as _gb
+from repro.kernels import ref
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                             "block_q", "block_k"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, window: int = 0,
+                    softcap: Optional[float] = None,
+                    block_q: int = 128, block_k: int = 128) -> jax.Array:
+    """q/k/v: (B, S, H, D), heads pre-expanded (GQA repeat). -> (B,S,H,D)."""
+    B, S, H, D = q.shape
+    to3 = lambda t: t.transpose(0, 2, 1, 3).reshape(B * H, t.shape[1], D)
+    out = _fa.flash_attention_3d(to3(q), to3(k), to3(v), causal=causal,
+                                 window=window, softcap=softcap,
+                                 block_q=block_q, block_k=block_k,
+                                 interpret=_interpret())
+    return out.reshape(B, H, S, D).transpose(0, 2, 1, 3)
+
+
+# ---------------------------------------------------------------------------
+# group-by aggregation
+# ---------------------------------------------------------------------------
+
+
+def _pad_to(x: jax.Array, mult: int, fill) -> jax.Array:
+    n = x.shape[0]
+    p = (-n) % mult
+    if p == 0:
+        return x
+    return jnp.concatenate([x, jnp.full((p,), fill, x.dtype)])
+
+
+@functools.partial(jax.jit, static_argnames=("n_groups", "fn", "block_n"))
+def groupby_aggregate(values: jax.Array, codes: jax.Array, n_groups: int,
+                      fn: str = "sum", block_n: int = 1024) -> jax.Array:
+    """Segment aggregate via the Pallas kernel. values (N,), codes (N,)."""
+    ng_pad = max((n_groups + 127) // 128 * 128, 128)
+    bn = min(block_n, max(128, ng_pad))
+    vals = _pad_to(values.astype(jnp.float32), bn, 0.0)
+    cds = _pad_to(codes.astype(jnp.int32), bn, ng_pad - 1 if fn in ("min", "max")
+                  else n_groups)
+    # padded rows: for sum/count they carry code==n_groups (contribute to a
+    # group we slice off when n_groups < ng_pad) ... unless n_groups == ng_pad;
+    # use value-neutral padding instead: sum pads 0.0, min/max pad +-inf codes
+    # to the last real group with neutral values.
+    if fn in ("min", "max"):
+        neutral = jnp.inf if fn == "min" else -jnp.inf
+        vals = vals.at[values.shape[0]:].set(neutral)
+        cds = cds.at[values.shape[0]:].set(0)
+    if fn == "mean":
+        s = _gb.groupby_pallas(vals, cds, ng_pad, "sum", bn, _interpret())
+        c = _gb.groupby_pallas(vals, cds, ng_pad, "count", bn, _interpret())
+        out = s / jnp.maximum(c, 1.0)
+    else:
+        out = _gb.groupby_pallas(vals, cds, ng_pad, fn, bn, _interpret())
+    return out[:n_groups]
+
+
+# ---------------------------------------------------------------------------
+# filter compaction
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def compact(mask: jax.Array, block_n: int = 1024
+            ) -> Tuple[jax.Array, jax.Array]:
+    """Returns (indices (N,), count): indices[:count] = survivors ascending."""
+    n = mask.shape[0]
+    m = _pad_to(mask.astype(jnp.bool_), min(block_n, max(n, 8)), False)
+    bn = min(block_n, m.shape[0])
+    counts = _fc.block_counts(m, bn, _interpret())           # (nb,)
+    tiles = _fc.block_compact(m, bn, _interpret())           # (nb, bn)
+    offsets = jnp.cumsum(counts) - counts                    # exclusive
+    nb = counts.shape[0]
+    slot = jnp.arange(bn)[None, :]
+    valid = slot < counts[:, None]
+    dst = jnp.where(valid, offsets[:, None] + slot, n)       # (nb, bn)
+    out = jnp.full((n + 1,), n - 1, jnp.int32)
+    out = out.at[dst.reshape(-1)].set(tiles.reshape(-1))
+    return out[:n], jnp.sum(counts)
+
+
+def compact_indices(mask) -> jax.Array:
+    """Host-friendly: returns a numpy array of the surviving indices."""
+    import numpy as np
+
+    idx, count = compact(jnp.asarray(np.asarray(mask)))
+    return np.asarray(idx)[: int(count)]

@@ -1,0 +1,84 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Tests sweep shapes/dtypes and assert_allclose(kernel, ref). These are also
+the implementations XLA compiles on hardware without Pallas support.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.3819763e38
+
+
+# ---------------------------------------------------------------------------
+# flash attention oracle
+# ---------------------------------------------------------------------------
+
+
+def ref_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                  causal: bool = True, window: int = 0,
+                  softcap: Optional[float] = None) -> jax.Array:
+    """q/k/v: (B, S, H, D) with heads already GQA-expanded."""
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        scores = jnp.tanh(scores / softcap) * softcap
+    sq, sk = q.shape[1], k.shape[1]
+    qi = jnp.arange(sq)[:, None]
+    kj = jnp.arange(sk)[None, :]
+    ok = jnp.ones((sq, sk), bool)
+    if causal:
+        ok &= kj <= qi
+    if window > 0:
+        ok &= kj > qi - window
+    scores = jnp.where(ok[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# group-by aggregation oracle
+# ---------------------------------------------------------------------------
+
+
+def ref_groupby(values: jax.Array, codes: jax.Array, n_groups: int,
+                fn: str = "sum") -> jax.Array:
+    """values: (N,) f32, codes: (N,) int32 in [0, n_groups)."""
+    values = values.astype(jnp.float32)
+    if fn == "sum":
+        return jax.ops.segment_sum(values, codes, n_groups)
+    if fn == "count":
+        return jax.ops.segment_sum(jnp.ones_like(values), codes, n_groups)
+    if fn == "mean":
+        s = jax.ops.segment_sum(values, codes, n_groups)
+        c = jax.ops.segment_sum(jnp.ones_like(values), codes, n_groups)
+        return s / jnp.maximum(c, 1.0)
+    if fn == "min":
+        return jax.ops.segment_min(values, codes, n_groups)
+    if fn == "max":
+        return jax.ops.segment_max(values, codes, n_groups)
+    raise ValueError(fn)
+
+
+# ---------------------------------------------------------------------------
+# filter compaction oracle
+# ---------------------------------------------------------------------------
+
+
+def ref_compact(mask: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Static-shape compaction: returns (indices: (N,), count).
+
+    indices[:count] are the positions where mask is True (ascending);
+    indices[count:] are padding (== N-1 clamp safe values).
+    """
+    n = mask.shape[0]
+    order = jnp.argsort(jnp.logical_not(mask), stable=True)
+    count = jnp.sum(mask.astype(jnp.int32))
+    return order, count

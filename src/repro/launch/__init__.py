@@ -1,0 +1,2 @@
+"""Launchers: production mesh factory, multi-pod dry-run, roofline analysis,
+trainer, server, and the bauplan pipeline CLI."""

@@ -1,0 +1,122 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from dryrun_results.json.
+
+    PYTHONPATH=src python -m repro.launch.report results/dryrun_results.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from collections import defaultdict
+from typing import Dict, List
+
+
+def fmt_bytes(n: float) -> str:
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(n) < 1024:
+            return f"{n:.1f}{unit}"
+        n /= 1024
+    return f"{n:.1f}PB"
+
+
+def fmt_ms(s: float) -> str:
+    return f"{s * 1e3:.2f}"
+
+
+def dryrun_table(records: List[Dict]) -> str:
+    lines = [
+        "| arch | shape | mesh | status | params+opt/dev | temp/dev | "
+        "fits v5e (16G) | collectives (per scan-iteration schedule) | "
+        "compile s |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in records:
+        if r.get("variant", "baseline") != "baseline":
+            continue
+        if r.get("status") != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"FAIL: {r.get('error', '?')[:60]} | | | | | |")
+            continue
+        mem = r.get("memory_stats", {})
+        args = mem.get("argument_bytes", 0)
+        temp = mem.get("temp_bytes", 0)
+        fits = "yes" if (args + temp) <= 16e9 else f"NO ({fmt_bytes(args + temp)})"
+        colls = ", ".join(f"{k}x{v['count']}"
+                          for k, v in sorted(r.get("collectives", {}).items()))
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+            f"{fmt_bytes(args)} | {fmt_bytes(temp)} | {fits} | {colls} | "
+            f"{r.get('compile_seconds', 0):.0f} |")
+    return "\n".join(lines)
+
+
+def roofline_table(records: List[Dict], mesh: str = "single") -> str:
+    lines = [
+        "| arch | shape | C ms | M ms | X ms | bottleneck | "
+        "HLO GFLOPs/dev | wire MB/dev | MODEL_FLOPS/HLO | note |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in records:
+        if (r.get("status") != "ok" or r.get("mesh") != mesh
+                or r.get("variant", "baseline") != "baseline"):
+            continue
+        note = _note(r)
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_ms(r['t_compute'])} | "
+            f"{fmt_ms(r['t_memory'])} | {fmt_ms(r['t_collective'])} | "
+            f"**{r['bottleneck']}** | {r['flops_per_device'] / 1e9:.1f} | "
+            f"{r['wire_bytes_per_device'] / 1e6:.1f} | "
+            f"{r['model_flops_ratio']:.1%} | {note} |")
+    return "\n".join(lines)
+
+
+def _note(r: Dict) -> str:
+    t = {"compute": r["t_compute"], "memory": r["t_memory"],
+         "collective": r["t_collective"]}
+    dom = r["bottleneck"]
+    rest = sorted((v for k, v in t.items() if k != dom), reverse=True)
+    margin = t[dom] / max(rest[0], 1e-12)
+    if dom == "memory":
+        fix = "fuse/blocked-attn or less remat recompute"
+    elif dom == "collective":
+        fix = "EP all-to-all / reduce-scatter instead of all-gather"
+    else:
+        fix = "already compute-bound: raise arithmetic intensity"
+    return f"{margin:.1f}x dominant; {fix}"
+
+
+def summarize(records: List[Dict]) -> str:
+    ok = [r for r in records if r.get("status") == "ok"
+          and r.get("variant", "baseline") == "baseline"]
+    by_bottleneck = defaultdict(int)
+    for r in ok:
+        by_bottleneck[r["bottleneck"]] += 1
+    worst = sorted(ok, key=lambda r: r["model_flops_ratio"])[:5]
+    coll = sorted(ok, key=lambda r: -r["t_collective"])[:5]
+    out = [f"cells ok: {len(ok)}; bottleneck mix: {dict(by_bottleneck)}",
+           "worst useful-FLOPs ratio: "
+           + ", ".join(f"{r['arch']}/{r['shape']}/{r['mesh']}"
+                       f"={r['model_flops_ratio']:.1%}" for r in worst),
+           "most collective-bound: "
+           + ", ".join(f"{r['arch']}/{r['shape']}/{r['mesh']}"
+                       f"={r['t_collective'] * 1e3:.0f}ms" for r in coll)]
+    return "\n".join(out)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("results")
+    ap.add_argument("--section", choices=["dryrun", "roofline", "summary"],
+                    default="summary")
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+    records = json.load(open(args.results))
+    if args.section == "dryrun":
+        print(dryrun_table(records))
+    elif args.section == "roofline":
+        print(roofline_table(records, args.mesh))
+    else:
+        print(summarize(records))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""bauplan-style CLI: run a project's DAG against the lakehouse catalog.
+
+    PYTHONPATH=src python -m repro.launch.run_pipeline \
+        --project examples.quickstart_project --workdir /tmp/bp \
+        [--branch main] [--channel zerocopy|mmap|flight|objectstore]
+
+The --project module must expose ``PROJECT`` (a repro.Project) and may expose
+``seed_catalog(catalog)`` to create source tables on first run.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import os
+import time
+
+from repro.columnar import Catalog, ObjectStore
+from repro.core.runtime import Client, LocalCluster, execute_run
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--project", required=True,
+                    help="python module exposing PROJECT")
+    ap.add_argument("--workdir", required=True)
+    ap.add_argument("--branch", default="main")
+    ap.add_argument("--channel", default=None,
+                    help="force one data channel (benchmarking)")
+    ap.add_argument("--workers", type=int, default=2)
+    ap.add_argument("--targets", nargs="*", default=None)
+    ap.add_argument("--verbose", action="store_true")
+    args = ap.parse_args()
+
+    mod = importlib.import_module(args.project)
+    project = mod.PROJECT
+    store = ObjectStore(os.path.join(args.workdir, "s3"))
+    catalog = Catalog(store)
+    if hasattr(mod, "seed_catalog"):
+        mod.seed_catalog(catalog)
+    cluster = LocalCluster(catalog, store, os.path.join(args.workdir, "dp"),
+                           n_workers=args.workers)
+    client = Client(verbose=args.verbose)
+    t0 = time.time()
+    try:
+        res = execute_run(project, catalog=catalog, cluster=cluster,
+                          branch=args.branch, targets=args.targets,
+                          client=client, force_channel=args.channel,
+                          journal_path=os.path.join(args.workdir,
+                                                    "journal.jsonl"))
+        print(f"run {res.run_id} ok in {res.wall_seconds:.3f}s "
+              f"(wall {time.time() - t0:.3f}s)")
+        for tid, h in res.handles.items():
+            print(f"  {tid:32s} rows={h.num_rows:>9} bytes={h.nbytes:>12} "
+                  f"via {h.channel}")
+    finally:
+        cluster.close()
+
+
+if __name__ == "__main__":
+    main()

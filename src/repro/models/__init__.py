@@ -1,0 +1,11 @@
+"""Model zoo: the 10 assigned architectures as composable JAX modules.
+
+All models are pure-functional: ``init(rng, cfg) -> params`` and
+``apply(params, batch, cfg) -> logits``; parameters are stacked per
+super-block pattern and the stack is consumed with ``jax.lax.scan`` so HLO
+size (and compile time) is independent of depth. Sharding is expressed with
+logical axis names resolved by ``repro.distributed.sharding``.
+"""
+from repro.models.model_zoo import build_model
+
+__all__ = ["build_model"]

@@ -1,0 +1,159 @@
+"""Blocked (flash-style) attention in pure jnp with a custom VJP.
+
+XLA:CPU/HLO materializes the full (Sq x Sk) score tensor for the einsum
+attention path — the dominant memory/bytes term in the dry-run roofline for
+train_4k/prefill_32k. This implementation:
+
+  * forward: lax.scan over KV chunks with online softmax (running max /
+    denominator) — peak memory O(Sq x block_k) instead of O(Sq x Sk);
+  * backward: flash-style recompute — one scan over KV chunks rebuilds each
+    chunk's probabilities from the saved logsumexp and accumulates
+    dq / dk / dv with the standard dS = P * (dP - D) identity. No O(S^2)
+    residuals are ever stored.
+
+Semantically identical to models.attention._sdpa (causal / sliding-window /
+softcap); tests pin it against ref_attention. Selected per-config with
+``attention_impl="blocked"`` — the §Perf hillclimb's main memory lever, and
+the XLA analogue of the Pallas kernel used on real TPUs.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.3819763e38
+
+
+def _chunk_bias(qi: jax.Array, kj: jax.Array, causal: bool,
+                window: int) -> jax.Array:
+    """(Sq, bk) additive bias from absolute positions."""
+    ok = jnp.ones((qi.shape[0], kj.shape[0]), bool)
+    if causal:
+        ok &= kj[None, :] <= qi[:, None]
+    if window > 0:
+        ok &= kj[None, :] > qi[:, None] - window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _scores(q, k, scale, softcap):
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+    return s
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def blocked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                      causal: bool = True, window: int = 0,
+                      softcap: Optional[float] = None,
+                      block_k: int = 1024) -> jax.Array:
+    """q/k/v: (B, S, H, D), heads pre-expanded. Returns (B, Sq, H, D)."""
+    out, _ = _fwd_impl(q, k, v, causal, window, softcap, block_k)
+    return out
+
+
+def _fwd_impl(q, k, v, causal, window, softcap, block_k):
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    bk = min(block_k, Sk)
+    nk = -(-Sk // bk)
+    pad = nk * bk - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    scale = 1.0 / math.sqrt(D)
+    qi = jnp.arange(Sq)
+    kc = k.reshape(B, nk, bk, H, D).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nk, bk, H, D).transpose(1, 0, 2, 3, 4)
+    qf = q.astype(jnp.float32)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        k_j, v_j, j = xs
+        kj = j * bk + jnp.arange(bk)
+        s = _scores(qf, k_j.astype(jnp.float32), scale, softcap)
+        s = s + _chunk_bias(qi, kj, causal, window)[None, None]
+        s = jnp.where((kj < Sk)[None, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha.transpose(0, 2, 1)[..., None] + jnp.einsum(
+            "bhqk,bkhd->bqhd", p, v_j.astype(jnp.float32),
+            preferred_element_type=jnp.float32)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, H, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Sq, H, D), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                  (kc, vc, jnp.arange(nk)))
+    l = jnp.maximum(l, 1e-30)
+    out = (acc / l.transpose(0, 2, 1)[..., None]).astype(q.dtype)
+    lse = m + jnp.log(l)                                   # (B,H,Sq)
+    return out, lse
+
+
+def _fwd_vjp(q, k, v, causal, window, softcap, block_k):
+    out, lse = _fwd_impl(q, k, v, causal, window, softcap, block_k)
+    return out, (q, k, v, out, lse)
+
+
+def _bwd_vjp(causal, window, softcap, block_k, res, dout):
+    q, k, v, out, lse = res
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    bk = min(block_k, Sk)
+    nk = -(-Sk // bk)
+    pad = nk * bk - Sk
+    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else k
+    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else v
+    scale = 1.0 / math.sqrt(D)
+    qi = jnp.arange(Sq)
+    qf = q.astype(jnp.float32)
+    dof = dout.astype(jnp.float32)
+    # D_i = rowsum(dout * out) (B,H,Sq)
+    Dsum = jnp.einsum("bqhd,bqhd->bhq", dof, out.astype(jnp.float32))
+    kc = kp.reshape(B, nk, bk, H, D).transpose(1, 0, 2, 3, 4)
+    vc = vp.reshape(B, nk, bk, H, D).transpose(1, 0, 2, 3, 4)
+
+    def body(dq, xs):
+        k_j, v_j, j = xs
+        kj = j * bk + jnp.arange(bk)
+        s_raw = jnp.einsum("bqhd,bkhd->bhqk", qf, k_j.astype(jnp.float32),
+                           preferred_element_type=jnp.float32) * scale
+        if softcap is not None:
+            t = jnp.tanh(s_raw / softcap)
+            s = t * softcap
+        else:
+            s = s_raw
+        bias = _chunk_bias(qi, kj, causal, window)[None, None]
+        live = (bias == 0.0) & (kj < Sk)[None, None, None, :]
+        p = jnp.where(live, jnp.exp(s - lse[..., None]), 0.0)   # (B,H,Sq,bk)
+        dv_j = jnp.einsum("bhqk,bqhd->bkhd", p, dof,
+                          preferred_element_type=jnp.float32)
+        dP = jnp.einsum("bqhd,bkhd->bhqk", dof, v_j.astype(jnp.float32),
+                        preferred_element_type=jnp.float32)
+        dS = p * (dP - Dsum[..., None])
+        if softcap is not None:
+            dS = dS * (1.0 - t * t)        # d tanh
+        dq = dq + jnp.einsum("bhqk,bkhd->bqhd", dS,
+                             k_j.astype(jnp.float32),
+                             preferred_element_type=jnp.float32) * scale
+        dk_j = jnp.einsum("bhqk,bqhd->bkhd", dS, qf,
+                          preferred_element_type=jnp.float32) * scale
+        return dq, (dk_j, dv_j)
+
+    dq0 = jnp.zeros((B, Sq, H, D), jnp.float32)
+    dq, (dk_c, dv_c) = jax.lax.scan(body, dq0, (kc, vc, jnp.arange(nk)))
+    dk = dk_c.transpose(1, 0, 2, 3, 4).reshape(B, nk * bk, H, D)[:, :Sk]
+    dv = dv_c.transpose(1, 0, 2, 3, 4).reshape(B, nk * bk, H, D)[:, :Sk]
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+blocked_attention.defvjp(_fwd_vjp, _bwd_vjp)

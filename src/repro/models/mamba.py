@@ -1,0 +1,150 @@
+"""Mamba (S6) selective-state-space mixer.
+
+TPU adaptation (DESIGN.md §2): the CUDA selective-scan kernel fuses the
+recurrence with recomputation; here the recurrence is a *chunked* parallel
+scan — `jax.lax.associative_scan` within chunks (MXU/VPU-friendly, O(log Q)
+depth), `jax.lax.scan` across chunk boundaries, with `jax.checkpoint` around
+each chunk so the (L, d_inner, d_state) state tensor is never materialized
+for the backward pass (memory ~ boundaries + one chunk).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.common import ModelConfig
+from repro.models.layers import ParamSpec, Specs
+
+
+def _dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    m = cfg.mamba
+    di = m.expand * cfg.d_model
+    dt_rank = m.dt_rank or -(-cfg.d_model // 16)
+    return di, m.d_state, m.d_conv, dt_rank
+
+
+def mamba_specs(cfg: ModelConfig, path: str = "mamba") -> Specs:
+    d = cfg.d_model
+    di, ds, dc, dtr = _dims(cfg)
+    return {
+        f"{path}/in_proj": ParamSpec((d, 2 * di), ("embed", "inner")),
+        f"{path}/conv_w": ParamSpec((dc, di), (None, "inner")),
+        f"{path}/conv_b": ParamSpec((di,), ("inner",), init="zeros"),
+        f"{path}/x_proj": ParamSpec((di, dtr + 2 * ds), ("inner", None)),
+        f"{path}/dt_proj": ParamSpec((dtr, di), (None, "inner")),
+        f"{path}/dt_bias": ParamSpec((di,), ("inner",), init="ones"),
+        f"{path}/A_log": ParamSpec((di, ds), ("inner", "state"), init="ones"),
+        f"{path}/Dskip": ParamSpec((di,), ("inner",), init="ones"),
+        f"{path}/out_proj": ParamSpec((di, d), ("inner", "embed")),
+    }
+
+
+def pick_chunk(S: int, chunk: int) -> int:
+    """Largest divisor of S that is <= chunk (chunked scans need S % Q == 0;
+    production shapes are powers of two, test shapes may not be)."""
+    for q in range(min(chunk, S), 0, -1):
+        if S % q == 0:
+            return q
+    return 1
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x: (B,S,di), w: (dc,di). f32 compute."""
+    dc = w.shape[0]
+    pad = jnp.pad(x.astype(w.dtype), ((0, 0), (dc - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        pad, w[:, None, :],
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[-1])
+    return out + b
+
+
+def _ssm_chunked(decay: jax.Array, inp: jax.Array, c_ssm: jax.Array,
+                 h0: jax.Array, chunk: int) -> Tuple[jax.Array, jax.Array]:
+    """h_t = decay_t * h_{t-1} + inp_t;  y_t = <h_t, c_t>.
+
+    decay/inp: (B,S,di,ds); c_ssm: (B,S,ds); h0: (B,di,ds).
+    Returns y: (B,S,di) and final h.
+    """
+    B, S, di, ds = decay.shape
+    Q = pick_chunk(S, chunk)
+    n = S // Q
+    dQ = decay.reshape(B, n, Q, di, ds).transpose(1, 0, 2, 3, 4)
+    iQ = inp.reshape(B, n, Q, di, ds).transpose(1, 0, 2, 3, 4)
+    cQ = c_ssm.reshape(B, n, Q, ds).transpose(1, 0, 2, 3)
+
+    def combine(a, b):
+        (ad, ai), (bd, bi) = a, b
+        return ad * bd, bd * ai + bi
+
+    @jax.checkpoint
+    def chunk_fn(h, xs):
+        d_, i_, c_ = xs                              # (B,Q,di,ds), (B,Q,ds)
+        cum_d, cum_i = jax.lax.associative_scan(combine, (d_, i_), axis=1)
+        h_all = cum_d * h[:, None] + cum_i           # (B,Q,di,ds)
+        y = jnp.einsum("bqdn,bqn->bqd", h_all, c_,
+                       preferred_element_type=jnp.float32)
+        return h_all[:, -1], y
+
+    hN, yQ = jax.lax.scan(chunk_fn, h0, (dQ, iQ, cQ))
+    y = yQ.transpose(1, 0, 2, 3).reshape(B, S, di)
+    return y, hN
+
+
+def mamba_apply(p: Dict, x: jax.Array, cfg: ModelConfig, constrain,
+                cache: Optional[Dict] = None
+                ) -> Tuple[jax.Array, Optional[Dict]]:
+    """x: (B,S,D). cache (decode): {"h": (B,di,ds), "conv": (B,dc-1,di)}."""
+    B, S, D = x.shape
+    di, ds, dc, dtr = _dims(cfg)
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"],
+                    preferred_element_type=jnp.float32).astype(x.dtype)
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_in = constrain(x_in, ("act_batch", "act_seq", "act_inner"))
+
+    if cache is None:
+        conv = _causal_conv(x_in, p["conv_w"].astype(jnp.float32),
+                            p["conv_b"].astype(jnp.float32))
+        new_cache = None
+    else:
+        window = jnp.concatenate([cache["conv"], x_in.astype(jnp.float32)],
+                                 axis=1)             # (B,dc,di)
+        conv = jnp.einsum("bci,ci->bi", window,
+                          p["conv_w"].astype(jnp.float32)) + p["conv_b"]
+        conv = conv[:, None, :]
+        new_cache = {"conv": window[:, 1:, :]}
+    u = jax.nn.silu(conv).astype(x.dtype)            # (B,S,di)
+
+    proj = jnp.einsum("bsi,ip->bsp", u, p["x_proj"],
+                      preferred_element_type=jnp.float32)
+    dt_in, b_ssm, c_ssm = jnp.split(proj, [dtr, dtr + ds], axis=-1)
+    dt = jax.nn.softplus(jnp.einsum("bsr,ri->bsi", dt_in, p["dt_proj"],
+                                    preferred_element_type=jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))   # (B,S,di)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))     # (di,ds)
+    decay = jnp.exp(dt[..., None] * A)               # (B,S,di,ds)
+    inp = (dt[..., None] * b_ssm[:, :, None, :]
+           * u.astype(jnp.float32)[..., None])       # (B,S,di,ds)
+
+    if cache is None:
+        h0 = jnp.zeros((B, di, ds), jnp.float32)
+        y, _ = _ssm_chunked(decay, inp, c_ssm, h0, cfg.mamba.chunk)
+    else:
+        h = decay[:, 0] * cache["h"] + inp[:, 0]     # (B,di,ds)
+        y = jnp.einsum("bdn,bn->bd", h, c_ssm[:, 0],
+                       preferred_element_type=jnp.float32)[:, None]
+        new_cache["h"] = h
+    y = y + u.astype(jnp.float32) * p["Dskip"].astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    return out, new_cache
+
+
+def mamba_cache_shape(cfg: ModelConfig, batch: int) -> Dict:
+    di, ds, dc, _ = _dims(cfg)
+    return {"h": (batch, di, ds), "conv": (batch, dc - 1, di)}

@@ -1,0 +1,237 @@
+"""Model facade: one uniform interface over all 10 architectures.
+
+``build_model(cfg)`` returns a ``Model`` whose entry points take/return plain
+pytrees so the train/serve steps, dry-run, and tests treat every architecture
+identically:
+
+    train_logits(params, batch, constrain) -> (logits, aux)
+    prefill(params, batch, constrain)      -> (logits, aux)
+    decode(params, batch, constrain)       -> (logits, new_caches)
+    cache_shapes(batch, max_seq)           -> pytree of ShapeDtypeStruct
+    input_specs(shape)                     -> batch of ShapeDtypeStruct
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.common import ModelConfig, ShapeConfig
+from repro.models import layers, transformer, whisper
+from repro.models.layers import Specs
+
+
+def _noop_constrain(x, axes):
+    return x
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    specs: Specs
+    init: Callable
+    train_logits: Callable
+    prefill: Callable
+    decode: Callable
+    cache_shapes: Callable
+    input_specs: Callable
+    input_axes: Callable = None   # logical axes mirroring input_specs
+
+
+def _token_axes(shape: ShapeConfig) -> Dict:
+    if shape.kind == "train":
+        return {"tokens": ("act_batch", None), "labels": ("act_batch", None)}
+    if shape.kind == "prefill":
+        return {"tokens": ("act_batch", None)}
+    return {"token": ("act_batch", None), "index": ()}
+
+
+def _token_specs(shape: ShapeConfig, cfg: ModelConfig) -> Dict:
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        return {"tokens": jax.ShapeDtypeStruct((B, S), i32),
+                "labels": jax.ShapeDtypeStruct((B, S), i32)}
+    if shape.kind == "prefill":
+        return {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+    return {"token": jax.ShapeDtypeStruct((B, 1), i32),
+            "index": jax.ShapeDtypeStruct((), i32)}
+
+
+# ---------------------------------------------------------------------------
+# decoder-family (dense / moe / hybrid / xlstm)
+# ---------------------------------------------------------------------------
+
+
+def _build_decoder(cfg: ModelConfig) -> Model:
+    specs = transformer.decoder_specs(cfg)
+
+    def init(rng, dtype=jnp.bfloat16):
+        return layers.init_params(rng, specs, dtype)
+
+    def train_logits(params, batch, constrain=_noop_constrain):
+        logits, _, aux = transformer.decoder_apply(
+            params, cfg, constrain, tokens=batch["tokens"])
+        return logits, aux
+
+    prefill = train_logits
+
+    def decode(params, batch, constrain=_noop_constrain):
+        logits, new_caches, _ = transformer.decoder_apply(
+            params, cfg, constrain, tokens=batch["token"],
+            caches=batch["caches"], cache_index=batch["index"],
+            position_offset=batch["index"])
+        return logits, new_caches
+
+    def cache_shapes(batch, max_seq, dtype=jnp.bfloat16):
+        return transformer.decoder_cache_shapes(cfg, batch, max_seq, dtype)
+
+    def input_specs(shape: ShapeConfig):
+        out = _token_specs(shape, cfg)
+        if shape.kind == "decode":
+            out["caches"] = cache_shapes(shape.global_batch, shape.seq_len)
+        return out
+
+    def input_axes(shape: ShapeConfig):
+        out = _token_axes(shape)
+        if shape.kind == "decode":
+            out["caches"] = transformer.decoder_cache_axes(cfg)
+        return out
+
+    return Model(cfg, specs, init, train_logits, prefill, decode,
+                 cache_shapes, input_specs, input_axes)
+
+
+# ---------------------------------------------------------------------------
+# vlm (paligemma): stubbed SigLIP patch embeddings + prefix-bidirectional LM
+# ---------------------------------------------------------------------------
+
+
+def _build_vlm(cfg: ModelConfig) -> Model:
+    specs = transformer.decoder_specs(cfg)
+    P = cfg.vision_patches
+
+    def init(rng, dtype=jnp.bfloat16):
+        return layers.init_params(rng, specs, dtype)
+
+    def _embeds(params, batch):
+        tok = layers.embed_lookup(params, batch["tokens"], cfg.d_model)
+        patches = batch["patch_embeds"].astype(tok.dtype)
+        return jnp.concatenate([patches, tok], axis=1)
+
+    def train_logits(params, batch, constrain=_noop_constrain):
+        x = _embeds(params, batch)
+        logits, _, aux = transformer.decoder_apply(
+            params, cfg, constrain, inputs_embeds=x, prefix_len=P)
+        return logits[:, P:, :], aux      # text positions only
+
+    prefill = train_logits
+
+    def decode(params, batch, constrain=_noop_constrain):
+        # the prefix lives in the KV cache after prefill; decoding is causal
+        logits, new_caches, _ = transformer.decoder_apply(
+            params, cfg, constrain, tokens=batch["token"],
+            caches=batch["caches"], cache_index=batch["index"],
+            position_offset=batch["index"])
+        return logits, new_caches
+
+    def cache_shapes(batch, max_seq, dtype=jnp.bfloat16):
+        return transformer.decoder_cache_shapes(cfg, batch, max_seq, dtype)
+
+    def input_specs(shape: ShapeConfig):
+        out = _token_specs(shape, cfg)
+        bf = jnp.bfloat16
+        B = shape.global_batch
+        if shape.kind in ("train", "prefill"):
+            # patches replace the first P positions of the text budget
+            S_text = shape.seq_len - P
+            out["tokens"] = jax.ShapeDtypeStruct((B, S_text), jnp.int32)
+            if shape.kind == "train":
+                out["labels"] = jax.ShapeDtypeStruct((B, S_text), jnp.int32)
+            out["patch_embeds"] = jax.ShapeDtypeStruct((B, P, cfg.d_model), bf)
+        else:
+            out["caches"] = cache_shapes(B, shape.seq_len)
+        return out
+
+    def input_axes(shape: ShapeConfig):
+        out = _token_axes(shape)
+        if shape.kind in ("train", "prefill"):
+            out["patch_embeds"] = ("act_batch", None, None)
+        else:
+            out["caches"] = transformer.decoder_cache_axes(cfg)
+        return out
+
+    return Model(cfg, specs, init, train_logits, prefill, decode,
+                 cache_shapes, input_specs, input_axes)
+
+
+# ---------------------------------------------------------------------------
+# whisper (enc-dec, stubbed conv frontend)
+# ---------------------------------------------------------------------------
+
+
+def _build_whisper(cfg: ModelConfig) -> Model:
+    specs = whisper.whisper_specs(cfg)
+
+    def init(rng, dtype=jnp.bfloat16):
+        return layers.init_params(rng, specs, dtype)
+
+    def train_logits(params, batch, constrain=_noop_constrain):
+        enc = whisper.encode(params, batch["frames"], cfg, constrain)
+        logits, _ = whisper.decode_full(params, batch["tokens"], enc, cfg,
+                                        constrain)
+        return logits, transformer._zero_aux()
+
+    prefill = train_logits
+
+    def decode(params, batch, constrain=_noop_constrain):
+        caches = batch["caches"]
+        logits, new_self = whisper.decode_full(
+            params, batch["token"], None, cfg, constrain,
+            caches=caches["self"], cache_index=batch["index"],
+            cross_cache=caches["cross"])
+        return logits, {"self": new_self, "cross": caches["cross"]}
+
+    def cache_shapes(batch, max_seq, dtype=jnp.bfloat16):
+        return {"self": whisper.self_cache_shapes(cfg, batch, max_seq, dtype),
+                "cross": whisper.cross_cache_shapes(cfg, batch, dtype)}
+
+    def input_specs(shape: ShapeConfig):
+        out = _token_specs(shape, cfg)
+        bf = jnp.bfloat16
+        B = shape.global_batch
+        if shape.kind in ("train", "prefill"):
+            out["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.encoder_seq, cfg.d_model), bf)
+        else:
+            out["caches"] = cache_shapes(B, shape.seq_len)
+        return out
+
+    def input_axes(shape: ShapeConfig):
+        out = _token_axes(shape)
+        if shape.kind in ("train", "prefill"):
+            out["frames"] = ("act_batch", None, None)
+        else:
+            attn_axes = {"k": (None, "act_batch", "cache_seq", "kv_heads", None),
+                         "v": (None, "act_batch", "cache_seq", "kv_heads", None),
+                         "pos": (None, None)}
+            cross_axes = {"k": (None, "act_batch", None, "kv_heads", None),
+                          "v": (None, "act_batch", None, "kv_heads", None)}
+            out["caches"] = {"self": attn_axes, "cross": cross_axes}
+        return out
+
+    return Model(cfg, specs, init, train_logits, prefill, decode,
+                 cache_shapes, input_specs, input_axes)
+
+
+# ---------------------------------------------------------------------------
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.family == "whisper":
+        return _build_whisper(cfg)
+    if cfg.family == "vlm":
+        return _build_vlm(cfg)
+    return _build_decoder(cfg)

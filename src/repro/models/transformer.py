@@ -1,0 +1,246 @@
+"""Generic pattern-scan decoder LM.
+
+A model is ``n_groups`` repetitions of a super-block *pattern* (tuple of
+LayerSpec). Parameters for each pattern position are stacked across groups and
+consumed by one ``jax.lax.scan`` — HLO size and compile time are O(pattern),
+independent of depth (72-layer Jamba compiles as one 8-layer body).
+
+Covers: gemma2 (local/global alternation, softcaps, sandwich norms),
+llama-family GQA dense (codeqwen/yi/minitron), llama4-style MoE, jamba
+(mamba+attn 1:7 with MoE), xLSTM (mLSTM/sLSTM), and the paligemma decoder
+(prefix-bidirectional attention over stubbed patch embeddings).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.common import LayerSpec, ModelConfig
+from repro.models import attention, layers, mamba, moe, xlstm
+from repro.models.layers import ParamSpec, Specs
+
+AUX_KEYS = ("load_balance", "router_z", "dropped_frac")
+
+
+# ---------------------------------------------------------------------------
+# specs
+# ---------------------------------------------------------------------------
+
+
+def _layer_specs(cfg: ModelConfig, spec: LayerSpec, path: str) -> Specs:
+    out: Specs = {}
+    out.update(layers.rms_norm_specs(cfg.d_model, f"{path}/pre_norm"))
+    if cfg.sandwich_norm:
+        out.update(layers.rms_norm_specs(cfg.d_model, f"{path}/post_norm"))
+    if spec.mixer in ("attn", "attn_local"):
+        out.update(attention.attn_specs(cfg, f"{path}/attn"))
+    elif spec.mixer == "mamba":
+        out.update(mamba.mamba_specs(cfg, f"{path}/mamba"))
+    elif spec.mixer == "mlstm":
+        out.update(xlstm.mlstm_specs(cfg, f"{path}/mlstm"))
+    elif spec.mixer == "slstm":
+        out.update(xlstm.slstm_specs(cfg, f"{path}/slstm"))
+    if spec.ffn != "none":
+        out.update(layers.rms_norm_specs(cfg.d_model, f"{path}/pre_ffn_norm"))
+        if cfg.sandwich_norm:
+            out.update(layers.rms_norm_specs(cfg.d_model,
+                                             f"{path}/post_ffn_norm"))
+        if spec.ffn == "dense":
+            out.update(layers.ffn_specs(cfg.d_model, cfg.d_ff, cfg.act,
+                                        f"{path}/ffn", gated=cfg.ffn_gated))
+        else:
+            out.update(moe.moe_specs(cfg, f"{path}/moe"))
+    return out
+
+
+def decoder_specs(cfg: ModelConfig) -> Specs:
+    specs: Specs = {}
+    specs.update(layers.embed_specs(cfg.padded_vocab, cfg.d_model,
+                                    cfg.tie_embeddings))
+    block: Specs = {}
+    for i, spec in enumerate(cfg.pattern):
+        block.update(_layer_specs(cfg, spec, f"blocks/{i}"))
+    specs.update(layers.stacked(block, cfg.n_groups))
+    specs.update(layers.rms_norm_specs(cfg.d_model, "final_norm"))
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _zero_aux() -> Dict[str, jax.Array]:
+    return {k: jnp.zeros((), jnp.float32) for k in AUX_KEYS}
+
+
+def _apply_layer(spec: LayerSpec, p: Dict, x: jax.Array, cfg: ModelConfig,
+                 constrain, positions: jax.Array,
+                 cache: Optional[Dict], cache_index, prefix_len: int,
+                 ) -> Tuple[jax.Array, Optional[Dict], Dict]:
+    aux = _zero_aux()
+    h = layers.rms_norm(x, p["pre_norm"], cfg.norm_eps)
+    if spec.mixer in ("attn", "attn_local"):
+        out, new_cache = attention.attn_apply(
+            p["attn"], h, cfg, spec.mixer, positions, constrain,
+            cache=cache, cache_index=cache_index, prefix_len=prefix_len,
+            impl=cfg.attention_impl)
+    elif spec.mixer == "mamba":
+        out, new_cache = mamba.mamba_apply(p["mamba"], h, cfg, constrain,
+                                           cache=cache)
+    elif spec.mixer == "mlstm":
+        out, new_cache = xlstm.mlstm_apply(p["mlstm"], h, cfg, constrain,
+                                           cache=cache)
+    elif spec.mixer == "slstm":
+        out, new_cache = xlstm.slstm_apply(p["slstm"], h, cfg, constrain,
+                                           cache=cache)
+    else:
+        raise ValueError(spec.mixer)
+    if cfg.sandwich_norm:
+        out = layers.rms_norm(out, p["post_norm"], cfg.norm_eps)
+    x = x + out
+    x = constrain(x, ("act_batch", "act_seq", "act_embed"))
+    if spec.ffn != "none":
+        h = layers.rms_norm(x, p["pre_ffn_norm"], cfg.norm_eps)
+        if spec.ffn == "dense":
+            f = layers.ffn_apply(p["ffn"], h, cfg.act)
+        else:
+            f, moe_aux = moe.moe_apply(p["moe"], h, cfg, constrain)
+            for k in moe_aux:
+                aux[k] = aux[k] + moe_aux[k]
+        if cfg.sandwich_norm:
+            f = layers.rms_norm(f, p["post_ffn_norm"], cfg.norm_eps)
+        x = x + f
+        x = constrain(x, ("act_batch", "act_seq", "act_embed"))
+    return x, new_cache, aux
+
+
+def decoder_apply(params: Dict, cfg: ModelConfig, constrain,
+                  tokens: Optional[jax.Array] = None,
+                  inputs_embeds: Optional[jax.Array] = None,
+                  caches: Optional[Dict] = None,
+                  cache_index=None,
+                  prefix_len: int = 0,
+                  position_offset=None,
+                  ) -> Tuple[jax.Array, Optional[Dict], Dict]:
+    """Returns (logits, new_caches, aux). Supply tokens OR inputs_embeds."""
+    if inputs_embeds is None:
+        x = layers.embed_lookup(params, tokens, cfg.d_model)
+    else:
+        x = inputs_embeds
+    B, S, _ = x.shape
+    x = constrain(x, ("act_batch", "act_seq", "act_embed"))
+    if position_offset is None:
+        position_offset = jnp.zeros((), jnp.int32)
+    position_offset = jnp.asarray(position_offset)
+    if position_offset.ndim == 1:          # per-slot (continuous batching)
+        positions = position_offset[:, None] + jnp.arange(S)[None, :]
+    else:
+        positions = position_offset + jnp.arange(S)[None, :]
+    positions = jnp.broadcast_to(positions, (B, S))
+
+    remat_block = cfg.remat in ("block", "full")
+
+    def group_body(carry, xs):
+        x, aux = carry
+        gp, gcache = xs
+        new_caches = {}
+        for i, spec in enumerate(cfg.pattern):
+            layer_cache = None if gcache is None else gcache[str(i)]
+
+            def layer_fn(x_, p_, c_):
+                return _apply_layer(spec, p_, x_, cfg, constrain, positions,
+                                    c_, cache_index, prefix_len)
+
+            if remat_block and gcache is None:
+                layer_fn = jax.checkpoint(layer_fn,
+                                          policy=jax.checkpoint_policies
+                                          .nothing_saveable
+                                          if cfg.remat == "full" else None)
+            x, nc, a = layer_fn(x, gp[str(i)], layer_cache)
+            new_caches[str(i)] = nc if nc is not None else 0
+            for k in AUX_KEYS:
+                aux[k] = aux[k] + a[k]
+        return (x, aux), new_caches
+
+    xs = (params["blocks"], caches)
+    (x, aux), new_caches = jax.lax.scan(group_body, (x, _zero_aux()), xs,
+                                        unroll=(cfg.n_groups
+                                                if cfg.scan_unroll else 1))
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = layers.unembed(params, x, cfg.tie_embeddings, cfg.final_softcap)
+    return logits, (new_caches if caches is not None else None), aux
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+
+def decoder_cache_shapes(cfg: ModelConfig, batch: int, max_seq: int,
+                         dtype=jnp.bfloat16, per_slot: bool = False) -> Dict:
+    """Stacked (leading n_groups dim) cache ShapeDtypeStructs per position.
+
+    per_slot=True allocates per-batch-row position tracking (continuous
+    batching: every slot decodes at its own index)."""
+    from repro.models.mamba import mamba_cache_shape
+    from repro.models.xlstm import mlstm_cache_shape, slstm_cache_shape
+
+    G = cfg.n_groups
+    out = {}
+    for i, spec in enumerate(cfg.pattern):
+        if spec.mixer in ("attn", "attn_local"):
+            # local layers only ever need `window` slots (ring buffer with
+            # absolute-position tracking) — this is what makes gemma2's
+            # long_500k decode memory-feasible.
+            seq = max_seq
+            if spec.mixer == "attn_local" and cfg.window > 0:
+                seq = min(max_seq, cfg.window)
+            pos_shape = (G, batch, seq) if per_slot else (G, seq)
+            out[str(i)] = {
+                "k": jax.ShapeDtypeStruct(
+                    (G, batch, seq, cfg.n_kv_heads, cfg.head_dim), dtype),
+                "v": jax.ShapeDtypeStruct(
+                    (G, batch, seq, cfg.n_kv_heads, cfg.head_dim), dtype),
+                "pos": jax.ShapeDtypeStruct(pos_shape, jnp.int32),
+            }
+        elif spec.mixer == "mamba":
+            shp = mamba_cache_shape(cfg, batch)
+            out[str(i)] = {k: jax.ShapeDtypeStruct((G,) + s, jnp.float32)
+                           for k, s in shp.items()}
+        elif spec.mixer == "mlstm":
+            shp = mlstm_cache_shape(cfg, batch)
+            out[str(i)] = {k: jax.ShapeDtypeStruct((G,) + s, jnp.float32)
+                           for k, s in shp.items()}
+        elif spec.mixer == "slstm":
+            shp = slstm_cache_shape(cfg, batch)
+            out[str(i)] = {k: jax.ShapeDtypeStruct((G,) + s, jnp.float32)
+                           for k, s in shp.items()}
+    return out
+
+
+def decoder_cache_axes(cfg: ModelConfig) -> Dict:
+    """Logical-axis pytree mirroring decoder_cache_shapes' structure."""
+    out = {}
+    for i, spec in enumerate(cfg.pattern):
+        if spec.mixer in ("attn", "attn_local"):
+            out[str(i)] = {
+                "k": (None, "act_batch", "cache_seq", "kv_heads", None),
+                "v": (None, "act_batch", "cache_seq", "kv_heads", None),
+                "pos": (None, None),
+            }
+        elif spec.mixer == "mamba":
+            out[str(i)] = {"h": (None, "act_batch", "act_inner", None),
+                           "conv": (None, "act_batch", None, "act_inner")}
+        elif spec.mixer == "mlstm":
+            out[str(i)] = {"C": (None, "act_batch", "act_heads", None, None),
+                           "n": (None, "act_batch", "act_heads", None),
+                           "m": (None, "act_batch", "act_heads"),
+                           "conv": (None, "act_batch", None, "act_inner")}
+        elif spec.mixer == "slstm":
+            out[str(i)] = {k: (None, "act_batch", None)
+                           for k in ("h", "c", "n", "m")}
+    return out

@@ -1,0 +1,269 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory with recurrent state mixing).
+
+TPU adaptation: the paper's CUDA kernels become (a) a chunkwise-parallel
+formulation for mLSTM — intra-chunk attention-like matmuls on the MXU +
+cross-chunk recurrence via lax.scan, with per-chunk exponential-gating
+stabilization in log space; (b) a checkpointed lax.scan for sLSTM (inherently
+sequential due to recurrent weights). Both expose O(1)-state decode paths.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.common import ModelConfig
+from repro.models.layers import ParamSpec, Specs
+
+NEG = -1e30
+
+
+def _mdims(cfg: ModelConfig) -> Tuple[int, int]:
+    dm = int(cfg.xlstm.proj_factor_m * cfg.d_model)
+    dk = dm // cfg.n_heads
+    return dm, dk
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_specs(cfg: ModelConfig, path: str = "mlstm") -> Specs:
+    d = cfg.d_model
+    dm, dk = _mdims(cfg)
+    H = cfg.n_heads
+    return {
+        f"{path}/up": ParamSpec((d, 2 * dm), ("embed", "inner")),
+        f"{path}/conv_w": ParamSpec((4, dm), (None, "inner")),
+        f"{path}/conv_b": ParamSpec((dm,), ("inner",), init="zeros"),
+        f"{path}/wq": ParamSpec((dm, dm), ("inner", "inner")),
+        f"{path}/wk": ParamSpec((dm, dm), ("inner", "inner")),
+        f"{path}/wv": ParamSpec((dm, dm), ("inner", "inner")),
+        f"{path}/wi": ParamSpec((dm, H), ("inner", "heads"), init="small"),
+        f"{path}/wf": ParamSpec((dm, H), ("inner", "heads"), init="small"),
+        f"{path}/fb": ParamSpec((H,), ("heads",), init="ones"),
+        f"{path}/norm": ParamSpec((dm,), ("inner",), init="zeros"),
+        f"{path}/down": ParamSpec((dm, d), ("inner", "embed")),
+    }
+
+
+def _mlstm_chunk(carry, xs, *, dk: int):
+    """One chunk of the stabilized mLSTM recurrence.
+
+    carry: C (B,H,dk,dv) stabilized, n (B,H,dk), m (B,H).
+    xs: q,k,v (B,Q,H,dk), li/lf (B,Q,H) log input/forget gates.
+    """
+    C, n, m = carry
+    q, k, v, li, lf = xs
+    B, Q, H, _ = q.shape
+    cs = jnp.cumsum(lf, axis=1)                       # (B,Q,H) log decay
+    a = li - cs                                       # per-source term
+    r = jax.lax.cummax(a, axis=1)
+    m_t = jnp.maximum(cs + r, cs + m[:, None, :])     # (B,Q,H)
+    # intra-chunk: w[t,s] = exp(cs_t - cs_s + li_s - m_t), s <= t
+    logw = (cs[:, :, None, :] - cs[:, None, :, :]
+            + li[:, None, :, :] - m_t[:, :, None, :])  # (B,Q,Q,H)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    w = jnp.where(mask[None, :, :, None], jnp.exp(logw), 0.0)
+    scores = jnp.einsum("bthd,bshd->btsh", q, k,
+                        preferred_element_type=jnp.float32) / math.sqrt(dk)
+    h_intra = jnp.einsum("btsh,btsh,bshv->bthv", scores, w, v,
+                         preferred_element_type=jnp.float32)
+    n_intra = jnp.einsum("btsh,bshd->bthd", w, k.astype(jnp.float32),
+                         preferred_element_type=jnp.float32)
+    # boundary contribution
+    bscale = jnp.exp(cs + m[:, None, :] - m_t)        # (B,Q,H)
+    h_bound = jnp.einsum("bthd,bhdv->bthv", q.astype(jnp.float32), C,
+                         preferred_element_type=jnp.float32) / math.sqrt(dk)
+    h_bound = h_bound * bscale[..., None]
+    n_vec = n_intra + n[:, None, :, :] * bscale[..., None]
+    denom = jnp.einsum("bthd,bthd->bth", q.astype(jnp.float32), n_vec)
+    denom = jnp.maximum(jnp.abs(denom), jnp.exp(-m_t))
+    h = (h_intra + h_bound) / denom[..., None]        # (B,Q,H,dv)
+    # carry update to chunk end
+    m_new = jnp.maximum(cs[:, -1] + r[:, -1], cs[:, -1] + m)
+    wN = jnp.exp(cs[:, -1:, :] - cs + li - m_new[:, None, :])  # (B,Q,H)
+    C_new = (jnp.einsum("bsh,bshd,bshv->bhdv", wN, k.astype(jnp.float32), v,
+                        preferred_element_type=jnp.float32)
+             + C * jnp.exp(cs[:, -1] + m - m_new)[..., None, None])
+    n_new = (jnp.einsum("bsh,bshd->bhd", wN, k.astype(jnp.float32))
+             + n * jnp.exp(cs[:, -1] + m - m_new)[..., None])
+    return (C_new, n_new, m_new), h
+
+
+def mlstm_apply(p: Dict, x: jax.Array, cfg: ModelConfig, constrain,
+                cache: Optional[Dict] = None
+                ) -> Tuple[jax.Array, Optional[Dict]]:
+    B, S, D = x.shape
+    dm, dk = _mdims(cfg)
+    H = cfg.n_heads
+    xz = jnp.einsum("bsd,de->bse", x, p["up"],
+                    preferred_element_type=jnp.float32).astype(x.dtype)
+    u, z = jnp.split(xz, 2, axis=-1)
+    u = constrain(u, ("act_batch", "act_seq", "act_inner"))
+    # causal conv front (like the paper's block)
+    if cache is None:
+        dc = p["conv_w"].shape[0]
+        pad = jnp.pad(u.astype(jnp.float32), ((0, 0), (dc - 1, 0), (0, 0)))
+        c = jax.lax.conv_general_dilated(
+            pad, p["conv_w"].astype(jnp.float32)[:, None, :], (1,), "VALID",
+            dimension_numbers=("NWC", "WIO", "NWC"), feature_group_count=dm)
+        c = c + p["conv_b"].astype(jnp.float32)
+        conv_cache = None
+    else:
+        window = jnp.concatenate([cache["conv"], u.astype(jnp.float32)], 1)
+        c = (jnp.einsum("bci,ci->bi", window, p["conv_w"].astype(jnp.float32))
+             + p["conv_b"].astype(jnp.float32))[:, None]
+        conv_cache = window[:, 1:]
+    c = jax.nn.silu(c).astype(x.dtype)
+
+    q = jnp.einsum("bsi,ij->bsj", c, p["wq"],
+                   preferred_element_type=jnp.float32).astype(jnp.float32)
+    k = jnp.einsum("bsi,ij->bsj", c, p["wk"],
+                   preferred_element_type=jnp.float32).astype(jnp.float32)
+    v = jnp.einsum("bsi,ij->bsj", u, p["wv"],
+                   preferred_element_type=jnp.float32).astype(jnp.float32)
+    q, k, v = (t.reshape(B, S, H, dk) for t in (q, k, v))
+    li = jnp.einsum("bsi,ih->bsh", c, p["wi"],
+                    preferred_element_type=jnp.float32)
+    lf = jax.nn.log_sigmoid(
+        jnp.einsum("bsi,ih->bsh", c, p["wf"],
+                   preferred_element_type=jnp.float32)
+        + p["fb"].astype(jnp.float32))
+
+    if cache is None:
+        from repro.models.mamba import pick_chunk
+
+        Q = pick_chunk(S, cfg.xlstm.chunk)
+        nchunks = S // Q
+        xs = tuple(t.reshape(B, nchunks, Q, *t.shape[2:]).transpose(
+            (1, 0) + tuple(range(2, t.ndim + 1))) for t in (q, k, v, li, lf))
+        carry = (jnp.zeros((B, H, dk, dk), jnp.float32),
+                 jnp.zeros((B, H, dk), jnp.float32),
+                 jnp.full((B, H), 0.0, jnp.float32))
+        import functools
+
+        chunk_fn = jax.checkpoint(functools.partial(_mlstm_chunk, dk=dk))
+        _, hQ = jax.lax.scan(chunk_fn, carry, xs)
+        h = hQ.transpose(1, 0, 2, 3, 4).reshape(B, S, H, dk)
+        new_cache = None
+    else:
+        C, n, m = cache["C"], cache["n"], cache["m"]
+        (C, n, m), h = _mlstm_chunk((C, n, m),
+                                    (q, k, v, li, lf), dk=dk)
+        new_cache = {"C": C, "n": n, "m": m, "conv": conv_cache}
+    h = h.reshape(B, S, dm)
+    # per-head norm (GroupNorm-style via rms over head dim)
+    hh = h.reshape(B, S, H, dk)
+    var = jnp.mean(hh ** 2, axis=-1, keepdims=True)
+    hh = hh * jax.lax.rsqrt(var + cfg.norm_eps)
+    h = hh.reshape(B, S, dm) * (1.0 + p["norm"].astype(jnp.float32))
+    out = h * jax.nn.silu(z.astype(jnp.float32))
+    return (jnp.einsum("bsi,id->bsd", out.astype(x.dtype), p["down"],
+                       preferred_element_type=jnp.float32).astype(x.dtype),
+            new_cache)
+
+
+def mlstm_cache_shape(cfg: ModelConfig, batch: int) -> Dict:
+    dm, dk = _mdims(cfg)
+    return {"C": (batch, cfg.n_heads, dk, dk), "n": (batch, cfg.n_heads, dk),
+            "m": (batch, cfg.n_heads), "conv": (batch, 3, dm)}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_specs(cfg: ModelConfig, path: str = "slstm") -> Specs:
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    pf = cfg.xlstm.proj_factor_s
+    dff = int(pf * d)
+    return {
+        f"{path}/wx": ParamSpec((d, 4 * d), ("embed", "inner")),
+        f"{path}/r": ParamSpec((4, H, dh, dh), (None, "heads", None, None)),
+        f"{path}/b": ParamSpec((4 * d,), ("inner",), init="zeros"),
+        f"{path}/norm": ParamSpec((d,), ("embed",), init="zeros"),
+        f"{path}/ffn_wi": ParamSpec((d, 2 * dff), ("embed", "mlp")),
+        f"{path}/ffn_wo": ParamSpec((dff, d), ("mlp", "embed")),
+    }
+
+
+def _slstm_step(p, carry, gx, H: int, dh: int):
+    h, c, n, m = carry                                # (B,D) each, m (B,D)
+    B = h.shape[0]
+    hh = h.reshape(B, H, dh)
+    rec = jnp.einsum("bhd,ghde->bghe", hh, p["r"].astype(jnp.float32))
+    rec = rec.reshape(B, 4, H * dh)
+    g = gx + rec.reshape(B, 4 * H * dh)               # (B,4D)
+    zt, it, ft, ot = jnp.split(g, 4, axis=-1)
+    zt = jnp.tanh(zt)
+    ot = jax.nn.sigmoid(ot)
+    lf = jax.nn.log_sigmoid(ft)                       # forget in log space
+    m_new = jnp.maximum(lf + m, it)
+    fi = jnp.exp(lf + m - m_new)
+    ii = jnp.exp(it - m_new)
+    c_new = fi * c + ii * zt
+    n_new = fi * n + ii
+    h_new = ot * c_new / jnp.maximum(n_new, 1e-6)
+    return (h_new, c_new, n_new, m_new)
+
+
+def slstm_apply(p: Dict, x: jax.Array, cfg: ModelConfig, constrain,
+                cache: Optional[Dict] = None
+                ) -> Tuple[jax.Array, Optional[Dict]]:
+    B, S, D = x.shape
+    H = cfg.n_heads
+    dh = D // H
+    gx = jnp.einsum("bsd,de->bse", x, p["wx"],
+                    preferred_element_type=jnp.float32) \
+        + p["b"].astype(jnp.float32)                  # (B,S,4D)
+    if cache is None:
+        from repro.models.mamba import pick_chunk
+
+        carry = tuple(jnp.zeros((B, D), jnp.float32) for _ in range(3)) \
+            + (jnp.full((B, D), NEG, jnp.float32),)
+        Q = pick_chunk(S, cfg.xlstm.chunk)
+        n_chunks = S // Q
+        gQ = gx.reshape(B, n_chunks, Q, 4 * D).transpose(1, 2, 0, 3)
+
+        @jax.checkpoint
+        def chunk(carry, g_chunk):
+            def step(cr, g):
+                cr = _slstm_step(p, cr, g, H, dh)
+                return cr, cr[0]
+
+            carry, hs = jax.lax.scan(step, carry, g_chunk)
+            return carry, hs
+
+        carry, hQ = jax.lax.scan(chunk, carry, gQ)    # (n,Q,B,D)
+        h = hQ.transpose(2, 0, 1, 3).reshape(B, S, D)
+        new_cache = None
+    else:
+        carry = (cache["h"], cache["c"], cache["n"], cache["m"])
+        carry = _slstm_step(p, carry, gx[:, 0], H, dh)
+        h = carry[0][:, None, :]
+        new_cache = {"h": carry[0], "c": carry[1], "n": carry[2],
+                     "m": carry[3]}
+    h = h * (1.0 + p["norm"].astype(jnp.float32))
+    h = h.astype(x.dtype)
+    # post-FFN (gated, proj factor 4/3)
+    ff = jnp.einsum("bsd,df->bsf", h, p["ffn_wi"],
+                    preferred_element_type=jnp.float32)
+    f1, f2 = jnp.split(ff, 2, axis=-1)
+    ff = jax.nn.gelu(f1) * f2
+    out = jnp.einsum("bsf,fd->bsd", ff.astype(x.dtype), p["ffn_wo"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    return out, new_cache
+
+
+def slstm_cache_shape(cfg: ModelConfig, batch: int) -> Dict:
+    d = cfg.d_model
+    return {"h": (batch, d), "c": (batch, d), "n": (batch, d),
+            "m": (batch, d)}

@@ -1,0 +1,12 @@
+"""Training/serving substrate: optimizer, train_step, serve steps,
+fault-tolerant checkpointing."""
+from repro.train.optimizer import (OptimizerConfig, adamw_init, adamw_update,
+                                   cosine_schedule)
+from repro.train.train_step import TrainConfig, make_train_step, make_train_state
+from repro.train.serve_step import make_decode_step, make_prefill_step
+
+__all__ = [
+    "OptimizerConfig", "adamw_init", "adamw_update", "cosine_schedule",
+    "TrainConfig", "make_train_step", "make_train_state",
+    "make_decode_step", "make_prefill_step",
+]

@@ -1,0 +1,82 @@
+"""AdamW + schedules as plain pytree transforms (no external deps).
+
+Optimizer moments are f32 and inherit the parameter sharding (ZeRO-ish:
+params are already FSDP-sharded, so m/v are too — no extra memory rank).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    learning_rate: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def cosine_schedule(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    scale = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos
+    return cfg.learning_rate * warm * scale
+
+
+def adamw_init(params) -> Dict:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def adamw_update(cfg: OptimizerConfig, params, grads, opt_state
+                 ) -> Tuple[Dict, Dict, Dict[str, jax.Array]]:
+    count = opt_state["count"] + 1
+    lr = cosine_schedule(cfg, count)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mh = m / (1 - cfg.b1 ** count.astype(jnp.float32))
+        vh = v / (1 - cfg.b2 ** count.astype(jnp.float32))
+        step = mh / (jnp.sqrt(vh) + cfg.eps)
+        # decoupled weight decay (skip 1-D params: norms/biases)
+        if p.ndim > 1:
+            step = step + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+        return new_p, m, v
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(opt_state["m"])
+    flat_v = jax.tree.leaves(opt_state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m,
+                                                 flat_v)]
+    new_params = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_state = {"m": jax.tree.unflatten(tdef, [o[1] for o in out]),
+                 "v": jax.tree.unflatten(tdef, [o[2] for o in out]),
+                 "count": count}
+    return new_params, new_state, {"lr": lr, "grad_norm": gnorm}

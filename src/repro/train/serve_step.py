@@ -1,0 +1,181 @@
+"""Serving steps: prefill (full-sequence forward) and decode (one token
+against a ring-buffer KV cache), plus a batched greedy generation loop.
+
+decode_* dry-run shapes lower `decode_step` with a cache of seq_len (per the
+assignment); caches are donated so generation runs in place.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.common import ModelConfig
+from repro.distributed.sharding import ShardingPlan, make_constrain
+from repro.models.model_zoo import Model
+
+
+def make_prefill_step(model: Model, cfg: ModelConfig,
+                      plan: Optional[ShardingPlan] = None):
+    constrain = make_constrain(plan)
+
+    def prefill_step(params, batch) -> jax.Array:
+        logits, _ = model.prefill(params, batch, constrain)
+        return logits
+
+    return prefill_step
+
+
+def make_decode_step(model: Model, cfg: ModelConfig,
+                     plan: Optional[ShardingPlan] = None,
+                     sample: str = "greedy"):
+    constrain = make_constrain(plan)
+
+    def decode_step(params, batch) -> Tuple[jax.Array, Dict]:
+        """batch: {token (B,1), index (), caches} -> (next_token, caches)."""
+        logits, new_caches = model.decode(params, batch, constrain)
+        nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return nxt[:, None], new_caches
+
+    return decode_step
+
+
+def populate_caches_from_prefill(model: Model, cfg: ModelConfig, params,
+                                 tokens: jax.Array, max_seq: int,
+                                 constrain=lambda x, a: x) -> Dict:
+    """Build decode caches by replaying the prompt through decode steps.
+
+    O(S) decode steps — used by tests (prefill/decode equivalence) and the
+    small-model serving example; production prefill would write K/V directly.
+    """
+    B, S = tokens.shape
+    caches = jax.tree.map(lambda sds: jnp.zeros(sds.shape, sds.dtype),
+                          model.cache_shapes(B, max_seq))
+    caches = _reset_pos(caches)
+
+    def body(carry, t):
+        caches, idx = carry
+        _, caches = model.decode(params, {"token": t[:, None],
+                                          "index": idx, "caches": caches},
+                                 constrain)
+        return (caches, idx + 1), None
+
+    (caches, _), _ = jax.lax.scan(body, (caches, jnp.zeros((), jnp.int32)),
+                                  tokens.T)
+    return caches
+
+
+def _reset_pos(caches):
+    """Ring-buffer position slots start at -1 (empty)."""
+
+    def fix(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if name == "pos":
+            return jnp.full(leaf.shape, -1, leaf.dtype)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(fix, caches)
+
+
+class ContinuousBatcher:
+    """Continuous batching: a fixed pool of decode slots, each at its own
+    position; requests are admitted into free slots mid-flight and retired
+    independently (the vLLM-style serving loop, lockstep-free).
+
+    Requires an all-attention pattern (recurrent mixers would need masked
+    state updates; attention caches are masked via negative indices).
+    """
+
+    def __init__(self, model: Model, cfg: ModelConfig, params, n_slots: int,
+                 max_seq: int):
+        if any(s.mixer not in ("attn", "attn_local") for s in cfg.pattern):
+            raise ValueError("ContinuousBatcher supports attention-only "
+                             "architectures")
+        self.model = model
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        import jax.numpy as jnp
+
+        shapes = model.cache_shapes(n_slots, max_seq, dtype=jnp.float32)
+        self.caches = jax.tree.map(
+            lambda sds: jnp.zeros(sds.shape, sds.dtype), shapes)
+        # widen pos to per-slot (G, B, W)
+        self.caches = jax.tree_util.tree_map_with_path(
+            lambda p, leaf: (jnp.full(
+                (leaf.shape[0], n_slots, leaf.shape[1]), -1, jnp.int32)
+                if (hasattr(p[-1], "key") and p[-1].key == "pos") else leaf),
+            self.caches)
+        self.indices = jnp.full((n_slots,), -1, jnp.int32)   # -1 = free
+        self.tokens = jnp.zeros((n_slots, 1), jnp.int32)
+        self.done_at = [None] * n_slots
+        self.outputs = [[] for _ in range(n_slots)]
+        self._step = jax.jit(
+            lambda p, b: model.decode(p, b))
+
+    def admit(self, slot: int, prompt) -> None:
+        """Replay a prompt into one slot (others keep decoding positions
+        frozen via negative indices)."""
+        import numpy as np
+        import jax.numpy as jnp
+
+        prompt = np.asarray(prompt, np.int32)
+        for t, tok in enumerate(prompt):
+            idx = jnp.full((self.n_slots,), -1, jnp.int32).at[slot].set(t)
+            toks = self.tokens.at[slot, 0].set(int(tok))
+            logits, self.caches = self._step(
+                self.params, {"token": toks, "index": idx,
+                              "caches": self.caches})
+        self.indices = self.indices.at[slot].set(len(prompt) - 1)
+        self.tokens = self.tokens.at[slot, 0].set(int(prompt[-1]))
+        self.outputs[slot] = list(prompt)
+
+    def step(self) -> None:
+        """One decode step for every ACTIVE slot (free slots masked out)."""
+        import numpy as np
+        import jax.numpy as jnp
+
+        logits, self.caches = self._step(
+            self.params, {"token": self.tokens, "index": self.indices,
+                          "caches": self.caches})
+        nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        active = self.indices >= 0
+        self.tokens = jnp.where(active[:, None], nxt[:, None], self.tokens)
+        self.indices = jnp.where(active, self.indices + 1, self.indices)
+        for s in range(self.n_slots):
+            if bool(active[s]):
+                self.outputs[s].append(int(nxt[s]))
+
+    def retire(self, slot: int):
+        out = self.outputs[slot]
+        self.indices = self.indices.at[slot].set(-1)
+        self.outputs[slot] = []
+        return out
+
+
+def generate(model: Model, cfg: ModelConfig, params, prompt: jax.Array,
+             steps: int, max_seq: int,
+             plan: Optional[ShardingPlan] = None) -> jax.Array:
+    """Batched greedy generation: prompt (B, S0) -> (B, S0+steps)."""
+    constrain = make_constrain(plan)
+    decode_step = make_decode_step(model, cfg, plan)
+    B, S0 = prompt.shape
+    caches = populate_caches_from_prefill(model, cfg, params, prompt,
+                                          max_seq, constrain)
+
+    def body(carry, _):
+        token, idx, caches = carry
+        nxt, caches = decode_step(params, {"token": token, "index": idx,
+                                           "caches": caches})
+        return (nxt, idx + 1, caches), nxt[:, 0]
+
+    last = prompt[:, -1:]
+    (_, _, _), out = jax.lax.scan(
+        body, (last, jnp.asarray(S0 - 1, jnp.int32), caches), None,
+        length=steps)
+    # note: body consumes (token at idx) producing token idx+1; the first
+    # produced token duplicates position S0 (prompt replay wrote S0-1).
+    return jnp.concatenate([prompt, out.T], axis=1)

@@ -1,0 +1,143 @@
+"""train_step: loss -> grad -> AdamW, with microbatch gradient accumulation,
+remat (per-block, set in the model), buffer donation, and sharding-aware AOT
+lowering helpers used by both the real trainer and the dry-run.
+
+Distributed-optimization posture:
+  * gradients are bf16 end-to-end (params bf16 -> bf16 backward collectives;
+    the cross-pod all-reduce moves half the bytes of an f32 stack) while
+    optimizer moments stay f32;
+  * with grad accumulation, per-microbatch gradients accumulate in f32 inside
+    a lax.scan — XLA overlaps the (sharded-batch) reduction of microbatch i
+    with the compute of microbatch i+1;
+  * the whole TrainState is donated (params/opt updated in place).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.common import ModelConfig
+from repro.distributed.sharding import ShardingPlan, make_constrain
+from repro.models.model_zoo import Model
+from repro.train import optimizer as opt
+
+PAD_ID = -1
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: opt.OptimizerConfig = dataclasses.field(
+        default_factory=opt.OptimizerConfig)
+    microbatches: int = 1
+    load_balance_coef: float = 0.01
+    router_z_coef: float = 1e-3
+    logit_dtype: str = "float32"
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean CE over non-pad positions. logits (B,S,V) f32, labels (B,S)."""
+    mask = labels != PAD_ID
+    safe = jnp.where(mask, labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    ce = (logz - gold) * mask
+    return jnp.sum(ce) / jnp.maximum(jnp.sum(mask), 1)
+
+
+def make_loss_fn(model: Model, cfg: ModelConfig, tcfg: TrainConfig,
+                 constrain):
+    def loss_fn(params, batch) -> Tuple[jax.Array, Dict]:
+        logits, aux = model.train_logits(params, batch, constrain)
+        ce = cross_entropy(logits.astype(jnp.float32), batch["labels"])
+        loss = (ce + tcfg.load_balance_coef * aux["load_balance"]
+                + tcfg.router_z_coef * aux["router_z"])
+        metrics = {"loss": loss, "ce": ce,
+                   "load_balance": aux["load_balance"],
+                   "dropped_frac": aux["dropped_frac"]}
+        return loss, metrics
+
+    return loss_fn
+
+
+def make_train_state(model: Model, rng: jax.Array,
+                     dtype=jnp.bfloat16) -> Dict:
+    params = model.init(rng, dtype=dtype)
+    return {"params": params, "opt": opt.adamw_init(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def make_train_step(model: Model, cfg: ModelConfig,
+                    tcfg: Optional[TrainConfig] = None,
+                    plan: Optional[ShardingPlan] = None):
+    """Returns train_step(state, batch) -> (state, metrics). Donate state."""
+    tcfg = tcfg or TrainConfig()
+    constrain = make_constrain(plan)
+    loss_fn = make_loss_fn(model, cfg, tcfg, constrain)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def compute_grads(params, batch):
+        if tcfg.microbatches <= 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            return grads, metrics
+        mb = tcfg.microbatches
+
+        def reshape(x):
+            b = x.shape[0]
+            assert b % mb == 0, (b, mb)
+            return x.reshape(mb, b // mb, *x.shape[1:])
+
+        mb_batch = jax.tree.map(reshape, batch)
+
+        def body(acc, micro):
+            (loss, metrics), grads = grad_fn(params, micro)
+            acc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32) / mb, acc, grads)
+            return acc, metrics
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             params)
+        grads, metrics = jax.lax.scan(body, zeros, mb_batch)
+        grads = jax.tree.map(lambda g, p: g.astype(p.dtype), grads, params)
+        metrics = jax.tree.map(lambda m: m.mean(), metrics)
+        return grads, metrics
+
+    def train_step(state, batch):
+        grads, metrics = compute_grads(state["params"], batch)
+        params, opt_state, ometrics = opt.adamw_update(
+            tcfg.optimizer, state["params"], grads, state["opt"])
+        metrics.update(ometrics)
+        return {"params": params, "opt": opt_state,
+                "step": state["step"] + 1}, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# AOT helpers (shared by launch/train.py and launch/dryrun.py)
+# ---------------------------------------------------------------------------
+
+
+def state_axes(model: Model) -> Dict:
+    """Logical-axis pytree matching make_train_state's structure."""
+    from repro.models import layers as L
+
+    p_axes = L.axes_tree(model.specs)
+    return {"params": p_axes,
+            "opt": {"m": p_axes, "v": p_axes, "count": ()},
+            "step": ()}
+
+
+def state_shapes(model: Model, dtype=jnp.bfloat16) -> Dict:
+    from repro.models import layers as L
+
+    p_shapes = L.shapes_tree(model.specs, dtype)
+    f32 = lambda sds: jax.ShapeDtypeStruct(sds.shape, jnp.float32)
+    return {"params": p_shapes,
+            "opt": {"m": jax.tree.map(f32, p_shapes),
+                    "v": jax.tree.map(f32, p_shapes),
+                    "count": jax.ShapeDtypeStruct((), jnp.int32)},
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}

@@ -1,0 +1,131 @@
+"""Columnar substrate: property tests (hypothesis) + numpy oracles."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.columnar import ColumnTable, compute, utf8_column
+from repro.columnar.table import concat_tables, numeric_column
+
+
+# -- strategies ----------------------------------------------------------------
+
+_names = st.sampled_from(["alpha", "beta", "gamma", "delta"])
+
+
+@st.composite
+def tables(draw, max_rows=40):
+    n = draw(st.integers(0, max_rows))
+    n_num = draw(st.integers(1, 3))
+    data = {}
+    for i in range(n_num):
+        data[f"num{i}"] = draw(st.lists(
+            st.floats(-1e6, 1e6, allow_nan=False), min_size=n, max_size=n))
+    data["key"] = draw(st.lists(_names, min_size=n, max_size=n))
+    return ColumnTable.from_pydict(data)
+
+
+# -- zero-copy invariants ---------------------------------------------------
+
+
+@given(tables())
+@settings(max_examples=30, deadline=None)
+def test_projection_is_zero_copy(t):
+    cols = t.column_names[:2]
+    p = t.project(cols)
+    for c in cols:
+        assert p.column(c) is t.column(c)      # same Column object
+        assert p.column(c).data is t.column(c).data
+
+
+def test_with_column_shares_untouched_buffers():
+    t = ColumnTable.from_pydict({"a": [1.0, 2.0], "b": [3.0, 4.0]})
+    t2 = t.with_column("c", np.array([5.0, 6.0]))
+    assert t2.column("a").data is t.column("a").data
+
+
+# -- filter / sort / groupby vs numpy ------------------------------------------
+
+
+@given(tables())
+@settings(max_examples=30, deadline=None)
+def test_filter_matches_numpy(t):
+    if t.num_rows == 0:
+        return
+    expr = compute.parse_predicate("num0 > 0") if "num0" in t else None
+    got = compute.filter_table(t, "num0 > 0")
+    vals = np.asarray(t.column("num0").to_numpy())
+    assert got.num_rows == int((vals > 0).sum())
+
+
+@given(tables())
+@settings(max_examples=30, deadline=None)
+def test_groupby_sum_matches_numpy(t):
+    if t.num_rows == 0:
+        return
+    got = compute.group_by(t, ["key"], {"s": ("num0", "sum"),
+                                        "n": ("num0", "count")})
+    keys = np.asarray(t.column("key").to_numpy(), dtype=object)
+    vals = np.asarray(t.column("num0").to_numpy())
+    for k, s, n in zip(got.column("key").to_numpy(),
+                       got.column("s").to_numpy(),
+                       got.column("n").to_numpy()):
+        mask = keys == k
+        np.testing.assert_allclose(s, vals[mask].sum(), rtol=1e-9)
+        assert n == mask.sum()
+
+
+@given(tables())
+@settings(max_examples=20, deadline=None)
+def test_sort_by(t):
+    if t.num_rows == 0:
+        return
+    s = compute.sort_by(t, ["num0"])
+    vals = np.asarray(s.column("num0").to_numpy())
+    assert np.all(np.diff(vals) >= 0)
+
+
+@given(tables())
+@settings(max_examples=15, deadline=None)
+def test_concat_preserves_rows(a):
+    b = a.slice(0, a.num_rows // 2)
+    c = concat_tables([a, b])
+    assert c.num_rows == a.num_rows + b.num_rows
+    for n in a.column_names:
+        assert c.column(n).to_pylist() == (a.column(n).to_pylist()
+                                           + b.column(n).to_pylist())
+
+
+# -- joins, nulls, slices --------------------------------------------------------
+
+
+def test_hash_join_inner_and_left():
+    left = ColumnTable.from_pydict({"k": ["a", "b", "c"], "x": [1, 2, 3]})
+    right = ColumnTable.from_pydict({"k": ["b", "c", "c"], "y": [9, 8, 7]})
+    inner = compute.hash_join(left, right, ["k"])
+    assert inner.to_pydict() == {"k": ["b", "c", "c"], "x": [2, 3, 3],
+                                 "y": [9, 8, 7]}
+    left_j = compute.hash_join(left, right, ["k"], how="left")
+    assert left_j.num_rows == 4
+    assert left_j.column("y").to_pylist()[-1] is None
+
+
+def test_null_handling():
+    c = numeric_column([1.0, 2.0, 3.0], validity=[True, False, True])
+    assert c.null_count == 1
+    assert c.to_pylist() == [1.0, None, 3.0]
+    u = utf8_column(["hi", None, "yo"])
+    assert u.null_count == 1
+    assert u.to_pylist() == ["hi", None, "yo"]
+
+
+def test_slice_is_view_for_numeric():
+    t = ColumnTable.from_pydict({"a": np.arange(10.0)})
+    s = t.slice(2, 5)
+    assert s.num_rows == 5
+    assert s.column("a").data.base is not None   # numpy view
+
+
+def test_utf8_roundtrip_unicode():
+    vals = ["héllo", "wörld", "日本語", ""]
+    c = utf8_column(vals)
+    assert list(c.to_numpy()) == vals

@@ -1,0 +1,66 @@
+"""Predicate expression DSL + the Bauplan filter-string parser."""
+import numpy as np
+import pytest
+
+from repro.columnar import ColumnTable, col, lit, parse_predicate
+
+
+@pytest.fixture
+def t():
+    return ColumnTable.from_pydict({
+        "usd": [10.0, 20.0, 30.0, 40.0],
+        "country": ["IT", "FR", "US", "IT"],
+        "eventTime": [20230105, 20230120, 20230301, 20231225],
+    })
+
+
+def test_paper_filter_string(t):
+    e = parse_predicate("eventTime BETWEEN 2023-01-01 AND 2023-02-01")
+    mask = e.evaluate(t)
+    assert mask.tolist() == [True, True, False, False]
+
+
+def test_in_and_comparison(t):
+    e = parse_predicate("country IN ('IT','FR') AND usd >= 20")
+    assert e.evaluate(t).tolist() == [False, True, False, True]
+
+
+def test_or_not_parens(t):
+    e = parse_predicate("(usd > 35 OR usd < 15) AND NOT country = 'US'")
+    assert e.evaluate(t).tolist() == [True, False, False, True]
+
+
+def test_dsl_composition(t):
+    e = (col("usd") > 15) & col("country").isin(["IT"])
+    assert e.evaluate(t).tolist() == [False, False, False, True]
+    assert sorted(e.referenced_columns()) == ["country", "usd"]
+
+
+def test_date_comparison_ops(t):
+    e = parse_predicate("eventTime >= 2023-03-01")
+    assert e.evaluate(t).tolist() == [False, False, True, True]
+
+
+def test_pruning_from_stats():
+    e = parse_predicate("usd BETWEEN 100 AND 200")
+    assert not e.maybe_matches({"usd": {"min": 0, "max": 50}})
+    assert e.maybe_matches({"usd": {"min": 150, "max": 300}})
+    assert e.maybe_matches({})            # unknown stats -> conservative
+    e2 = parse_predicate("usd > 10 AND country IN ('IT')")
+    assert e2.maybe_matches({"usd": {"min": 50, "max": 60},
+                             "country": {"min": "DE", "max": "US"}})
+    assert not e2.maybe_matches({"usd": {"min": 0, "max": 5}})
+
+
+def test_parse_errors():
+    with pytest.raises(ValueError):
+        parse_predicate("usd >")
+    with pytest.raises(ValueError):
+        parse_predicate("usd ?? 3")
+
+
+def test_structural_equality_helper():
+    a = parse_predicate("usd > 3")
+    b = parse_predicate("usd > 3")
+    assert a.same_as(b)
+    assert not a.same_as(parse_predicate("usd > 4"))

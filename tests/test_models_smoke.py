@@ -1,0 +1,137 @@
+"""Per-architecture smoke tests (assignment requirement): reduced configs,
+one forward + one train step on CPU, asserting output shapes and no NaNs."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, SHAPES, applicable_shapes, get_config, smoke_config
+from repro.models import build_model
+from repro.train import train_step as ts
+
+
+def _batch_for(cfg, B=2, S=32, rng=None):
+    rng = rng or jax.random.PRNGKey(0)
+    batch = {"tokens": jax.random.randint(rng, (B, S), 0, cfg.vocab_size),
+             "labels": jax.random.randint(rng, (B, S), 0, cfg.vocab_size)}
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jax.random.normal(
+            rng, (B, cfg.vision_patches, cfg.d_model), jnp.float32)
+    if cfg.family == "whisper":
+        batch["frames"] = jax.random.normal(
+            rng, (B, cfg.encoder_seq, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_and_finite(arch):
+    cfg = smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0), dtype=jnp.float32)
+    B, S = 2, 32
+    batch = _batch_for(cfg, B, S)
+    logits, aux = jax.jit(model.train_logits)(params, batch)
+    assert logits.shape == (B, S, cfg.padded_vocab)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32))), arch
+    for k, v in aux.items():
+        assert np.isfinite(float(v)), (arch, k)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_one_train_step_updates_params(arch):
+    cfg = smoke_config(arch)
+    model = build_model(cfg)
+    state = ts.make_train_state(model, jax.random.PRNGKey(0),
+                                dtype=jnp.float32)
+    step = jax.jit(ts.make_train_step(model, cfg))
+    batch = _batch_for(cfg)
+    new_state, metrics = step(state, batch)
+    assert float(metrics["loss"]) > 0 and np.isfinite(float(metrics["loss"]))
+    assert int(new_state["step"]) == 1
+    # params actually moved
+    moved = jax.tree.reduce(
+        lambda a, b: a or b,
+        jax.tree.map(lambda a, b: bool(np.any(np.asarray(a) != np.asarray(b))),
+                     state["params"], new_state["params"]))
+    assert moved, arch
+    assert np.isfinite(float(metrics["grad_norm"]))
+
+
+def test_exact_assigned_configs_match_spec():
+    """Full configs carry the exact assigned hyperparameters."""
+    spec = {
+        "gemma2-27b": (46, 4608, 32, 16, 36864, 256000),
+        "codeqwen1.5-7b": (32, 4096, 32, 32, 13440, 92416),
+        "yi-9b": (48, 4096, 32, 4, 11008, 64000),
+        "minitron-4b": (32, 3072, 24, 8, 9216, 256000),
+        "xlstm-125m": (12, 768, 4, 4, 0, 50304),
+        "jamba-1.5-large-398b": (72, 8192, 64, 8, 24576, 65536),
+        "paligemma-3b": (18, 2048, 8, 1, 16384, 257216),
+        "whisper-small": (12, 768, 12, 12, 3072, 51865),
+        "llama4-maverick-400b-a17b": (48, 5120, 40, 8, 8192, 202048),
+        "llama4-scout-17b-a16e": (48, 5120, 40, 8, 8192, 202048),
+    }
+    for arch, (L, d, H, kv, ff, V) in spec.items():
+        cfg = get_config(arch)
+        assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                cfg.d_ff, cfg.vocab_size) == (L, d, H, kv, ff, V), arch
+
+
+def test_moe_config_details():
+    jb = get_config("jamba-1.5-large-398b")
+    assert jb.moe.num_experts == 16 and jb.moe.top_k == 2
+    mv = get_config("llama4-maverick-400b-a17b")
+    assert mv.moe.num_experts == 128 and mv.moe.top_k == 1
+    sc = get_config("llama4-scout-17b-a16e")
+    assert sc.moe.num_experts == 16 and sc.moe.top_k == 1
+
+
+def test_param_counts_match_published_sizes():
+    """Analytic parameter counts land near the published model sizes."""
+    # xlstm-125m: the assigned dims (12L x 768, pf_m=2) parameterize to
+    # ~100M with the xLSTM block layout — the model *name* is nominal.
+    expect = {"gemma2-27b": 27.2e9, "codeqwen1.5-7b": 8.2e9,
+              "yi-9b": 8.8e9, "minitron-4b": 4.2e9, "xlstm-125m": 0.100e9,
+              "jamba-1.5-large-398b": 398e9, "paligemma-3b": 2.5e9,
+              "whisper-small": 0.24e9,
+              "llama4-maverick-400b-a17b": 400e9,
+              "llama4-scout-17b-a16e": 108e9}
+    for arch, n in expect.items():
+        got = get_config(arch).param_count()
+        assert abs(got - n) / n < 0.15, (arch, got, n)
+
+
+def test_long_context_applicability():
+    long_ok = {a for a in ARCH_IDS
+               if "long_500k" in applicable_shapes(get_config(a))}
+    assert long_ok == {"gemma2-27b", "xlstm-125m", "jamba-1.5-large-398b"}
+
+
+def test_moe_dropping_and_balance_signals():
+    cfg = smoke_config("llama4-scout-17b-a16e")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(1), dtype=jnp.float32)
+    _, aux = jax.jit(model.train_logits)(params, _batch_for(cfg, 2, 64))
+    assert 0.0 <= float(aux["dropped_frac"]) < 1.0
+    assert float(aux["load_balance"]) >= 0.9   # ~1.0 when balanced
+
+
+def test_tiny_overfit_loss_decreases():
+    """A tiny decoder overfits 2 fixed batches — optimizer + model learn."""
+    cfg = smoke_config("codeqwen1.5-7b")
+    model = build_model(cfg)
+    tcfg = ts.TrainConfig(optimizer=ts.opt.OptimizerConfig(
+        learning_rate=1e-2, warmup_steps=2, total_steps=40))
+    step = jax.jit(ts.make_train_step(model, cfg, tcfg))
+    state = ts.make_train_state(model, jax.random.PRNGKey(0),
+                                dtype=jnp.float32)
+    batch = _batch_for(cfg, 2, 32)
+    first = None
+    for i in range(30):
+        state, metrics = step(state, batch)
+        if first is None:
+            first = float(metrics["loss"])
+    assert float(metrics["loss"]) < first * 0.7, (first,
+                                                  float(metrics["loss"]))

@@ -1,0 +1,50 @@
+"""The paper's own Fig.1 DAG exposed as a selectable config + the report
+renderer over real dry-run records."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.configs import paper_pipeline
+
+
+def test_paper_pipeline_config_runs(lakehouse, cluster):
+    catalog, _ = lakehouse
+    from repro.core.runtime import execute_run
+
+    cfg = paper_pipeline.smoke_config()
+    proj = paper_pipeline.build_project(cfg)
+    res = execute_run(proj, catalog=catalog, cluster=cluster)
+    out = res.read("usd_by_country", cluster)
+    assert out.num_rows == len(cfg.countries)
+    assert set(out.column("country").to_numpy()) == set(cfg.countries)
+
+
+def test_report_renderer_on_real_results():
+    path = os.path.join(os.path.dirname(__file__), "..", "results",
+                        "dryrun_results.json")
+    if not os.path.exists(path):
+        pytest.skip("dry-run results not generated")
+    from repro.launch import report
+
+    records = json.load(open(path))
+    ok = [r for r in records if r.get("status") == "ok"]
+    assert len(ok) >= 60
+    table = report.roofline_table(ok, "single")
+    assert "gemma2-27b" in table and "bottleneck" in table
+    dr = report.dryrun_table([r for r in ok if r["mesh"] == "multi"])
+    assert "all-gather" in dr or "all-reduce" in dr
+    summary = report.summarize(ok)
+    assert "bottleneck mix" in summary
+
+
+def test_collectives_estimator():
+    from repro.distributed.collectives import estimate_collective_bytes
+
+    assert estimate_collective_bytes(100, 1, "all-reduce") == 0
+    assert estimate_collective_bytes(160, 16, "all-reduce") == \
+        pytest.approx(2 * 160 * 15 / 16)
+    assert estimate_collective_bytes(160, 16, "all-gather") == \
+        pytest.approx(160 * 15 / 16)
+    assert estimate_collective_bytes(160, 16, "collective-permute") == 160

@@ -1,0 +1,142 @@
+"""Logical + physical planning: topology, pushdown, bin-packing, channels,
+content-addressed cache keys."""
+import numpy as np
+import pytest
+
+import repro as bp
+from repro.columnar import Catalog, ColumnTable, ObjectStore
+from repro.core import PlanError, Planner, WorkerProfile, build_logical_plan
+from repro.core.physical import FunctionTask, ScanTask
+
+
+@pytest.fixture
+def cat(tmp_path):
+    c = Catalog(ObjectStore(str(tmp_path / "s3")))
+    c.write_table("src", ColumnTable.from_pydict({
+        "a": np.arange(100.0), "b": np.arange(100.0), "c": ["x"] * 100}),
+        rows_per_file=50)
+    return c
+
+
+def diamond_project():
+    proj = bp.Project("diamond")
+
+    @proj.model()
+    def left(data=bp.Model("src", columns=["a"])):
+        return data
+
+    @proj.model()
+    def right(data=bp.Model("src", columns=["b"])):
+        return data
+
+    @proj.model()
+    def join(l=bp.Model("left"), r=bp.Model("right")):
+        return l
+
+    return proj
+
+
+def test_topology_and_order(cat):
+    logical = build_logical_plan(diamond_project())
+    assert logical.order.index("src") < logical.order.index("left")
+    assert logical.order.index("left") < logical.order.index("join")
+    assert logical.nodes["src"].kind == "source"
+    assert logical.targets == ["join"]
+
+
+def test_cycle_detection():
+    proj = bp.Project("cyc")
+
+    @proj.model()
+    def a(data=bp.Model("b")):
+        return data
+
+    @proj.model()
+    def b(data=bp.Model("a")):
+        return data
+
+    with pytest.raises(PlanError, match="cycle"):
+        build_logical_plan(proj)
+
+
+def test_column_union_pushdown(cat):
+    plan = Planner(cat, [WorkerProfile("w0")]).plan(
+        build_logical_plan(diamond_project()))
+    scan = plan.tasks["scan:src"]
+    assert isinstance(scan, ScanTask)
+    assert set(scan.columns) == {"a", "b"}     # union, NOT all columns (no c)
+
+
+def test_predicate_file_pruning(cat):
+    proj = bp.Project("pruned")
+
+    @proj.model()
+    def f(data=bp.Model("src", columns=["a"], filter="a >= 90")):
+        return data
+
+    plan = Planner(cat, [WorkerProfile("w0")]).plan(build_logical_plan(proj))
+    scan = plan.tasks["scan:src"]
+    assert len(scan.files) == 1                # second file only
+
+
+def test_cache_key_changes_with_filter_and_code(cat):
+    proj1 = bp.Project("p1")
+
+    @proj1.model()
+    def f(data=bp.Model("src", columns=["a"], filter="a > 1")):
+        return data
+
+    proj2 = bp.Project("p2")
+
+    @proj2.model()
+    def f(data=bp.Model("src", columns=["a"], filter="a > 2")):  # noqa: F811
+        return data
+
+    planner = Planner(cat, [WorkerProfile("w0")])
+    k1 = planner.plan(build_logical_plan(proj1)).tasks["func:f"].cache_key
+    k2 = planner.plan(build_logical_plan(proj2)).tasks["func:f"].cache_key
+    assert k1 != k2
+
+
+def test_colocation_prefers_zero_copy(cat):
+    proj = diamond_project()
+    planner = Planner(cat, [WorkerProfile("w0", memory_gb=64)])
+    plan = planner.plan(build_logical_plan(proj))
+    join = plan.tasks["func:join"]
+    assert all(e.channel == "zerocopy" for e in join.inputs)
+
+
+def test_cross_worker_uses_flight(cat):
+    """Tiny per-worker memory forces spreading -> flight edges appear."""
+    proj = diamond_project()
+    planner = Planner(cat, [WorkerProfile("w0", memory_gb=1e-5),
+                            WorkerProfile("w1", memory_gb=1e-5)])
+    plan = planner.plan(build_logical_plan(proj))
+    channels = {e.channel
+                for t in plan.tasks.values() if isinstance(t, FunctionTask)
+                for e in t.inputs}
+    assert "flight" in channels
+
+
+def test_force_channel(cat):
+    planner = Planner(cat, [WorkerProfile("w0")],
+                      force_channel="objectstore")
+    plan = planner.plan(build_logical_plan(diamond_project()))
+    join = plan.tasks["func:join"]
+    assert all(e.channel == "objectstore" for e in join.inputs)
+
+
+def test_unknown_column_rejected_at_plan_time(cat):
+    proj = bp.Project("bad")
+
+    @proj.model()
+    def f(data=bp.Model("src", columns=["nope"])):
+        return data
+
+    with pytest.raises(PlanError, match="nope"):
+        Planner(cat, [WorkerProfile("w0")]).plan(build_logical_plan(proj))
+
+
+def test_targets_restrict_plan(cat):
+    logical = build_logical_plan(diamond_project(), targets=["left"])
+    assert set(logical.nodes) == {"src", "left"}

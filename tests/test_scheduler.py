@@ -1,0 +1,133 @@
+"""Fault tolerance: worker loss recovery, straggler speculation, journal
+restart."""
+import os
+import time
+
+import numpy as np
+import pytest
+
+import repro as bp
+from repro.columnar import Catalog, ColumnTable, ObjectStore
+from repro.core import Client, LocalCluster
+from repro.core.journal import RunJournal
+from repro.core.runtime import execute_run
+
+
+@pytest.fixture
+def cat(tmp_path):
+    c = Catalog(ObjectStore(str(tmp_path / "s3")))
+    c.write_table("src", ColumnTable.from_pydict(
+        {"a": np.arange(1000.0)}), rows_per_file=250)
+    return c
+
+
+def chain_project(sleep_in=None, sleep_s=0.0):
+    proj = bp.Project("chain")
+
+    @proj.model()
+    def step1(data=bp.Model("src", columns=["a"])):
+        return {"a": np.asarray(data.column("a").to_numpy()) + 1}
+
+    @proj.model()
+    def step2(data=bp.Model("step1")):
+        if sleep_in == "step2":
+            time.sleep(sleep_s)
+        return {"a": np.asarray(data.column("a").to_numpy()) * 2}
+
+    @proj.model()
+    def step3(data=bp.Model("step2")):
+        return {"a": np.asarray(data.column("a").to_numpy()) - 3}
+
+    return proj
+
+
+def expected():
+    return (np.arange(1000.0) + 1) * 2 - 3
+
+
+def test_worker_loss_recovers_by_reexecution(cat, tmp_path):
+    cluster = LocalCluster(cat, cat.store, str(tmp_path / "dp"), n_workers=3)
+    client = Client()
+    proj = bp.Project("killer")
+    killed = {"done": False}
+
+    @proj.model()
+    def stage_a(data=bp.Model("src", columns=["a"])):
+        return {"a": np.asarray(data.column("a").to_numpy()) + 1}
+
+    @proj.model()
+    def stage_b(data=bp.Model("stage_a")):
+        # first attempt: kill the worker that holds stage_a's buffers
+        if not killed["done"]:
+            killed["done"] = True
+            victim = None
+            for wid, w in cluster.workers.items():
+                if "scan:src" in w.transport._shm or \
+                        "func:stage_a" in w.transport._shm:
+                    victim = wid
+            if victim:
+                cluster.kill_worker(victim)
+        return {"a": np.asarray(data.column("a").to_numpy()) * 10}
+
+    try:
+        res = execute_run(proj, catalog=cat, cluster=cluster, client=client)
+        out = res.read("stage_b", cluster)
+        np.testing.assert_array_equal(out.column("a").to_numpy(),
+                                      (np.arange(1000.0) + 1) * 10)
+        # at least one retry/recovery event occurred
+        kinds = {e.kind for e in client.events}
+        assert "task_retry" in kinds or len(client.of_kind("task_done")) > 4
+    finally:
+        cluster.close()
+
+
+def test_straggler_speculative_copy(cat, tmp_path):
+    cluster = LocalCluster(cat, cat.store, str(tmp_path / "dp"), n_workers=2)
+    client = Client()
+    from repro.core.logical import build_logical_plan
+    from repro.core.physical import Planner
+    from repro.core.scheduler import Scheduler
+
+    proj = chain_project(sleep_in="step2", sleep_s=1.2)
+    logical = build_logical_plan(proj)
+    planner = Planner(cat, cluster.profiles())
+    plan = planner.plan(logical)
+    sched = Scheduler(cluster, client, speculation_factor=2.0,
+                      speculation_min_s=0.15)
+    try:
+        res = sched.run(plan, proj)
+        out = res.read("step3", cluster)
+        np.testing.assert_array_equal(out.column("a").to_numpy(), expected())
+        assert len(client.of_kind("speculative")) >= 1
+    finally:
+        cluster.close()
+
+
+def test_journal_restart_skips_completed_prefix(cat, tmp_path):
+    journal_path = str(tmp_path / "journal.jsonl")
+    cluster = LocalCluster(cat, cat.store, str(tmp_path / "dp"), n_workers=2)
+    client = Client()
+    proj = chain_project()
+    try:
+        res = execute_run(proj, catalog=cat, cluster=cluster, client=client,
+                          journal_path=journal_path)
+        done = RunJournal.recover(journal_path, res.plan.plan_id)
+        assert set(done) == set(res.plan.order)
+        # a restarted run consults the journal + content-addressed caches:
+        res2 = execute_run(proj, catalog=cat, cluster=cluster, client=client,
+                           journal_path=journal_path)
+        assert len(client.of_kind("cache_hit")) >= 3
+    finally:
+        cluster.close()
+
+
+def test_journal_tolerates_torn_tail(tmp_path):
+    path = str(tmp_path / "j.jsonl")
+    j = RunJournal(path)
+    j.record_plan("p1", "r1", ["a", "b"])
+    j.record_task_done("p1", "a", "ck", "w0", 0.1, 10, 100)
+    j.close()
+    with open(path, "a") as f:
+        f.write('{"kind": "done", "plan_id": "p1", "task_id": "b"')  # torn
+    done = RunJournal.recover(path, "p1")
+    assert set(done) == {"a"}
