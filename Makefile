@@ -1,0 +1,22 @@
+PYTHON ?= python
+export PYTHONPATH := src:$(PYTHONPATH)
+
+.PHONY: test test-fast bench-smoke serve-smoke lint
+
+# tier-1 verify (ROADMAP.md)
+test:
+	$(PYTHON) -m pytest -x -q
+
+# quick signal: core engine + system + planner only
+test-fast:
+	$(PYTHON) -m pytest -x -q tests/test_engine.py tests/test_scheduler.py \
+	    tests/test_system.py tests/test_planner.py tests/test_channels.py
+
+bench-smoke:
+	$(PYTHON) -m benchmarks.run --only pipeline_cache
+
+serve-smoke:
+	$(PYTHON) -m repro.launch.serve --arch xlstm-125m --smoke --steps 8 --batch 2
+
+lint:
+	$(PYTHON) -m compileall -q src tests benchmarks examples

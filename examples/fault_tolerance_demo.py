@@ -49,8 +49,8 @@ def stage_b(data=bp.Model("stage_a")):
     if not state["killed"]:
         state["killed"] = True
         victim = next(w for w in cluster.workers
-                      if "func:stage_a" in
-                      cluster.workers[w].transport._shm)
+                      if any(k.endswith("func:stage_a") for k in
+                             cluster.workers[w].transport._shm))
         print(f"!!! killing {victim} mid-run")
         cluster.kill_worker(victim)
     return {"usd": np.asarray(data.column("usd").to_numpy()) * 2}

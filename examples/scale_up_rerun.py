@@ -53,14 +53,14 @@ jan = build_project("eventTime BETWEEN 2023-01-01 AND 2023-01-31",
 t0 = time.time()
 res1 = execute_run(jan, catalog=catalog, cluster=cluster, client=client)
 print(f"January: {time.time() - t0:.2f}s on worker "
-      f"{res1.plan.tasks['func:monthly_revenue'].worker}")
+      f"{res1.placements['func:monthly_revenue']}")
 
 # -- run 2: full year, 12x the data, bigger hint -> on-demand scale-up ------
 year = build_project("eventTime BETWEEN 2023-01-01 AND 2023-12-31",
                      memory_gb=2.0)
 t0 = time.time()
 res2 = execute_run(year, catalog=catalog, cluster=cluster, client=client)
-worker2 = res2.plan.tasks["func:monthly_revenue"].worker
+worker2 = res2.placements["func:monthly_revenue"]
 print(f"full year: {time.time() - t0:.2f}s on worker {worker2}")
 assert worker2.startswith("ondemand-"), "expected an on-demand worker"
 print("scale-up rerun OK — same code, 12x data, bigger ephemeral VM")

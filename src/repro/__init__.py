@@ -17,12 +17,12 @@ The public SDK mirrors the paper's programming model:
         return df
 """
 from repro.api import (Model, Project, default_project, model, python,
-                       resources, run)
+                       resources, run, submit)
 from repro.core.spec import EnvSpec, ModelRef, ResourceHint
 
 __version__ = "1.0.0"
 
 __all__ = [
     "Model", "Project", "default_project", "model", "python", "resources",
-    "run", "EnvSpec", "ModelRef", "ResourceHint",
+    "run", "submit", "EnvSpec", "ModelRef", "ResourceHint",
 ]

@@ -132,3 +132,15 @@ def run(project: Optional[Project] = None, *, catalog=None, cluster=None,
     return execute_run(project or _default_project, catalog=catalog,
                        cluster=cluster, branch=branch, targets=targets,
                        client=client, run_id=run_id)
+
+
+def submit(project: Optional[Project] = None, *, cluster,
+           branch: str = "main", targets: Optional[Sequence[str]] = None,
+           client=None, run_id: Optional[str] = None):
+    """Submit a run without blocking: returns a RunHandle whose `.wait()`
+    yields the RunResult. Concurrent submissions share the cluster's worker
+    fleet and caches through one event-driven engine."""
+    from repro.core.runtime import submit_run
+
+    return submit_run(project or _default_project, cluster, branch=branch,
+                      targets=targets, client=client, run_id=run_id)

@@ -17,6 +17,7 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import json
+import threading
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -90,6 +91,9 @@ class Catalog:
     def __init__(self, store: ObjectStore, namespace: str = "catalog"):
         self.store = store
         self.ns = namespace
+        # commit() is read-modify-write on the branch chain; concurrent
+        # materializing runs must serialize or one run's commit is lost
+        self._commit_lock = threading.Lock()
         if not self.store.exists(self._branch_key("main")):
             self._write_branch("main", [])
 
@@ -130,19 +134,22 @@ class Catalog:
     # -- commits -----------------------------------------------------------------
     def commit(self, branch: str, table_updates: Dict[str, Snapshot],
                message: str = "") -> str:
-        chain = self._read_branch(branch)
-        payload = {"parent": chain[-1] if chain else None,
-                   "message": message,
-                   "tables": {},
-                   "created_at": time.time()}
-        for name, snap in table_updates.items():
-            self.store.put(self._snapshot_key(snap.snapshot_id),
-                           json.dumps(snap.to_json()).encode())
-            payload["tables"][name] = snap.snapshot_id
-        commit_id = _content_id({k: payload[k] for k in ("parent", "tables", "message")})
-        self.store.put(self._commit_key(commit_id), json.dumps(payload).encode())
-        self._write_branch(branch, chain + [commit_id])
-        return commit_id
+        with self._commit_lock:
+            chain = self._read_branch(branch)
+            payload = {"parent": chain[-1] if chain else None,
+                       "message": message,
+                       "tables": {},
+                       "created_at": time.time()}
+            for name, snap in table_updates.items():
+                self.store.put(self._snapshot_key(snap.snapshot_id),
+                               json.dumps(snap.to_json()).encode())
+                payload["tables"][name] = snap.snapshot_id
+            commit_id = _content_id({k: payload[k]
+                                     for k in ("parent", "tables", "message")})
+            self.store.put(self._commit_key(commit_id),
+                           json.dumps(payload).encode())
+            self._write_branch(branch, chain + [commit_id])
+            return commit_id
 
     def log(self, branch: str) -> List[Dict]:
         out = []

@@ -18,6 +18,7 @@ from __future__ import annotations
 import io
 import os
 import time
+import uuid
 from typing import Dict, Iterator, List, Optional, Tuple
 
 
@@ -47,7 +48,9 @@ class ObjectStore:
     def put(self, key: str, data: bytes) -> None:
         path = self._path(key)
         os.makedirs(os.path.dirname(path), exist_ok=True)
-        tmp = path + ".tmp"
+        # unique tmp per writer: concurrent runs may PUT the same
+        # content-addressed key simultaneously (last replace wins, same bytes)
+        tmp = f"{path}.{uuid.uuid4().hex}.tmp"
         with open(tmp, "wb") as f:
             f.write(data)
         os.replace(tmp, path)

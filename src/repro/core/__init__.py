@@ -4,16 +4,21 @@
 # fault-tolerant scheduling).
 from repro.core.spec import EnvSpec, FunctionSpec, ModelRef, ResourceHint
 from repro.core.logical import LogicalPlan, PlanError, build_logical_plan
-from repro.core.physical import (FunctionTask, PhysicalPlan, Planner,
-                                 ScanTask, WorkerProfile)
+from repro.core.physical import (FunctionTask, PhysicalPlan, PlacementHint,
+                                 Planner, ScanTask, WorkerProfile)
 from repro.core.runtime import (Client, Event, LocalCluster, TaskError,
-                                Worker, WorkerFailure, execute_run)
-from repro.core.scheduler import RunResult, Scheduler
+                                Worker, WorkerFailure, execute_run,
+                                submit_run)
+from repro.core.engine import (ExecutionEngine, HandleMap, RunHandle,
+                               RunResult)
+from repro.core.scheduler import Scheduler
 
 __all__ = [
     "EnvSpec", "FunctionSpec", "ModelRef", "ResourceHint",
     "LogicalPlan", "PlanError", "build_logical_plan",
-    "FunctionTask", "PhysicalPlan", "Planner", "ScanTask", "WorkerProfile",
+    "FunctionTask", "PhysicalPlan", "PlacementHint", "Planner", "ScanTask",
+    "WorkerProfile",
     "Client", "Event", "LocalCluster", "TaskError", "Worker", "WorkerFailure",
-    "execute_run", "RunResult", "Scheduler",
+    "execute_run", "submit_run",
+    "ExecutionEngine", "HandleMap", "RunHandle", "RunResult", "Scheduler",
 ]

@@ -118,6 +118,8 @@ class FlightServer:
 
     def _handle(self, conn: socket.socket) -> None:
         try:
+            if self._stop:          # killed worker: refuse, don't serve
+                return
             req = json.loads(_recv_frame(conn).decode())
             with self._lock:
                 table = self._tables.get(req["key"])
@@ -148,6 +150,15 @@ class FlightServer:
 
     def close(self) -> None:
         self._stop = True
+        with self._lock:
+            self._tables.clear()
+        # shutdown() wakes a thread blocked in accept(); close() alone leaves
+        # the listening socket alive inside the in-progress syscall, and a
+        # "dead" worker would keep serving
+        try:
+            self._srv.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
         try:
             self._srv.close()
         except OSError:
@@ -158,6 +169,10 @@ def flight_get(host: str, port: int, key: str,
                columns: Optional[Sequence[str]] = None) -> ColumnTable:
     sock = socket.create_connection((host, port))
     try:
+        if sock.getsockname() == sock.getpeername():
+            # localhost ephemeral-port self-connection (server is gone and
+            # TCP simultaneous-open hit our own source port)
+            raise ConnectionError("flight self-connect: server is gone")
         _send_frame(sock, json.dumps({"key": key,
                                       "columns": list(columns) if columns else None})
                     .encode())

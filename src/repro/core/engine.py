@@ -1,0 +1,578 @@
+"""Event-driven execution engine: late-binding placement, multi-run sharing.
+
+The paper's control plane (§4.1) emits a physical plan and defers the
+"priority scheduler" to future work. This engine fills that gap the way
+Wukong and DataFlower argue serverless DAGs should be driven: by *events*,
+not by a centralized polling loop over a precomputed schedule.
+
+  * **indegree counters + ready queue** — every task knows how many distinct
+    parents it still waits on; a completion callback decrements its children
+    and dispatches any that hit zero immediately (no `cv.wait` spin);
+  * **late-binding placement** — the planner emits hints (memory needs,
+    co-location groups, on-demand flags); the engine binds each task to a
+    concrete worker at dispatch time: least-loaded among healthy workers
+    whose memory fits, with bounded per-worker queues for backpressure and
+    group pinning so zero-copy co-location survives;
+  * **dispatch-time channels** — producer→consumer channels are chosen when
+    both placements are known (same worker → zerocopy/mmap, across → flight),
+    so channel choice reflects *actual* placement, not a plan-time guess;
+  * **multi-run concurrency** — N runs share one worker fleet and its
+    caches; each run has an isolated Client, journal, and synchronized
+    HandleMap, so concurrent pipeline invocations multiplex a warm cluster;
+  * **fault tolerance as events** — retries, transitive lost-input
+    recovery, and straggler speculation are completion/timer events on the
+    same queue; completions are journaled for crash-restart.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import threading
+import time
+from collections import deque
+from concurrent.futures import ThreadPoolExecutor
+from typing import Dict, List, Optional, Sequence, Set, TYPE_CHECKING
+
+from repro.core.channels import TableHandle
+from repro.core.journal import RunJournal
+from repro.core.physical import (FunctionTask, PhysicalPlan, ScanTask,
+                                 WorkerProfile)
+from repro.core.runtime import (Client, Event, HandleUnavailable, TaskError,
+                                Worker, WorkerFailure)
+
+if TYPE_CHECKING:
+    from repro.api import Project
+    from repro.core.runtime import LocalCluster
+
+
+def _stable_digest(s: str) -> int:
+    """PYTHONHASHSEED-independent digest: retries/speculation pick the same
+    worker across processes and reruns."""
+    return int.from_bytes(hashlib.blake2s(s.encode()).digest()[:8], "big")
+
+
+class HandleMap:
+    """Per-run task→TableHandle map, synchronized: pool threads read it from
+    inside `Worker.execute` while completion callbacks mutate it."""
+
+    def __init__(self):
+        self._handles: Dict[str, TableHandle] = {}
+        self._lock = threading.Lock()
+
+    def get(self, task_id: str) -> Optional[TableHandle]:
+        with self._lock:
+            return self._handles.get(task_id)
+
+    def put(self, task_id: str, handle: TableHandle) -> None:
+        with self._lock:
+            self._handles[task_id] = handle
+
+    def pop(self, task_id: str) -> Optional[TableHandle]:
+        with self._lock:
+            return self._handles.pop(task_id, None)
+
+    def snapshot(self) -> Dict[str, TableHandle]:
+        with self._lock:
+            return dict(self._handles)
+
+    def __contains__(self, task_id: str) -> bool:
+        with self._lock:
+            return task_id in self._handles
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._handles)
+
+
+@dataclasses.dataclass
+class RunResult:
+    run_id: str
+    plan: PhysicalPlan
+    handles: Dict[str, TableHandle]
+    client: Client
+    wall_seconds: float
+    task_attempts: Dict[str, int]
+    placements: Dict[str, str] = dataclasses.field(default_factory=dict)
+
+    def read(self, name: str, cluster: "LocalCluster"):
+        """Fetch a produced dataframe (targets or any intermediate)."""
+        tid = f"func:{name}" if f"func:{name}" in self.handles else f"scan:{name}"
+        handle = self.handles[tid]
+        worker = cluster.workers.get(self.placements.get(tid, ""))
+        if worker is None or not worker.alive:
+            healthy = cluster.healthy_workers()
+            if not healthy:
+                raise TaskError(f"no healthy workers left to read {name!r}")
+            worker = healthy[0]
+        return worker.transport.get(handle)
+
+
+@dataclasses.dataclass
+class _Inflight:
+    started: float
+    workers: Set[str]
+    speculated: bool = False
+    timer: Optional[threading.Timer] = None
+
+
+class _RunState:
+    """Book-keeping for one run multiplexed onto the shared fleet."""
+
+    def __init__(self, plan: PhysicalPlan, project, client: Client,
+                 journal: Optional[RunJournal], max_retries: int,
+                 spec_factor: float, spec_min_s: float):
+        self.plan = plan
+        self.project = project
+        self.client = client
+        self.journal = journal
+        self.max_retries = max_retries
+        self.spec_factor = spec_factor
+        self.spec_min_s = spec_min_s
+        self.handles = HandleMap()
+        self.attempts: Dict[str, int] = {t: 0 for t in plan.order}
+        self.indegree: Dict[str, int] = {t: len(plan.parents[t])
+                                         for t in plan.order}
+        self.done: Set[str] = set()
+        self.inflight: Dict[str, _Inflight] = {}
+        self.ready: deque = deque()
+        self.placements: Dict[str, str] = {}
+        self.group_worker: Dict[str, str] = {}
+        self.durations: List[float] = []
+        self.error: Optional[str] = None
+        self.finished = threading.Event()
+        self.result: Optional[RunResult] = None
+        self.t0 = time.perf_counter()
+
+    def remaining(self) -> int:
+        return len(self.plan.order) - len(self.done)
+
+
+class RunHandle:
+    """Future-like view of a submitted run."""
+
+    def __init__(self, engine: "ExecutionEngine", state: _RunState):
+        self._engine = engine
+        self._state = state
+        self.run_id = state.plan.run_id
+
+    def done(self) -> bool:
+        return self._state.finished.is_set()
+
+    @property
+    def client(self) -> Client:
+        return self._state.client
+
+    def wait(self, timeout: Optional[float] = None) -> RunResult:
+        if not self._state.finished.wait(timeout):
+            raise TimeoutError(f"run {self.run_id} still executing")
+        if self._state.error is not None:
+            raise TaskError(self._state.error)
+        return self._state.result
+
+
+class ExecutionEngine:
+    """Shared, event-driven dispatcher over one LocalCluster's fleet."""
+
+    def __init__(self, cluster: "LocalCluster", worker_queue_depth: int = 4,
+                 mmap_spill_bytes: int = int(2e9)):
+        self.cluster = cluster
+        self.worker_queue_depth = worker_queue_depth
+        self.mmap_spill_bytes = mmap_spill_bytes
+        self._lock = threading.RLock()
+        self._runs: List[_RunState] = []
+        self._load: Dict[str, int] = {}          # worker_id -> inflight tasks
+        self._mem: Dict[str, int] = {}           # worker_id -> inflight bytes
+        self._pool = ThreadPoolExecutor(
+            max_workers=max(16, worker_queue_depth * (len(cluster.workers) + 2)),
+            thread_name_prefix="engine")
+        self._closed = False
+
+    # -- public API ---------------------------------------------------------
+    def submit(self, plan: PhysicalPlan, project=None,
+               client: Optional[Client] = None,
+               journal_path: Optional[str] = None,
+               max_retries: int = 2, speculation_factor: float = 4.0,
+               speculation_min_s: float = 0.5) -> RunHandle:
+        """Register a run and dispatch its source tasks. Returns immediately;
+        the run progresses on completion events."""
+        with self._lock:
+            if self._closed:
+                raise TaskError("engine is closed")
+        client = client or Client()
+        journal = RunJournal(journal_path) if journal_path else None
+        if journal:
+            journal.record_plan(plan.plan_id, plan.run_id, plan.order)
+        client.emit(Event("plan", plan.plan_id, "", {"tasks": len(plan.order),
+                                                     "run_id": plan.run_id}))
+        state = _RunState(plan, project, client, journal, max_retries,
+                          speculation_factor, speculation_min_s)
+        with self._lock:
+            if self._closed:
+                if journal:
+                    journal.close()
+                raise TaskError("engine is closed")
+            self._runs.append(state)
+            for tid in plan.order:
+                if state.indegree[tid] == 0:
+                    state.ready.append(tid)
+            self._dispatch_ready(state)
+        if not state.plan.order:
+            self._finalize(state)
+        return RunHandle(self, state)
+
+    def run(self, plan: PhysicalPlan, project=None,
+            client: Optional[Client] = None, **kw) -> RunResult:
+        return self.submit(plan, project, client, **kw).wait()
+
+    def close(self) -> None:
+        with self._lock:
+            self._closed = True
+            pending = list(self._runs)
+            for state in pending:
+                for info in state.inflight.values():
+                    if info.timer is not None:
+                        info.timer.cancel()
+            # fail pending runs so RunHandle.wait() never blocks forever
+            # (under the lock: a run completing concurrently must not be
+            # marked aborted after its result was finalized)
+            for state in pending:
+                if not state.finished.is_set():
+                    state.error = (f"run {state.plan.run_id} aborted: "
+                                   "engine closed")
+                    self._finalize(state)
+        self._pool.shutdown(wait=False)
+
+    # -- placement: late binding -------------------------------------------
+    def _select_worker(self, state: _RunState, task,
+                       exclude: Set[str]) -> Optional[Worker]:
+        """Bind a worker now, from actual load/liveness: group-pinned if
+        possible, else least-loaded whose memory fits; provision on-demand
+        when nothing fits; None = all candidates at queue depth (backpressure:
+        a completion event will re-drain the ready queue)."""
+        hints = task.hints
+        need = hints.memory_bytes
+
+        def _mem_free(w: Worker) -> int:
+            return int(w.profile.memory_gb * 1e9
+                       - self._mem.get(w.worker_id, 0))
+
+        healthy = [w for w in self.cluster.healthy_workers()
+                   if w.worker_id not in exclude]
+        fits = [w for w in healthy if w.profile.memory_gb * 1e9 >= need]
+        if not fits:
+            if healthy and not hints.on_demand:
+                fits = healthy          # degraded fleet: overcommit memory
+            else:
+                prof = WorkerProfile(
+                    f"ondemand-{len(self.cluster.workers)}",
+                    memory_gb=max(need / 1e9 * 1.5, 1.0),
+                    on_demand=True)
+                return self.cluster.provision(prof)
+        pinned = state.group_worker.get(hints.colocate_group)
+        if pinned is not None:
+            w = self.cluster.workers.get(pinned)
+            if (w is not None and w.alive and w.worker_id not in exclude
+                    and self._load.get(pinned, 0) < self.worker_queue_depth
+                    and _mem_free(w) >= need):
+                return w
+        open_slots = [
+            w for w in fits
+            if self._load.get(w.worker_id, 0) < self.worker_queue_depth
+            and _mem_free(w) >= need]
+        if not open_slots:
+            # nothing can host it right now: wait for a completion if any
+            # task is in flight (memory/slots will free); otherwise the
+            # estimates over-state a genuinely idle fleet — overcommit
+            if any(self._load.get(w.worker_id, 0) for w in fits):
+                return None
+            fits.sort(key=lambda w: (-_mem_free(w), w.worker_id))
+            return fits[0]
+        open_slots.sort(key=lambda w: (self._load.get(w.worker_id, 0),
+                                       -_mem_free(w), w.worker_id))
+        return open_slots[0]
+
+    def _pick_retry_worker(self, state: _RunState, task,
+                           exclude: Set[str]) -> Worker:
+        healthy = [w for w in self.cluster.healthy_workers()
+                   if w.worker_id not in exclude]
+        if not healthy:
+            healthy = self.cluster.healthy_workers()
+        if not healthy:
+            raise TaskError("no healthy workers left")
+        healthy.sort(key=lambda w: w.worker_id)
+        return healthy[_stable_digest(task.task_id) % len(healthy)]
+
+    # -- dispatch -----------------------------------------------------------
+    def _dispatch_ready(self, state: _RunState) -> None:
+        """Drain the ready queue as far as worker queues allow (lock held)."""
+        blocked: List[str] = []
+        while state.ready:
+            tid = state.ready.popleft()
+            if tid in state.done or tid in state.inflight or state.error:
+                continue
+            if state.indegree[tid] != 0:
+                continue    # a parent was invalidated after this was queued
+            task = state.plan.tasks[tid]
+            worker = self._select_worker(state, task, exclude=set())
+            if worker is None:
+                blocked.append(tid)     # backpressure: re-queued below
+                continue
+            self._launch(state, tid, worker)
+        state.ready.extend(blocked)
+
+    def _launch(self, state: _RunState, tid: str, worker: Worker,
+                speculative: bool = False) -> None:
+        task = state.plan.tasks[tid]
+        state.attempts[tid] += 1
+        info = state.inflight.setdefault(
+            tid, _Inflight(started=time.perf_counter(), workers=set()))
+        info.workers.add(worker.worker_id)
+        group = task.hints.colocate_group
+        pinned = self.cluster.workers.get(state.group_worker.get(group, ""))
+        if pinned is None or not pinned.alive:
+            state.group_worker[group] = worker.worker_id    # (re)pin group
+        self._load[worker.worker_id] = self._load.get(worker.worker_id, 0) + 1
+        self._mem[worker.worker_id] = (self._mem.get(worker.worker_id, 0)
+                                       + task.hints.memory_bytes)
+        state.client.emit(Event("task_start", tid, worker.worker_id,
+                                {"attempt": state.attempts[tid],
+                                 "speculative": speculative}))
+        if speculative:
+            state.client.emit(Event("speculative", tid, worker.worker_id,
+                                    {"reason": "straggler"}))
+        elif info.timer is None:
+            self._arm_speculation_timer(state, tid, info)
+        self._pool.submit(self._attempt, state, tid, task, worker,
+                          state.attempts[tid])
+
+    # -- channel binding at dispatch time ----------------------------------
+    def _bind_channels(self, state: _RunState, task,
+                       worker: Worker) -> Dict[str, str]:
+        """Choose each input edge's transfer channel from *actual* producer
+        placement (the consumer's placement is `worker`, decided just now)."""
+        channels: Dict[str, str] = {}
+        if not isinstance(task, FunctionTask):
+            return channels
+        force = state.plan.force_channel
+        for edge in task.inputs:
+            if force:
+                channels[edge.parent_task] = force
+                continue
+            handle = state.handles.get(edge.parent_task)
+            producer = state.placements.get(edge.parent_task)
+            if handle is not None and handle.channel in ("objectstore",
+                                                         "mmap"):
+                # objectstore/mmap handles locate by key/path, not by the
+                # producer's flight endpoint — read them via their own
+                # channel wherever the consumer runs (mmap spill files are
+                # on the shared scratch filesystem)
+                channels[edge.parent_task] = handle.channel
+            elif producer == worker.worker_id:
+                channels[edge.parent_task] = "zerocopy"
+            else:
+                channels[edge.parent_task] = "flight"
+        return channels
+
+    def _put_channel(self, state: _RunState, task) -> str:
+        if state.plan.force_channel:
+            return state.plan.force_channel
+        if task.estimated_bytes > self.mmap_spill_bytes:
+            return "mmap"               # big outputs spill; children mmap
+        return "zerocopy"
+
+    # -- the attempt itself (pool thread, no engine lock) -------------------
+    def _attempt(self, state: _RunState, tid: str, task,
+                 worker: Worker, attempt: int) -> None:
+        t_start = time.perf_counter()
+        # journal fsyncs happen on the pool thread, never under the engine
+        # lock: N concurrent runs must not serialize on each other's disk I/O
+        if state.journal:
+            state.journal.record_task_start(state.plan.plan_id, tid,
+                                            worker.worker_id, attempt)
+        try:
+            with self._lock:
+                put_channel = self._put_channel(state, task)
+                edge_channels = self._bind_channels(state, task, worker)
+            handle = worker.execute(state.plan, task, state.handles,
+                                    state.client, put_channel, state.project,
+                                    edge_channels=edge_channels)
+        except HandleUnavailable as e:
+            lost = str(e.args[0]) if e.args else ""
+            self._on_lost_input(state, tid, lost, worker)
+        except (WorkerFailure, TaskError, Exception) as e:  # noqa: BLE001
+            self._on_failed(state, tid, worker, e)
+        else:
+            self._on_done(state, tid, worker, handle,
+                          time.perf_counter() - t_start)
+        finally:
+            self._task_slot_freed(worker, task)
+
+    def _task_slot_freed(self, worker: Worker, task) -> None:
+        with self._lock:
+            n = self._load.get(worker.worker_id, 1)
+            self._load[worker.worker_id] = max(0, n - 1)
+            m = self._mem.get(worker.worker_id, 0)
+            self._mem[worker.worker_id] = max(0, m - task.hints.memory_bytes)
+            # a slot opened: drain any run blocked on backpressure
+            for state in self._runs:
+                if state.ready and not state.finished.is_set():
+                    self._dispatch_ready(state)
+
+    # -- completion events --------------------------------------------------
+    def _on_done(self, state: _RunState, tid: str, worker: Worker,
+                 handle: TableHandle, duration: float) -> None:
+        if state.journal:
+            # fsync BEFORE publishing the completion (journal contract:
+            # downstream tasks consume only journaled outputs) and outside
+            # the engine lock; a speculation loser writes a harmless
+            # duplicate record (recover() keeps one per task id)
+            task = state.plan.tasks[tid]
+            state.journal.record_task_done(
+                state.plan.plan_id, tid,
+                getattr(task, "cache_key", getattr(task, "snapshot_id", "")),
+                worker.worker_id, duration, handle.num_rows, handle.nbytes)
+        with self._lock:
+            if tid in state.done or state.finished.is_set():
+                # speculation loser, or the run already finalized (failed or
+                # aborted): exactly one handle wins, stragglers are evicted
+                worker.transport.evict(handle)
+                return
+            state.done.add(tid)
+            state.handles.put(tid, handle)
+            state.placements[tid] = worker.worker_id
+            state.durations.append(duration)
+            info = state.inflight.pop(tid, None)
+            if info is not None and info.timer is not None:
+                info.timer.cancel()
+            # the event-driven core: decrement children, dispatch immediately
+            for child in state.plan.children(tid):
+                if child in state.done:
+                    continue    # already consumed an earlier output of tid
+                state.indegree[child] -= 1
+                if state.indegree[child] == 0:
+                    state.ready.append(child)
+            self._dispatch_ready(state)
+            if state.remaining() == 0:
+                self._finalize(state)
+
+    def _on_failed(self, state: _RunState, tid: str, worker: Worker,
+                   err: Exception) -> None:
+        if state.journal:
+            state.journal.record_task_failed(state.plan.plan_id, tid,
+                                             worker.worker_id, str(err))
+        with self._lock:
+            if tid in state.done or state.finished.is_set():
+                return                  # a speculative twin already won
+            task = state.plan.tasks[tid]
+            if state.attempts[tid] <= state.max_retries:
+                state.client.emit(Event("task_retry", tid, worker.worker_id,
+                                        {"error": str(err)[:200],
+                                         "attempt": state.attempts[tid]}))
+                info = state.inflight.get(tid)
+                exclude = set(info.workers) if info else {worker.worker_id}
+                try:
+                    w = self._pick_retry_worker(state, task, exclude)
+                except TaskError as e:
+                    self._fail_run(state, tid, str(e))
+                    return
+                self._launch(state, tid, w)
+            else:
+                self._fail_run(state, tid, str(err))
+
+    def _on_lost_input(self, state: _RunState, tid: str, lost_parent: str,
+                       worker: Worker) -> None:
+        """A producer's buffers died with its worker: re-run the producer
+        (and, transitively, ITS lost inputs when the rerun hits the same
+        wall). `tid` re-queues behind the recovered producer via indegree."""
+        with self._lock:
+            if tid in state.done or state.finished.is_set():
+                return
+            state.client.emit(Event("input_lost", tid, worker.worker_id,
+                                    {"producer": lost_parent}))
+            info = state.inflight.pop(tid, None)
+            if info is not None and info.timer is not None:
+                info.timer.cancel()
+            producers = [lost_parent] if lost_parent else state.plan.parents[tid]
+            for p in producers:
+                self._invalidate(state, p)
+            state.indegree[tid] = len([p for p in state.plan.parents[tid]
+                                       if p not in state.done])
+            if state.indegree[tid] == 0 and tid not in state.ready:
+                state.ready.append(tid)
+            self._dispatch_ready(state)
+
+    def _invalidate(self, state: _RunState, tid: str) -> None:
+        """Forget a completed task whose output buffers were lost; safe to
+        re-execute because outputs are content-addressed & idempotent."""
+        if tid in state.done:
+            state.done.discard(tid)
+            state.handles.pop(tid)
+            state.placements.pop(tid, None)
+            # consumers not yet done owe this producer a completion again
+            for child in state.plan.children(tid):
+                if child not in state.done:
+                    state.indegree[child] = len(
+                        [p for p in state.plan.parents[child]
+                         if p not in state.done])
+        if tid not in state.inflight and tid not in state.ready:
+            if state.indegree[tid] == 0:
+                state.ready.append(tid)
+
+    def _fail_run(self, state: _RunState, tid: str, err: str) -> None:
+        state.error = f"run {state.plan.run_id} failed at {tid}: {err}"
+        for info in state.inflight.values():
+            if info.timer is not None:
+                info.timer.cancel()
+        self._finalize(state)
+
+    def _finalize(self, state: _RunState) -> None:
+        with self._lock:
+            if state.finished.is_set():
+                return
+            if state in self._runs:
+                self._runs.remove(state)
+            if state.journal:
+                state.journal.close()
+            state.result = RunResult(
+                state.plan.run_id, state.plan, state.handles.snapshot(),
+                state.client, time.perf_counter() - state.t0,
+                dict(state.attempts), dict(state.placements))
+            state.finished.set()
+
+    # -- straggler speculation: timer events, not polling -------------------
+    def _arm_speculation_timer(self, state: _RunState, tid: str,
+                               info: _Inflight, delay: Optional[float] = None) -> None:
+        if delay is None:
+            delay = max(state.spec_min_s, 0.05)
+        timer = threading.Timer(delay, self._speculation_check,
+                                args=(state, tid))
+        timer.daemon = True
+        info.timer = timer
+        timer.start()
+
+    def _speculation_check(self, state: _RunState, tid: str) -> None:
+        with self._lock:
+            info = state.inflight.get(tid)
+            if (info is None or tid in state.done or info.speculated
+                    or state.finished.is_set()):
+                return
+            if len(state.durations) < 2:
+                self._arm_speculation_timer(state, tid, info)
+                return
+            median = sorted(state.durations)[len(state.durations) // 2]
+            threshold = max(state.spec_factor * median, state.spec_min_s)
+            elapsed = time.perf_counter() - info.started
+            if elapsed < threshold:
+                self._arm_speculation_timer(state, tid, info,
+                                            delay=threshold - elapsed)
+                return
+            task = state.plan.tasks[tid]
+            candidates = [w for w in self.cluster.healthy_workers()
+                          if w.worker_id not in info.workers]
+            if not candidates:
+                self._arm_speculation_timer(state, tid, info)
+                return
+            candidates.sort(key=lambda w: w.worker_id)
+            twin = candidates[_stable_digest(tid) % len(candidates)]
+            info.speculated = True
+            self._launch(state, tid, twin, speculative=True)

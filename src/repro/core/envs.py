@@ -27,7 +27,9 @@ import hashlib
 import os
 import shutil
 import tarfile
+import threading
 import time
+import uuid
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.spec import EnvSpec
@@ -62,6 +64,11 @@ class PackageStore:
         self.files_per_package = files_per_package
         self.bytes_per_file = bytes_per_file
         self.pypi_latency_s = simulated_pypi_latency_s
+        # one store serves every worker; concurrent env builds must not
+        # install the same package tree on top of each other — but installs
+        # of DIFFERENT packages stay concurrent (per-package locks)
+        self._lock = threading.Lock()
+        self._pkg_locks: Dict[str, threading.Lock] = {}
 
     def package_path(self, name: str, version: str) -> str:
         return os.path.join(self.root, _pkg_id(name, version))
@@ -75,23 +82,28 @@ class PackageStore:
         path = self.package_path(name, version)
         if self.is_installed(name, version):
             return path, False
-        if self.pypi_latency_s:
-            time.sleep(self.pypi_latency_s)  # the network call we CACHE away
-        seed = hashlib.sha256(_pkg_id(name, version).encode()).digest()
-        tmp = path + ".building"
-        shutil.rmtree(tmp, ignore_errors=True)
-        os.makedirs(os.path.join(tmp, name), exist_ok=True)
-        blob = (seed * (self.bytes_per_file // len(seed) + 1))[:self.bytes_per_file]
-        for i in range(self.files_per_package):
-            sub = os.path.join(tmp, name, f"mod_{i // 32}")
-            os.makedirs(sub, exist_ok=True)
-            with open(os.path.join(sub, f"m{i}.py"), "wb") as f:
-                f.write(blob)
-        with open(os.path.join(tmp, ".complete"), "w") as f:
-            f.write(_pkg_id(name, version))
-        shutil.rmtree(path, ignore_errors=True)
-        os.replace(tmp, path)
-        return path, True
+        with self._lock:
+            pkg_lock = self._pkg_locks.setdefault(_pkg_id(name, version),
+                                                  threading.Lock())
+        with pkg_lock:
+            if self.is_installed(name, version):     # lost the install race
+                return path, False
+            if self.pypi_latency_s:
+                time.sleep(self.pypi_latency_s)  # the network call we CACHE away
+            seed = hashlib.sha256(_pkg_id(name, version).encode()).digest()
+            tmp = f"{path}.{uuid.uuid4().hex}.building"
+            os.makedirs(os.path.join(tmp, name), exist_ok=True)
+            blob = (seed * (self.bytes_per_file // len(seed) + 1))[:self.bytes_per_file]
+            for i in range(self.files_per_package):
+                sub = os.path.join(tmp, name, f"mod_{i // 32}")
+                os.makedirs(sub, exist_ok=True)
+                with open(os.path.join(sub, f"m{i}.py"), "wb") as f:
+                    f.write(blob)
+            with open(os.path.join(tmp, ".complete"), "w") as f:
+                f.write(_pkg_id(name, version))
+            shutil.rmtree(path, ignore_errors=True)
+            os.replace(tmp, path)
+            return path, True
 
 
 class PackageLinkBuilder:
@@ -118,7 +130,7 @@ class PackageLinkBuilder:
             misses += int(miss)
             pkg_paths.append((name, path))
         env_dir = os.path.join(self.envs_root,
-                               f"{env.env_id}-{time.monotonic_ns()}")
+                               f"{env.env_id}-{uuid.uuid4().hex}")
         site = os.path.join(env_dir, f"python{env.python_version}",
                             "site-packages")
         os.makedirs(site)

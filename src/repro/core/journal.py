@@ -30,6 +30,8 @@ class RunJournal:
         record = dict(record, ts=time.time())
         line = json.dumps(record, sort_keys=True)
         with self._lock:
+            if self._f.closed:
+                return    # late event (e.g. speculation loser) after close
             self._f.write(line + "\n")
             self._f.flush()
             os.fsync(self._f.fileno())

@@ -2,10 +2,17 @@
 
 The planner resolves semantic dataframe references against the catalog
 (snapshots, file manifests), inserts system nodes (scans with column/predicate
-pushdown, materialize writes), assigns workers (bin-packing + on-demand
-scale-up), picks a data channel per edge (zero-copy / mmap / flight /
-object-store), and precomputes content-addressed cache keys so workers can
-skip recomputation. Output is pure metadata — executable by any worker.
+pushdown, materialize writes), and precomputes content-addressed cache keys so
+workers can skip recomputation. Output is pure metadata — executable by any
+worker.
+
+Placement is **late-bound**: the planner does NOT pin tasks to workers or
+edges to channels. It emits placement *hints* — per-task memory needs,
+co-location groups (the zero-copy win requires producer/consumer on one
+host), and on-demand flags — and the ExecutionEngine binds actual workers
+and channels at dispatch time, when real load and liveness are known
+(Wukong/DataFlower-style: orchestration follows the data flow, not a
+precomputed schedule).
 """
 from __future__ import annotations
 
@@ -42,11 +49,20 @@ class WorkerProfile:
 
 
 @dataclasses.dataclass
+class PlacementHint:
+    """Late-binding placement metadata: the engine turns hints into an actual
+    worker at dispatch time."""
+    memory_bytes: int = 0       # working-set need (input + output estimate)
+    colocate_group: str = ""    # tasks sharing a group prefer one worker
+    on_demand: bool = False     # exceeds every standing profile -> provision
+
+
+@dataclasses.dataclass
 class InputEdge:
     param: str
     parent_task: str
     ref: ModelRef
-    channel: str = "zerocopy"
+    channel: str = ""           # bound at dispatch time ("" = late-bound)
 
 
 @dataclasses.dataclass
@@ -58,7 +74,7 @@ class ScanTask:
     columns: Optional[Tuple[str, ...]]     # union of consumer needs (None=all)
     files: Tuple[str, ...]                 # after stats-based pruning
     estimated_bytes: int
-    worker: str = ""
+    hints: PlacementHint = dataclasses.field(default_factory=PlacementHint)
     kind: str = "scan"
 
 
@@ -74,7 +90,7 @@ class FunctionTask:
     estimated_bytes: int
     memory_gb: float
     timeout_s: float
-    worker: str = ""
+    hints: PlacementHint = dataclasses.field(default_factory=PlacementHint)
     kind: str = "function"
 
 
@@ -86,33 +102,55 @@ class PhysicalPlan:
     tasks: Dict[str, object]
     order: List[str]
     targets: List[str]
+    force_channel: Optional[str] = None     # benchmarking override
     created_at: float = dataclasses.field(default_factory=time.time)
+
+    def __post_init__(self):
+        self._build_index()
+
+    def _build_index(self) -> None:
+        """Precompute the consumer-edge index once (O(V+E)); the engine's
+        completion callbacks and channel binding use it instead of rescanning
+        every task's inputs (the old O(V·E) `put_channel_for`)."""
+        self.consumer_edges: Dict[str, List[Tuple[str, InputEdge]]] = {
+            tid: [] for tid in self.order}
+        self.parents: Dict[str, List[str]] = {}
+        for tid in self.order:
+            t = self.tasks[tid]
+            ps: List[str] = []
+            if isinstance(t, FunctionTask):
+                for e in t.inputs:
+                    self.consumer_edges[e.parent_task].append((tid, e))
+                    if e.parent_task not in ps:
+                        ps.append(e.parent_task)
+            self.parents[tid] = ps
 
     def task(self, task_id: str):
         return self.tasks[task_id]
 
     def children(self, task_id: str) -> List[str]:
-        out = []
-        for tid in self.order:
-            t = self.tasks[tid]
-            if isinstance(t, FunctionTask) and any(e.parent_task == task_id
-                                                   for e in t.inputs):
-                out.append(tid)
-        return out
+        seen: List[str] = []
+        for child, _ in self.consumer_edges.get(task_id, []):
+            if child not in seen:
+                seen.append(child)
+        return seen
 
     def describe(self) -> str:
         lines = [f"plan {self.plan_id} (run {self.run_id}, branch {self.branch})"]
         for tid in self.order:
             t = self.tasks[tid]
+            h = t.hints
+            place = (f"group={h.colocate_group or '-'}"
+                     f"{' ondemand' if h.on_demand else ''}")
             if isinstance(t, ScanTask):
                 cols = ",".join(t.columns) if t.columns else "*"
                 lines.append(f"  SCAN {t.table}@{t.snapshot_id[:8]} [{cols}] "
-                             f"files={len(t.files)} -> {t.worker}")
+                             f"files={len(t.files)} [{place}]")
             else:
-                edges = ", ".join(f"{e.ref.name}<{e.channel}>" for e in t.inputs)
+                edges = ", ".join(e.ref.name for e in t.inputs)
                 mat = " MATERIALIZE" if t.materialize else ""
                 lines.append(f"  FUNC {t.name}({edges}){mat} env={t.env_id} "
-                             f"cache={t.cache_key[:8]} -> {t.worker}")
+                             f"cache={t.cache_key[:8]} [{place}]")
         return "\n".join(lines)
 
 
@@ -121,14 +159,12 @@ class Planner:
 
     def __init__(self, catalog: Catalog,
                  workers: Sequence[WorkerProfile],
-                 force_channel: Optional[str] = None,
-                 mmap_spill_fraction: float = 0.5):
+                 force_channel: Optional[str] = None):
         self.catalog = catalog
         self.workers = list(workers)
         if force_channel is not None and force_channel not in CHANNELS:
             raise PlanError(f"unknown channel {force_channel}")
         self.force_channel = force_channel
-        self.mmap_spill_fraction = mmap_spill_fraction
 
     # -- helpers --------------------------------------------------------------
     def _column_union(self, consumers: List[Tuple[str, ModelRef]],
@@ -218,65 +254,38 @@ class Planner:
 
         plan = PhysicalPlan(plan_id=_key_hash(run_id, *order), run_id=run_id,
                             branch=branch, tasks=tasks, order=order,
-                            targets=list(logical.targets))
-        self._assign_workers(plan)
-        self._pick_channels(plan)
+                            targets=list(logical.targets),
+                            force_channel=self.force_channel)
+        self._compute_hints(plan)
         return plan
 
-    # -- worker assignment: first-fit-decreasing bin packing + scale-up --------
-    def _assign_workers(self, plan: PhysicalPlan) -> None:
-        budgets = {w.worker_id: w.memory_gb * 1e9 for w in self.workers}
-        profiles = {w.worker_id: w for w in self.workers}
-        # Seed: group children with their largest parent (locality first —
-        # the paper's zero-copy win requires co-location).
-        assignment: Dict[str, str] = {}
+    # -- placement hints: co-location groups + memory needs --------------------
+    def _compute_hints(self, plan: PhysicalPlan) -> None:
+        """Group children with their largest parent (locality first — the
+        paper's zero-copy win requires co-location), bounded by the biggest
+        standing worker's memory. No worker ids are assigned here: the engine
+        late-binds each group to a concrete worker at first dispatch."""
+        cap = max((w.memory_gb for w in self.workers), default=4.0) * 1e9
+        group_bytes: Dict[str, int] = {}
         for tid in plan.order:
             t = plan.tasks[tid]
             need = getattr(t, "estimated_bytes", 0)
             if isinstance(t, FunctionTask):
                 need = max(need, int(t.memory_gb * 1e9))
-                parent_workers = [assignment.get(e.parent_task)
-                                  for e in t.inputs]
-                parent_workers = [w for w in parent_workers if w]
-            else:
-                parent_workers = []
-            placed = None
-            for w in parent_workers:        # prefer co-location
-                if budgets[w] >= need:
-                    placed = w
-                    break
-            if placed is None:              # first fit by remaining budget
-                for w, b in sorted(budgets.items(), key=lambda kv: -kv[1]):
-                    if b >= need:
-                        placed = w
+            t.hints.memory_bytes = need
+            t.hints.on_demand = need > cap
+            group = ""
+            if isinstance(t, FunctionTask) and not t.hints.on_demand:
+                parent_groups = sorted(
+                    ((plan.tasks[e.parent_task].hints.colocate_group,
+                      plan.tasks[e.parent_task].estimated_bytes)
+                     for e in t.inputs),
+                    key=lambda gv: -gv[1])
+                for g, _ in parent_groups:
+                    if g and group_bytes.get(g, 0) + need <= cap:
+                        group = g
                         break
-            if placed is None:              # on-demand scale-up (paper Fig 2)
-                wid = f"ondemand-{len(budgets)}"
-                prof = WorkerProfile(wid, memory_gb=max(need / 1e9 * 1.5, 1.0),
-                                     on_demand=True)
-                self.workers.append(prof)
-                profiles[wid] = prof
-                budgets[wid] = prof.memory_gb * 1e9
-                placed = wid
-            budgets[placed] -= need
-            assignment[tid] = placed
-            t.worker = placed
-
-    # -- channel selection ------------------------------------------------------
-    def _pick_channels(self, plan: PhysicalPlan) -> None:
-        for tid in plan.order:
-            t = plan.tasks[tid]
-            if not isinstance(t, FunctionTask):
-                continue
-            for edge in t.inputs:
-                if self.force_channel:
-                    edge.channel = self.force_channel
-                    continue
-                parent = plan.tasks[edge.parent_task]
-                same_worker = parent.worker == t.worker
-                big = (getattr(parent, "estimated_bytes", 0)
-                       > self.mmap_spill_fraction * 4e9)
-                if same_worker:
-                    edge.channel = "mmap" if big else "zerocopy"
-                else:
-                    edge.channel = "flight"
+            if not group:
+                group = f"g:{tid}"
+            t.hints.colocate_group = group
+            group_bytes[group] = group_bytes.get(group, 0) + need

@@ -180,17 +180,25 @@ class Worker:
             raise WorkerFailure(f"worker {self.worker_id} is down")
 
     # -- task execution -----------------------------------------------------------
-    def execute(self, plan: PhysicalPlan, task, handles: Dict[str, TableHandle],
+    def execute(self, plan: PhysicalPlan, task, handles,
                 client: Client, put_channel: str,
-                project: Optional["Project"] = None) -> TableHandle:
+                project: Optional["Project"] = None,
+                edge_channels: Optional[Dict[str, str]] = None) -> TableHandle:
+        """Run one task. `handles` is the run's synchronized HandleMap (or a
+        plain dict in tests); `edge_channels` maps parent task id -> transfer
+        channel, bound by the engine at dispatch time from actual placement."""
         self._check_alive()
         t0 = time.perf_counter()
         if isinstance(task, ScanTask):
             table = self._run_scan(task, client)
         else:
-            table = self._run_function(plan, task, handles, client, project)
+            table = self._run_function(plan, task, handles, client, project,
+                                       edge_channels or {})
         self._check_alive()
-        handle = self.transport.put(task.task_id, table, put_channel)
+        # run-scoped key: concurrent runs share the fleet, so bare task ids
+        # would collide in the transport's table store
+        handle = self.transport.put(f"{plan.run_id}:{task.task_id}", table,
+                                    put_channel)
         client.emit(Event("task_done", task.task_id, self.worker_id,
                           {"rows": table.num_rows, "bytes": table.nbytes,
                            "seconds": round(time.perf_counter() - t0, 6),
@@ -210,8 +218,9 @@ class Worker:
         return table
 
     def _run_function(self, plan: PhysicalPlan, task: FunctionTask,
-                      handles: Dict[str, TableHandle], client: Client,
-                      project: Optional["Project"]) -> ColumnTable:
+                      handles, client: Client,
+                      project: Optional["Project"],
+                      edge_channels: Dict[str, str]) -> ColumnTable:
         cached = self.result_cache.get(task.cache_key)
         if cached is not None:
             client.emit(Event("cache_hit", task.task_id, self.worker_id,
@@ -239,9 +248,9 @@ class Worker:
                 for c in (pred.referenced_columns() if pred else []):
                     if c not in need:
                         need.append(c)
+            via = edge_channels.get(edge.parent_task) or edge.channel or "zerocopy"
             try:
-                table = self.transport.get(handle, columns=need,
-                                           via=edge.channel)
+                table = self.transport.get(handle, columns=need, via=via)
             except (OSError, ConnectionError, KeyError) as e:
                 raise HandleUnavailable(edge.parent_task) from e
             if pred is not None:
@@ -291,7 +300,8 @@ def _coerce_output(name: str, out) -> ColumnTable:
 
 
 class LocalCluster:
-    """A single-tenant Data Plane: a fleet of (in-process) workers."""
+    """A single-tenant Data Plane: a fleet of (in-process) workers shared by
+    N concurrent runs through one ExecutionEngine (lazily created)."""
 
     def __init__(self, catalog: Catalog, object_store: ObjectStore,
                  scratch_root: str, n_workers: int = 2,
@@ -303,17 +313,31 @@ class LocalCluster:
         self.package_store = package_store or PackageStore(
             f"{scratch_root}/pkgstore")
         self.workers: Dict[str, Worker] = {}
+        self._lock = threading.Lock()     # provision() races with dispatch
+        self._engine = None
         for i in range(n_workers):
             self._add(WorkerProfile(f"worker-{i}", memory_gb=memory_gb))
 
     def _add(self, profile: WorkerProfile) -> Worker:
         w = Worker(profile, self.catalog, self.object_store,
                    self.scratch_root, self.package_store)
-        self.workers[profile.worker_id] = w
+        with self._lock:
+            self.workers[profile.worker_id] = w
         return w
 
+    def engine(self):
+        """The shared event-driven dispatcher; all runs on this cluster
+        multiplex through it (warm caches, one worker fleet)."""
+        from repro.core.engine import ExecutionEngine
+
+        with self._lock:
+            if self._engine is None:
+                self._engine = ExecutionEngine(self)
+            return self._engine
+
     def profiles(self) -> List[WorkerProfile]:
-        return [w.profile for w in self.workers.values() if w.alive]
+        with self._lock:    # provision() may mutate workers concurrently
+            return [w.profile for w in self.workers.values() if w.alive]
 
     def provision(self, profile: WorkerProfile) -> Worker:
         """On-demand VM (paper Fig. 2 step 3)."""
@@ -321,25 +345,45 @@ class LocalCluster:
 
     def get(self, worker_id: str) -> Worker:
         if worker_id not in self.workers:
-            # the planner may have appended an on-demand profile
+            # late-binding may provision on-demand profiles mid-run
             self.provision(WorkerProfile(worker_id, memory_gb=8.0,
                                          on_demand=True))
         return self.workers[worker_id]
 
     def healthy_workers(self) -> List[Worker]:
-        return [w for w in self.workers.values() if w.alive]
+        with self._lock:
+            return [w for w in self.workers.values() if w.alive]
 
     def kill_worker(self, worker_id: str) -> None:
         self.workers[worker_id].kill()
 
     def close(self) -> None:
-        for w in self.workers.values():
+        with self._lock:
+            engine, self._engine = self._engine, None
+        if engine is not None:
+            engine.close()
+        for w in list(self.workers.values()):
             w.transport.close()
 
 
 # ---------------------------------------------------------------------------
-# run entry point (used by repro.api.run and the CLI)
+# run entry points (used by repro.api and the CLIs)
 # ---------------------------------------------------------------------------
+
+
+def submit_run(project: "Project", cluster: "LocalCluster",
+               branch: str = "main", targets: Optional[Sequence[str]] = None,
+               client: Optional[Client] = None, run_id: Optional[str] = None,
+               force_channel: Optional[str] = None,
+               journal_path: Optional[str] = None):
+    """Plan + submit a run to the cluster's shared engine; returns a
+    RunHandle immediately so N invocations can execute concurrently."""
+    logical = build_logical_plan(project, targets)
+    planner = Planner(cluster.catalog, cluster.profiles(),
+                      force_channel=force_channel)
+    plan = planner.plan(logical, branch=branch, run_id=run_id)
+    return cluster.engine().submit(plan, project, client=client,
+                                   journal_path=journal_path)
 
 
 def execute_run(project: "Project", catalog: Catalog = None, cluster=None,
@@ -349,23 +393,18 @@ def execute_run(project: "Project", catalog: Catalog = None, cluster=None,
                 journal_path: Optional[str] = None):
     import tempfile
 
-    from repro.core.scheduler import Scheduler
-
     owns_cluster = cluster is None
     if cluster is None:
         if catalog is None:
             raise ValueError("execute_run needs a catalog or a cluster")
         scratch = tempfile.mkdtemp(prefix="repro_dp_")
         cluster = LocalCluster(catalog, catalog.store, scratch)
-    catalog = catalog or cluster.catalog
-    client = client or Client()
-    logical = build_logical_plan(project, targets)
-    planner = Planner(catalog, cluster.profiles(), force_channel=force_channel)
-    plan = planner.plan(logical, branch=branch, run_id=run_id)
-    client.emit(Event("plan", plan.plan_id, "", {"tasks": len(plan.order)}))
-    scheduler = Scheduler(cluster, client, journal_path=journal_path)
     try:
-        return scheduler.run(plan, project)
+        handle = submit_run(project, cluster, branch=branch, targets=targets,
+                            client=client, run_id=run_id,
+                            force_channel=force_channel,
+                            journal_path=journal_path)
+        return handle.wait()
     finally:
         if owns_cluster:
             cluster.close()

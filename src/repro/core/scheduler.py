@@ -1,49 +1,22 @@
-"""DAG scheduler: dependency-ordered dispatch with fault tolerance.
+"""Compatibility façade over the event-driven ExecutionEngine.
 
-Large-fleet posture (the paper defers its priority scheduler to future work;
-we implement the properties a 1000-node deployment needs):
-
-  * **dependency scheduling** — tasks dispatch when parents complete; ready
-    tasks on different workers run concurrently;
-  * **retries with reassignment** — a failed/killed worker's tasks move to a
-    healthy worker; lost inputs (buffers that died with a worker) re-execute
-    their producers (safe: outputs are content-addressed & idempotent);
-  * **straggler mitigation** — when a task runs far beyond the observed
-    median of completed tasks, a speculative copy launches on another worker;
-    first completion wins, the loser is ignored;
-  * **journal** — completions are fsync'd; a restarted run skips the
-    journaled prefix via the workers' content-addressed caches.
+The polling scheduler that used to live here (a 50 ms `cv.wait` loop over a
+statically worker-assigned plan) is gone: dispatch is now driven by
+completion events in `repro.core.engine`. `Scheduler` remains as the
+synchronous one-run entry point — construct with a cluster + client, call
+`run(plan)` — and delegates to the cluster's shared engine so that runs
+issued through either API multiplex the same worker fleet.
 """
 from __future__ import annotations
 
-import dataclasses
-import threading
-import time
-from concurrent.futures import ThreadPoolExecutor
-from typing import Dict, List, Optional, Set
+from typing import Optional
 
-from repro.core.channels import TableHandle
-from repro.core.journal import RunJournal
-from repro.core.physical import FunctionTask, PhysicalPlan, ScanTask
-from repro.core.runtime import (Client, Event, HandleUnavailable, LocalCluster,
-                                TaskError, Worker, WorkerFailure)
+from repro.core.engine import ExecutionEngine, HandleMap, RunHandle, RunResult
+from repro.core.physical import PhysicalPlan
+from repro.core.runtime import Client, LocalCluster
 
-
-@dataclasses.dataclass
-class RunResult:
-    run_id: str
-    plan: PhysicalPlan
-    handles: Dict[str, TableHandle]
-    client: Client
-    wall_seconds: float
-    task_attempts: Dict[str, int]
-
-    def read(self, name: str, cluster: LocalCluster):
-        """Fetch a produced dataframe (targets or any intermediate)."""
-        tid = f"func:{name}" if f"func:{name}" in self.handles else f"scan:{name}"
-        handle = self.handles[tid]
-        worker = cluster.get(self.plan.tasks[tid].worker)
-        return worker.transport.get(handle)
+__all__ = ["Scheduler", "RunResult", "RunHandle", "HandleMap",
+           "ExecutionEngine"]
 
 
 class Scheduler:
@@ -54,173 +27,20 @@ class Scheduler:
         self.cluster = cluster
         self.client = client
         self.max_retries = max_retries
-        self.journal = RunJournal(journal_path) if journal_path else None
+        self.journal_path = journal_path
         self.spec_factor = speculation_factor
         self.spec_min_s = speculation_min_s
 
-    # ------------------------------------------------------------------
+    @property
+    def engine(self) -> ExecutionEngine:
+        return self.cluster.engine()
+
+    def submit(self, plan: PhysicalPlan, project=None) -> RunHandle:
+        return self.engine.submit(
+            plan, project, client=self.client,
+            journal_path=self.journal_path, max_retries=self.max_retries,
+            speculation_factor=self.spec_factor,
+            speculation_min_s=self.spec_min_s)
+
     def run(self, plan: PhysicalPlan, project=None) -> RunResult:
-        t0 = time.perf_counter()
-        if self.journal:
-            self.journal.record_plan(plan.plan_id, plan.run_id, plan.order)
-        handles: Dict[str, TableHandle] = {}
-        attempts: Dict[str, int] = {t: 0 for t in plan.order}
-        done: Set[str] = set()
-        failed_for_good: Dict[str, str] = {}
-        lock = threading.RLock()   # launch() is called with cv held
-        cv = threading.Condition(lock)
-        inflight: Dict[str, Dict] = {}     # task_id -> {started, workers:set}
-        durations: List[float] = []
-
-        parents = {tid: ([e.parent_task for e in plan.tasks[tid].inputs]
-                         if isinstance(plan.tasks[tid], FunctionTask) else [])
-                   for tid in plan.order}
-
-        def put_channel_for(tid: str) -> str:
-            edges = [e for c in plan.order
-                     if isinstance(plan.tasks[c], FunctionTask)
-                     for e in plan.tasks[c].inputs if e.parent_task == tid]
-            chans = {e.channel for e in edges}
-            for pref in ("objectstore", "mmap", "zerocopy", "flight"):
-                if pref in chans:
-                    return pref
-            return "zerocopy"
-
-        pool = ThreadPoolExecutor(max_workers=max(8, len(self.cluster.workers) * 4),
-                                  thread_name_prefix="task")
-
-        def launch(tid: str, worker: Worker, speculative: bool = False) -> None:
-            task = plan.tasks[tid]
-            with lock:
-                attempts[tid] += 1
-                info = inflight.setdefault(tid, {"started": time.perf_counter(),
-                                                 "workers": set(),
-                                                 "speculated": False})
-                info["workers"].add(worker.worker_id)
-            if self.journal:
-                self.journal.record_task_start(plan.plan_id, tid,
-                                               worker.worker_id, attempts[tid])
-            if speculative:
-                self.client.emit(Event("speculative", tid, worker.worker_id,
-                                       {"reason": "straggler"}))
-            pool.submit(_attempt, tid, task, worker)
-
-        def _attempt(tid: str, task, worker: Worker) -> None:
-            t_start = time.perf_counter()
-            try:
-                handle = worker.execute(plan, task, handles, self.client,
-                                        put_channel_for(tid), project)
-            except HandleUnavailable as e:
-                with cv:
-                    lost = str(e.args[0]) if e.args else ""
-                    _recover_lost_input(tid, lost)
-                    cv.notify_all()
-                return
-            except (WorkerFailure, TaskError, Exception) as e:  # noqa: BLE001
-                if self.journal:
-                    self.journal.record_task_failed(plan.plan_id, tid,
-                                                    worker.worker_id, str(e))
-                with cv:
-                    if tid in done:
-                        return             # a speculative twin already won
-                    if attempts[tid] <= self.max_retries:
-                        self.client.emit(Event("task_retry", tid,
-                                               worker.worker_id,
-                                               {"error": str(e)[:200],
-                                                "attempt": attempts[tid]}))
-                        w = self._pick_other_worker(task, worker)
-                        launch(tid, w)
-                    else:
-                        failed_for_good[tid] = str(e)
-                        inflight.pop(tid, None)
-                        cv.notify_all()
-                return
-            with cv:
-                if tid in done:
-                    return                 # lost the speculation race
-                done.add(tid)
-                handles[tid] = handle
-                dur = time.perf_counter() - t_start
-                durations.append(dur)
-                inflight.pop(tid, None)
-                if self.journal:
-                    self.journal.record_task_done(
-                        plan.plan_id, tid,
-                        getattr(task, "cache_key", getattr(task, "snapshot_id", "")),
-                        worker.worker_id, dur, handle.num_rows, handle.nbytes)
-                cv.notify_all()
-
-        def _recover_lost_input(tid: str, lost_parent: str) -> None:
-            """Producer's buffers died with its worker: re-run the producer
-            (and transitively ITS lost inputs) on a healthy worker."""
-            for p in ([lost_parent] if lost_parent else parents[tid]):
-                if p in done:
-                    done.discard(p)
-                    handles.pop(p, None)
-            # tid itself goes back to the pending pool (dispatch loop resumes)
-
-        # -- dispatch loop ------------------------------------------------
-        pending = [t for t in plan.order]
-        with cv:
-            while True:
-                # dispatch every ready, not-inflight, not-done task
-                for tid in list(pending):
-                    if tid in done or tid in inflight or tid in failed_for_good:
-                        continue
-                    if all(p in done for p in parents[tid]):
-                        task = plan.tasks[tid]
-                        worker = self._healthy_worker_for(task)
-                        launch(tid, worker)
-                pending = [t for t in plan.order if t not in done
-                           and t not in failed_for_good]
-                if not pending:
-                    break
-                if all(t in failed_for_good or t in done for t in plan.order):
-                    break
-                # straggler check
-                self._maybe_speculate(plan, inflight, durations, done, launch)
-                cv.wait(timeout=0.05)
-        pool.shutdown(wait=False)
-        if self.journal:
-            self.journal.close()
-        if failed_for_good:
-            tid, err = next(iter(failed_for_good.items()))
-            raise TaskError(f"run {plan.run_id} failed at {tid}: {err}")
-        return RunResult(plan.run_id, plan, handles, self.client,
-                         time.perf_counter() - t0, attempts)
-
-    # ------------------------------------------------------------------
-    def _healthy_worker_for(self, task) -> Worker:
-        w = self.cluster.get(task.worker)
-        if w.alive:
-            return w
-        return self._pick_other_worker(task, w)
-
-    def _pick_other_worker(self, task, exclude: Worker) -> Worker:
-        healthy = [w for w in self.cluster.healthy_workers()
-                   if w.worker_id != exclude.worker_id]
-        if not healthy:
-            healthy = self.cluster.healthy_workers()
-        if not healthy:
-            raise TaskError("no healthy workers left")
-        # least-loaded by name hash; fine for in-process fleet
-        return sorted(healthy, key=lambda w: w.worker_id)[
-            hash(task.task_id) % len(healthy)]
-
-    def _maybe_speculate(self, plan, inflight, durations, done, launch) -> None:
-        if len(durations) < 2:
-            return
-        median = sorted(durations)[len(durations) // 2]
-        threshold = max(self.spec_factor * median, self.spec_min_s)
-        now = time.perf_counter()
-        for tid, info in list(inflight.items()):
-            if info["speculated"] or tid in done:
-                continue
-            if now - info["started"] > threshold:
-                task = plan.tasks[tid]
-                candidates = [w for w in self.cluster.healthy_workers()
-                              if w.worker_id not in info["workers"]]
-                if not candidates:
-                    continue
-                info["speculated"] = True
-                launch(tid, candidates[0], speculative=True)
+        return self.submit(plan, project).wait()

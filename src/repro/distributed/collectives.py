@@ -12,7 +12,11 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
+
+try:
+    from jax import shard_map
+except ImportError:  # jax < 0.5 exposes it under jax.experimental
+    from jax.experimental.shard_map import shard_map
 
 
 def compressed_psum_grads(grads, mesh: Mesh, axis: str = "pod",

@@ -2,10 +2,13 @@
 
     PYTHONPATH=src python -m repro.launch.run_pipeline \
         --project examples.quickstart_project --workdir /tmp/bp \
-        [--branch main] [--channel zerocopy|mmap|flight|objectstore]
+        [--branch main] [--channel zerocopy|mmap|flight|objectstore] \
+        [--runs 4]
 
 The --project module must expose ``PROJECT`` (a repro.Project) and may expose
-``seed_catalog(catalog)`` to create source tables on first run.
+``seed_catalog(catalog)`` to create source tables on first run. With
+``--runs N`` the same project is submitted N times concurrently — all runs
+multiplex the one warm cluster through the event-driven engine.
 """
 from __future__ import annotations
 
@@ -15,7 +18,7 @@ import os
 import time
 
 from repro.columnar import Catalog, ObjectStore
-from repro.core.runtime import Client, LocalCluster, execute_run
+from repro.core.runtime import Client, LocalCluster, submit_run
 
 
 def main() -> None:
@@ -27,6 +30,8 @@ def main() -> None:
     ap.add_argument("--channel", default=None,
                     help="force one data channel (benchmarking)")
     ap.add_argument("--workers", type=int, default=2)
+    ap.add_argument("--runs", type=int, default=1,
+                    help="submit N concurrent runs sharing the cluster")
     ap.add_argument("--targets", nargs="*", default=None)
     ap.add_argument("--verbose", action="store_true")
     args = ap.parse_args()
@@ -39,19 +44,24 @@ def main() -> None:
         mod.seed_catalog(catalog)
     cluster = LocalCluster(catalog, store, os.path.join(args.workdir, "dp"),
                            n_workers=args.workers)
-    client = Client(verbose=args.verbose)
     t0 = time.time()
     try:
-        res = execute_run(project, catalog=catalog, cluster=cluster,
-                          branch=args.branch, targets=args.targets,
-                          client=client, force_channel=args.channel,
-                          journal_path=os.path.join(args.workdir,
-                                                    "journal.jsonl"))
-        print(f"run {res.run_id} ok in {res.wall_seconds:.3f}s "
-              f"(wall {time.time() - t0:.3f}s)")
-        for tid, h in res.handles.items():
-            print(f"  {tid:32s} rows={h.num_rows:>9} bytes={h.nbytes:>12} "
-                  f"via {h.channel}")
+        handles = [
+            submit_run(project, cluster,
+                       branch=args.branch, targets=args.targets,
+                       client=Client(verbose=args.verbose),
+                       force_channel=args.channel,
+                       journal_path=os.path.join(args.workdir,
+                                                 f"journal-{i}.jsonl"))
+            for i in range(args.runs)]
+        for handle in handles:
+            res = handle.wait()
+            print(f"run {res.run_id} ok in {res.wall_seconds:.3f}s "
+                  f"(wall {time.time() - t0:.3f}s)")
+            for tid, h in res.handles.items():
+                print(f"  {tid:32s} rows={h.num_rows:>9} "
+                      f"bytes={h.nbytes:>12} via {h.channel} "
+                      f"on {res.placements.get(tid, '?')}")
     finally:
         cluster.close()
 

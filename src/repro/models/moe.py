@@ -24,7 +24,11 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+
+try:
+    from jax import shard_map
+except ImportError:  # jax < 0.5 exposes it under jax.experimental
+    from jax.experimental.shard_map import shard_map
 
 from repro.configs.common import ModelConfig
 from repro.models.layers import ParamSpec, Specs, activation

@@ -1,6 +1,8 @@
 """RCF column file format: roundtrips, projection reads, mmap zero-copy."""
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.columnar import ColumnTable, read_header, read_table, write_table

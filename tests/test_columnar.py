@@ -1,6 +1,8 @@
 """Columnar substrate: property tests (hypothesis) + numpy oracles."""
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.columnar import ColumnTable, compute, utf8_column

@@ -9,6 +9,8 @@ from repro.core.runtime import execute_run
 from repro.data.pipeline import TokenBatchStream, build_data_project
 from repro.data.synthetic import make_corpus_table
 from repro.data.tokenizer import ByteTokenizer
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 

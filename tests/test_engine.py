@@ -1,0 +1,356 @@
+"""Event-driven ExecutionEngine: transitive lost-input recovery, the
+speculation race, multi-run concurrency on one shared cluster, and
+dispatch-time (late-bound) placement/channel behaviour."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import repro as bp
+from repro.columnar import Catalog, ColumnTable, ObjectStore
+from repro.core import Client, LocalCluster
+from repro.core.engine import HandleMap, _stable_digest
+from repro.core.runtime import execute_run, submit_run
+
+
+@pytest.fixture
+def cat(tmp_path):
+    c = Catalog(ObjectStore(str(tmp_path / "s3")))
+    c.write_table("src", ColumnTable.from_pydict(
+        {"a": np.arange(1000.0)}), rows_per_file=250)
+    return c
+
+
+def _holder_of(cluster, task_id):
+    """Worker id whose transport holds a task's buffers (keys are
+    run-scoped: '<run_id>:<task_id>')."""
+    for wid, w in cluster.workers.items():
+        if any(k.endswith(task_id) for k in w.transport._shm):
+            return wid
+    return None
+
+
+# ---------------------------------------------------------------------------
+# recovery: transitive producer re-execution
+# ---------------------------------------------------------------------------
+
+
+def test_transitive_producer_reexecution(cat, tmp_path):
+    """Producer-of-producer dead: stage_c's worker loss cascades through
+    stage_b AND stage_a AND the scan, all re-executed via lost-input
+    events."""
+    cluster = LocalCluster(cat, cat.store, str(tmp_path / "dp"), n_workers=3)
+    client = Client()
+    proj = bp.Project("transitive")
+    killed = {"done": False}
+
+    @proj.model()
+    def stage_a(data=bp.Model("src", columns=["a"])):
+        return {"a": np.asarray(data.column("a").to_numpy()) + 1}
+
+    @proj.model()
+    def stage_b(data=bp.Model("stage_a")):
+        return {"a": np.asarray(data.column("a").to_numpy()) * 2}
+
+    @proj.model()
+    def stage_c(data=bp.Model("stage_b")):
+        # kill every worker holding upstream buffers: the retry worker must
+        # rebuild b, which must rebuild a, which must rescan
+        if not killed["done"]:
+            killed["done"] = True
+            victims = {_holder_of(cluster, t)
+                       for t in ("scan:src", "func:stage_a", "func:stage_b")}
+            for v in victims:
+                if v is not None:
+                    cluster.kill_worker(v)
+        return {"a": np.asarray(data.column("a").to_numpy()) - 3}
+
+    try:
+        res = execute_run(proj, catalog=cat, cluster=cluster, client=client)
+        np.testing.assert_array_equal(
+            res.read("stage_c", cluster).column("a").to_numpy(),
+            (np.arange(1000.0) + 1) * 2 - 3)
+        # every upstream task ran more than once
+        assert res.task_attempts["func:stage_b"] >= 2
+        assert res.task_attempts["func:stage_a"] >= 2
+        assert res.task_attempts["scan:src"] >= 2
+        kinds = {e.kind for e in client.events}
+        assert "input_lost" in kinds
+    finally:
+        cluster.close()
+
+
+# ---------------------------------------------------------------------------
+# speculation: both twins finish, exactly one handle wins
+# ---------------------------------------------------------------------------
+
+
+def test_speculation_race_one_handle_wins(cat, tmp_path):
+    cluster = LocalCluster(cat, cat.store, str(tmp_path / "dp"), n_workers=2)
+    client = Client()
+    proj = bp.Project("race")
+    barrier = threading.Barrier(2, timeout=30)
+
+    @proj.model()
+    def fast1(data=bp.Model("src", columns=["a"])):
+        return {"a": np.asarray(data.column("a").to_numpy())}
+
+    @proj.model()
+    def fast2(data=bp.Model("fast1")):
+        return {"a": np.asarray(data.column("a").to_numpy())}
+
+    @proj.model()
+    def slow(data=bp.Model("fast2")):
+        # both the original and the speculative twin arrive here, then
+        # finish (nearly) together -> a genuine completion race
+        try:
+            barrier.wait()
+        except threading.BrokenBarrierError:
+            pass
+        return {"a": np.asarray(data.column("a").to_numpy()) + 7}
+
+    from repro.core.scheduler import Scheduler
+    from repro.core.logical import build_logical_plan
+    from repro.core.physical import Planner
+
+    plan = Planner(cat, cluster.profiles()).plan(build_logical_plan(proj))
+    sched = Scheduler(cluster, client, speculation_factor=2.0,
+                      speculation_min_s=0.1)
+    try:
+        res = sched.run(plan, proj)
+        np.testing.assert_array_equal(
+            res.read("slow", cluster).column("a").to_numpy(),
+            np.arange(1000.0) + 7)
+        assert len(client.of_kind("speculative")) >= 1
+        # exactly one worker holds the winning buffers; the loser's copy
+        # was evicted when it lost the race
+        holders = [wid for wid, w in cluster.workers.items()
+                   if any(k.endswith("func:slow") for k in w.transport._shm)]
+        assert len(holders) == 1
+        assert res.placements["func:slow"] in holders
+    finally:
+        cluster.close()
+
+
+# ---------------------------------------------------------------------------
+# multi-run concurrency on one shared cluster
+# ---------------------------------------------------------------------------
+
+
+def test_concurrent_runs_share_cluster_with_isolated_results(cat, tmp_path):
+    """≥4 simultaneous runs multiplex one LocalCluster; each gets isolated
+    handles, placements, and event streams."""
+    cluster = LocalCluster(cat, cat.store, str(tmp_path / "dp"), n_workers=3)
+    n_runs = 5
+    projects, clients = [], []
+    for k in range(n_runs):
+        p = bp.Project(f"conc{k}")
+
+        def make(p, k):
+            @p.model()
+            def out(data=bp.Model("src", columns=["a"],
+                                  filter=f"a < {900 + k}")):
+                time.sleep(0.05)    # keep all runs in flight simultaneously
+                return {"a": np.asarray(data.column("a").to_numpy())}
+
+        make(p, k)
+        projects.append(p)
+        clients.append(Client())
+
+    try:
+        handles = [submit_run(p, cluster, client=c, run_id=f"run-{k}")
+                   for k, (p, c) in enumerate(zip(projects, clients))]
+        # all runs are genuinely concurrent: none finished synchronously
+        results = [h.wait(timeout=120) for h in handles]
+        for k, res in enumerate(results):
+            got = res.read("out", cluster).column("a").to_numpy()
+            np.testing.assert_array_equal(got, np.arange(900.0 + k))
+            assert res.run_id == f"run-{k}"
+            # event streams are per-run: no foreign run ids leaked in
+            plans = clients[k].of_kind("plan")
+            assert [e.payload.get("run_id") for e in plans] == [f"run-{k}"]
+    finally:
+        cluster.close()
+
+
+def test_concurrent_runs_one_warm_cluster_hits_shared_caches(cat, tmp_path):
+    """Identical concurrent invocations share worker result caches (warm
+    serving): later runs see cache hits."""
+    cluster = LocalCluster(cat, cat.store, str(tmp_path / "dp"), n_workers=2)
+    proj = bp.Project("warm")
+
+    @proj.model()
+    def out(data=bp.Model("src", columns=["a"])):
+        return {"a": np.asarray(data.column("a").to_numpy()) * 3}
+
+    try:
+        first = submit_run(proj, cluster, client=Client()).wait(timeout=60)
+        clients = [Client() for _ in range(4)]
+        handles = [submit_run(proj, cluster, client=c) for c in clients]
+        for h in handles:
+            h.wait(timeout=60)
+        hits = sum(len(c.of_kind("cache_hit")) for c in clients)
+        assert hits >= 4
+        np.testing.assert_array_equal(
+            first.read("out", cluster).column("a").to_numpy(),
+            np.arange(1000.0) * 3)
+    finally:
+        cluster.close()
+
+
+# ---------------------------------------------------------------------------
+# late binding: backpressure, spread, forced channels
+# ---------------------------------------------------------------------------
+
+
+def test_bounded_worker_queues_backpressure(cat, tmp_path):
+    """A fan-out wider than total queue depth completes via backpressure
+    (ready tasks wait for completion events, no deadlock)."""
+    cluster = LocalCluster(cat, cat.store, str(tmp_path / "dp"), n_workers=2)
+    engine = cluster.engine()
+    engine.worker_queue_depth = 1
+    proj = bp.Project("wide")
+
+    for i in range(8):
+        def make(i):
+            @proj.model(name=f"fan{i}")
+            def fan(data=bp.Model("src", columns=["a"],
+                                  filter=f"a >= {i}")):
+                return {"a": np.asarray(data.column("a").to_numpy())}
+
+        make(i)
+
+    try:
+        res = execute_run(proj, catalog=cat, cluster=cluster)
+        for i in range(8):
+            got = res.read(f"fan{i}", cluster).column("a").to_numpy()
+            np.testing.assert_array_equal(got, np.arange(float(i), 1000.0))
+    finally:
+        cluster.close()
+
+
+def test_mmap_spill_readable_across_workers(cat, tmp_path):
+    """Outputs over the spill threshold are put via mmap; consumers placed
+    on OTHER workers must still read them (spill files live on the shared
+    scratch filesystem, not behind the producer's flight endpoint)."""
+    cluster = LocalCluster(cat, cat.store, str(tmp_path / "dp"), n_workers=2)
+    engine = cluster.engine()
+    engine.mmap_spill_bytes = 0          # every output spills
+    engine.worker_queue_depth = 1        # force placements apart
+    proj = bp.Project("spill")
+
+    @proj.model()
+    def left(data=bp.Model("src", columns=["a"], filter="a < 500")):
+        return {"a": np.asarray(data.column("a").to_numpy())}
+
+    @proj.model()
+    def right(data=bp.Model("src", columns=["a"], filter="a >= 500")):
+        return {"a": np.asarray(data.column("a").to_numpy())}
+
+    @proj.model()
+    def join(l=bp.Model("left"), r=bp.Model("right")):
+        return {"a": np.concatenate([np.asarray(l.column("a").to_numpy()),
+                                     np.asarray(r.column("a").to_numpy())])}
+
+    try:
+        res = execute_run(proj, catalog=cat, cluster=cluster)
+        assert all(h.channel == "mmap" for h in res.handles.values())
+        got = np.sort(res.read("join", cluster).column("a").to_numpy())
+        np.testing.assert_array_equal(got, np.arange(1000.0))
+    finally:
+        cluster.close()
+
+
+def test_force_channel_objectstore_end_to_end(cat, tmp_path):
+    cluster = LocalCluster(cat, cat.store, str(tmp_path / "dp"), n_workers=2)
+    proj = bp.Project("forced")
+
+    @proj.model()
+    def doubled(data=bp.Model("src", columns=["a"])):
+        return {"a": np.asarray(data.column("a").to_numpy()) * 2}
+
+    try:
+        res = execute_run(proj, catalog=cat, cluster=cluster,
+                          force_channel="objectstore")
+        assert all(h.channel == "objectstore" for h in res.handles.values())
+        np.testing.assert_array_equal(
+            res.read("doubled", cluster).column("a").to_numpy(),
+            np.arange(1000.0) * 2)
+    finally:
+        cluster.close()
+
+
+def test_colocated_chain_binds_zerocopy(cat, tmp_path):
+    """With ample memory the whole chain pins to one worker: every put is
+    zerocopy and placements agree."""
+    cluster = LocalCluster(cat, cat.store, str(tmp_path / "dp"), n_workers=3)
+    proj = bp.Project("zc")
+
+    @proj.model()
+    def s1(data=bp.Model("src", columns=["a"])):
+        return {"a": np.asarray(data.column("a").to_numpy()) + 1}
+
+    @proj.model()
+    def s2(data=bp.Model("s1")):
+        return {"a": np.asarray(data.column("a").to_numpy()) + 1}
+
+    try:
+        res = execute_run(proj, catalog=cat, cluster=cluster)
+        assert len(set(res.placements.values())) == 1
+        assert all(h.channel == "zerocopy" for h in res.handles.values())
+    finally:
+        cluster.close()
+
+
+# ---------------------------------------------------------------------------
+# unit-level: stable digest + synchronized HandleMap
+# ---------------------------------------------------------------------------
+
+
+def test_stable_digest_is_processs_independent():
+    """Retry/speculation worker picks must not depend on PYTHONHASHSEED."""
+    assert _stable_digest("func:step2") == _stable_digest("func:step2")
+    import subprocess
+    import sys
+    out = subprocess.run(
+        [sys.executable, "-c",
+         "import sys; sys.path.insert(0, 'src'); "
+         "from repro.core.engine import _stable_digest; "
+         "print(_stable_digest('func:step2'))"],
+        capture_output=True, text=True, cwd=str(
+            __import__('pathlib').Path(__file__).resolve().parent.parent),
+        env={"PYTHONHASHSEED": "12345", "PATH": "/usr/bin:/bin:/usr/local/bin"})
+    assert out.returncode == 0, out.stderr
+    assert int(out.stdout.strip()) == _stable_digest("func:step2")
+
+
+def test_handle_map_synchronized_access():
+    hm = HandleMap()
+    errors = []
+
+    def writer():
+        try:
+            for i in range(2000):
+                hm.put(f"t{i % 50}", i)
+                if i % 3 == 0:
+                    hm.pop(f"t{i % 50}")
+        except Exception as e:  # noqa: BLE001
+            errors.append(e)
+
+    def reader():
+        try:
+            for i in range(2000):
+                hm.get(f"t{i % 50}")
+                hm.snapshot()
+                len(hm)
+        except Exception as e:  # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=f)
+               for f in (writer, writer, reader, reader)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors

@@ -98,32 +98,58 @@ def test_cache_key_changes_with_filter_and_code(cat):
     assert k1 != k2
 
 
-def test_colocation_prefers_zero_copy(cat):
+def test_colocation_hints_single_group(cat):
+    """Plenty of memory -> the whole diamond shares one co-location group,
+    so the engine can bind every edge zero-copy at dispatch time."""
     proj = diamond_project()
     planner = Planner(cat, [WorkerProfile("w0", memory_gb=64)])
     plan = planner.plan(build_logical_plan(proj))
-    join = plan.tasks["func:join"]
-    assert all(e.channel == "zerocopy" for e in join.inputs)
+    groups = {plan.tasks[t].hints.colocate_group for t in plan.order}
+    assert len(groups) == 1
+    # plans are pure metadata: no worker pinned, channels late-bound
+    assert all(not hasattr(plan.tasks[t], "worker") for t in plan.order)
+    assert all(e.channel == "" for e in plan.tasks["func:join"].inputs)
 
 
-def test_cross_worker_uses_flight(cat):
-    """Tiny per-worker memory forces spreading -> flight edges appear."""
+def test_tiny_workers_split_colocation_groups(cat):
+    """Tiny per-worker memory forces spreading -> multiple groups, and the
+    engine will bind cross-worker edges to flight at dispatch."""
     proj = diamond_project()
     planner = Planner(cat, [WorkerProfile("w0", memory_gb=1e-5),
                             WorkerProfile("w1", memory_gb=1e-5)])
     plan = planner.plan(build_logical_plan(proj))
-    channels = {e.channel
-                for t in plan.tasks.values() if isinstance(t, FunctionTask)
-                for e in t.inputs}
-    assert "flight" in channels
+    groups = {plan.tasks[t].hints.colocate_group for t in plan.order}
+    assert len(groups) > 1
 
 
-def test_force_channel(cat):
+def test_force_channel_recorded_on_plan(cat):
     planner = Planner(cat, [WorkerProfile("w0")],
                       force_channel="objectstore")
     plan = planner.plan(build_logical_plan(diamond_project()))
-    join = plan.tasks["func:join"]
-    assert all(e.channel == "objectstore" for e in join.inputs)
+    assert plan.force_channel == "objectstore"
+
+
+def test_consumer_edge_index(cat):
+    """The precomputed index replaces per-dispatch O(V·E) rescans."""
+    plan = Planner(cat, [WorkerProfile("w0")]).plan(
+        build_logical_plan(diamond_project()))
+    assert set(plan.children("scan:src")) == {"func:left", "func:right"}
+    assert plan.parents["func:join"] == ["func:left", "func:right"]
+    assert [c for c, _ in plan.consumer_edges["func:left"]] == ["func:join"]
+
+
+def test_memory_hints_and_on_demand_flag(cat):
+    proj = bp.Project("bigmem")
+
+    @proj.model(resources=bp.ResourceHint(memory_gb=64.0))
+    def big(data=bp.Model("src", columns=["a"])):
+        return data
+
+    plan = Planner(cat, [WorkerProfile("w0", memory_gb=4.0)]).plan(
+        build_logical_plan(proj))
+    hints = plan.tasks["func:big"].hints
+    assert hints.on_demand
+    assert hints.memory_bytes >= 64.0 * 1e9
 
 
 def test_unknown_column_rejected_at_plan_time(cat):

@@ -58,12 +58,13 @@ def test_worker_loss_recovers_by_reexecution(cat, tmp_path):
     @proj.model()
     def stage_b(data=bp.Model("stage_a")):
         # first attempt: kill the worker that holds stage_a's buffers
+        # (transport keys are run-scoped: "<run_id>:<task_id>")
         if not killed["done"]:
             killed["done"] = True
             victim = None
             for wid, w in cluster.workers.items():
-                if "scan:src" in w.transport._shm or \
-                        "func:stage_a" in w.transport._shm:
+                if any(k.endswith("scan:src") or k.endswith("func:stage_a")
+                       for k in w.transport._shm):
                     victim = wid
             if victim:
                 cluster.kill_worker(victim)

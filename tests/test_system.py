@@ -162,5 +162,6 @@ def test_scale_up_on_demand_worker(lakehouse, cluster):
         return data
 
     res = execute_run(proj, catalog=catalog, cluster=cluster)
-    worker = res.plan.tasks["func:big"].worker
-    assert worker.startswith("ondemand-")
+    # late binding: the engine provisioned at dispatch time
+    assert res.plan.tasks["func:big"].hints.on_demand
+    assert res.placements["func:big"].startswith("ondemand-")
