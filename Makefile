@@ -15,6 +15,9 @@ test-fast:
 bench-smoke:
 	$(PYTHON) -m benchmarks.run --only pipeline_cache
 
+bench-sharding:
+	$(PYTHON) -m benchmarks.sharded_scan --json sharded_scan.json
+
 serve-smoke:
 	$(PYTHON) -m repro.launch.serve --arch xlstm-125m --smoke --steps 8 --batch 2
 

@@ -50,7 +50,11 @@ class Project:
 
     # -- decorators ---------------------------------------------------------
     def model(self, name: Optional[str] = None, materialize: bool = False,
-              resources: Optional[ResourceHint] = None) -> Callable:
+              resources: Optional[ResourceHint] = None,
+              rowwise: bool = False) -> Callable:
+        """`rowwise=True` declares that every output row depends only on its
+        input row (map-style); the planner may then split the function across
+        the shards of a large input and merge once downstream."""
         def deco(fn: Callable) -> Callable:
             spec = FunctionSpec(
                 name=name or fn.__name__,
@@ -59,6 +63,7 @@ class Project:
                 env=getattr(fn, _ENV_ATTR, EnvSpec.create()),
                 materialize=materialize,
                 resources=resources or getattr(fn, _RES_ATTR, ResourceHint()),
+                rowwise=rowwise,
             )
             with self._lock:
                 if spec.name in self.functions:
@@ -125,22 +130,32 @@ def resources(*args, **kwargs):
 
 def run(project: Optional[Project] = None, *, catalog=None, cluster=None,
         branch: str = "main", targets: Optional[Sequence[str]] = None,
-        client=None, run_id: Optional[str] = None):
+        client=None, run_id: Optional[str] = None,
+        shard_threshold_bytes: Optional[int] = None,
+        max_shards: Optional[int] = None):
     """Plan + execute a project. Thin wrapper over core.runtime.execute_run."""
     from repro.core.runtime import execute_run
 
     return execute_run(project or _default_project, catalog=catalog,
                        cluster=cluster, branch=branch, targets=targets,
-                       client=client, run_id=run_id)
+                       client=client, run_id=run_id,
+                       shard_threshold_bytes=shard_threshold_bytes,
+                       max_shards=max_shards)
 
 
 def submit(project: Optional[Project] = None, *, cluster,
            branch: str = "main", targets: Optional[Sequence[str]] = None,
-           client=None, run_id: Optional[str] = None):
+           client=None, run_id: Optional[str] = None,
+           shard_threshold_bytes: Optional[int] = None,
+           max_shards: Optional[int] = None):
     """Submit a run without blocking: returns a RunHandle whose `.wait()`
     yields the RunResult. Concurrent submissions share the cluster's worker
-    fleet and caches through one event-driven engine."""
+    fleet and caches through one event-driven engine. Scans/row-wise
+    functions over `shard_threshold_bytes` split into up to `max_shards`
+    shard tasks spread across the fleet."""
     from repro.core.runtime import submit_run
 
     return submit_run(project or _default_project, cluster, branch=branch,
-                      targets=targets, client=client, run_id=run_id)
+                      targets=targets, client=client, run_id=run_id,
+                      shard_threshold_bytes=shard_threshold_bytes,
+                      max_shards=max_shards)

@@ -13,7 +13,11 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from repro.columnar.expr import Expr, parse_predicate
-from repro.columnar.table import Column, ColumnTable, numeric_column, pack_validity
+from repro.columnar.table import (Column, ColumnTable, numeric_column,
+                                  pack_validity)
+# the sharded data plane's single merge point: row-concatenate shard tables
+# in order (one-part concat is zero-copy — same Column objects/buffers back)
+from repro.columnar.table import concat_tables
 
 AGG_FUNCS = ("sum", "mean", "count", "min", "max")
 

@@ -313,6 +313,9 @@ class ColumnTable:
 def concat_tables(tables: Sequence[ColumnTable]) -> ColumnTable:
     if not tables:
         raise ValueError("concat of zero tables")
+    tables = list(tables)
+    if len(tables) == 1:
+        return tables[0]    # zero-copy: same Column objects/buffers
     names = tables[0].column_names
     for t in tables[1:]:
         if t.column_names != names:

@@ -4,8 +4,9 @@
 # fault-tolerant scheduling).
 from repro.core.spec import EnvSpec, FunctionSpec, ModelRef, ResourceHint
 from repro.core.logical import LogicalPlan, PlanError, build_logical_plan
-from repro.core.physical import (FunctionTask, PhysicalPlan, PlacementHint,
-                                 Planner, ScanTask, WorkerProfile)
+from repro.core.physical import (FunctionTask, GatherTask, PhysicalPlan,
+                                 PlacementHint, Planner, ScanTask,
+                                 WorkerProfile)
 from repro.core.runtime import (Client, Event, LocalCluster, TaskError,
                                 Worker, WorkerFailure, execute_run,
                                 submit_run)
@@ -16,8 +17,8 @@ from repro.core.scheduler import Scheduler
 __all__ = [
     "EnvSpec", "FunctionSpec", "ModelRef", "ResourceHint",
     "LogicalPlan", "PlanError", "build_logical_plan",
-    "FunctionTask", "PhysicalPlan", "PlacementHint", "Planner", "ScanTask",
-    "WorkerProfile",
+    "FunctionTask", "GatherTask", "PhysicalPlan", "PlacementHint", "Planner",
+    "ScanTask", "WorkerProfile",
     "Client", "Event", "LocalCluster", "TaskError", "Worker", "WorkerFailure",
     "execute_run", "submit_run",
     "ExecutionEngine", "HandleMap", "RunHandle", "RunResult", "Scheduler",

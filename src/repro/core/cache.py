@@ -97,7 +97,7 @@ class ColumnarScanCache:
             parts.append(ColumnTable({c: part[c] for c in cols}))
         if not parts:
             return ColumnTable({})
-        return parts[0] if len(parts) == 1 else concat_tables(parts)
+        return concat_tables(parts)
 
     def cached_columns(self, file_key: str) -> List[str]:
         with self._lock:

@@ -45,6 +45,30 @@ class TableHandle:
     nbytes: int
     num_rows: int
     location: str = ""      # path (mmap/objectstore) or host:port (flight)
+    parts: Tuple["TableHandle", ...] = ()   # channel == "partitioned" only
+
+
+def partitioned_handle(key: str,
+                       parts: Sequence[TableHandle]) -> TableHandle:
+    """One handle over a sharded producer's outputs. A consumer transport
+    resolves each part independently — zero-copy when the part's buffers are
+    local, the part's own channel (flight/mmap/objectstore) when remote — and
+    concatenates exactly once, at the consumer."""
+    parts = tuple(parts)
+    if not parts:
+        raise ValueError("partitioned handle needs at least one part")
+    return TableHandle(key, "partitioned",
+                       sum(p.nbytes for p in parts),
+                       sum(p.num_rows for p in parts), "", parts)
+
+
+class ShardUnavailable(ConnectionError):
+    """One part of a partitioned read is gone (its producer worker died);
+    carries the part key so the engine can re-execute just that shard."""
+
+    def __init__(self, key: str):
+        super().__init__(f"shard buffers unavailable: {key}")
+        self.key = key
 
 
 # ---------------------------------------------------------------------------
@@ -209,11 +233,18 @@ class DataTransport:
         self._shm: Dict[str, ColumnTable] = {}
         self._lock = threading.Lock()
         self.stats = {"zerocopy_puts": 0, "mmap_puts": 0, "flight_puts": 0,
-                      "objectstore_puts": 0, "gets": 0}
+                      "objectstore_puts": 0, "gets": 0, "partitioned_gets": 0,
+                      "local_parts": 0, "remote_parts": 0}
+
+    def _bump(self, name: str, by: int = 1) -> None:
+        # counters are shared by every concurrent run on this worker; an
+        # unlocked += drops updates under contention
+        with self._lock:
+            self.stats[name] = self.stats.get(name, 0) + by
 
     # -- put ---------------------------------------------------------------------
     def put(self, key: str, table: ColumnTable, channel: str) -> TableHandle:
-        self.stats[f"{channel}_puts"] += 1
+        self._bump(f"{channel}_puts")
         flight_loc = f"{self.flight.host}:{self.flight.port}"
         if channel == "zerocopy":
             with self._lock:
@@ -248,8 +279,16 @@ class DataTransport:
             via: Optional[str] = None) -> ColumnTable:
         """Fetch a table. `via` overrides the edge's preferred channel (the
         planner may colocate a zero-copy edge with a producer that spilled);
-        unavailable local paths degrade to flight."""
-        self.stats["gets"] += 1
+        unavailable local paths degrade to flight. `gets` counts logical
+        fetches: a partitioned read is one get regardless of part count."""
+        self._bump("gets")
+        if handle.channel == "partitioned":
+            return self._get_partitioned(handle, columns)
+        return self._get_one(handle, columns, via)
+
+    def _get_one(self, handle: TableHandle,
+                 columns: Optional[Sequence[str]] = None,
+                 via: Optional[str] = None) -> ColumnTable:
         channel = via or handle.channel
         if channel == "mmap" and handle.channel != "mmap":
             channel = handle.channel    # no spill file exists; use producer's
@@ -279,6 +318,56 @@ class DataTransport:
             finally:
                 os.remove(tmp)
         raise ValueError(f"unknown channel {handle.channel!r}")
+
+    def has_local(self, key: str) -> bool:
+        """True if this transport holds the key's buffers in its local table
+        store (a partitioned read would resolve it zero-copy)."""
+        with self._lock:
+            return key in self._shm
+
+    def _get_partitioned(self, handle: TableHandle,
+                         columns: Optional[Sequence[str]]) -> ColumnTable:
+        """Resolve each part where it actually lives: the local table store
+        first (zero-copy, no bytes moved), the part's own channel otherwise.
+        Remote parts stream concurrently (the flight server is thread-per-
+        connection, so gather latency is the slowest transfer, not the sum).
+        Column projection is pushed into every part fetch; the concat runs
+        once, here, at the consumer."""
+        from repro.columnar import compute
+
+        self._bump("partitioned_gets")
+        tables: List[Optional[ColumnTable]] = [None] * len(handle.parts)
+        remote: List[Tuple[int, TableHandle]] = []
+        for i, part in enumerate(handle.parts):
+            with self._lock:
+                local = self._shm.get(part.key)
+            if local is not None:
+                self._bump("local_parts")
+                tables[i] = local.project(columns) if columns else local
+            else:
+                remote.append((i, part))
+        failures: List[Tuple[str, Exception]] = []
+
+        def _fetch(i: int, part: TableHandle) -> None:
+            try:
+                tables[i] = self._get_one(part, columns=columns)
+                self._bump("remote_parts")
+            except (OSError, ConnectionError, KeyError) as e:
+                failures.append((part.key, e))
+
+        if len(remote) == 1:
+            _fetch(*remote[0])
+        elif remote:
+            threads = [threading.Thread(target=_fetch, args=rp, daemon=True)
+                       for rp in remote]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+        if failures:
+            key, cause = failures[0]
+            raise ShardUnavailable(key) from cause
+        return compute.concat_tables(tables)
 
     def evict(self, handle: TableHandle) -> None:
         with self._lock:

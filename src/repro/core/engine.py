@@ -97,14 +97,46 @@ class RunResult:
     def read(self, name: str, cluster: "LocalCluster"):
         """Fetch a produced dataframe (targets or any intermediate)."""
         tid = f"func:{name}" if f"func:{name}" in self.handles else f"scan:{name}"
+        if tid in self.handles:
+            return self._read_handle(tid, cluster)
+        # sharded producer with no synthesized gather (every consumer rode
+        # the shards): assemble the whole table from the shard handles
+        shard_tids = sorted(
+            (t for t in self.handles
+             if t.rsplit("#", 1)[0] in (f"func:{name}", f"scan:{name}")
+             and "#" in t),
+            key=lambda t: int(t.rsplit("#", 1)[1]))
+        if not shard_tids:
+            raise KeyError(f"no output named {name!r} in run {self.run_id}")
+        from repro.columnar import compute
+        return compute.concat_tables(
+            [self._read_handle(t, cluster) for t in shard_tids])
+
+    def _read_handle(self, tid: str, cluster: "LocalCluster"):
+        """Read one task's buffers, degrading across the fleet: the recorded
+        placement first, then any healthy worker (mmap/objectstore handles
+        locate by path/key and zerocopy may have flight-visible twins). A
+        dead producer surfaces as TaskError, never a raw socket error."""
         handle = self.handles[tid]
-        worker = cluster.workers.get(self.placements.get(tid, ""))
-        if worker is None or not worker.alive:
-            healthy = cluster.healthy_workers()
-            if not healthy:
-                raise TaskError(f"no healthy workers left to read {name!r}")
-            worker = healthy[0]
-        return worker.transport.get(handle)
+        placed_id = self.placements.get(tid, "")
+        # healthy_workers() snapshots under the cluster lock (provision()
+        # mutates the dict concurrently); recorded placement goes first.
+        # Every handle resolves location-identically away from its placement
+        # (zerocopy degrades to the producer's flight endpoint, mmap and
+        # objectstore locate by path/key), so one fallback attempt suffices
+        candidates = sorted(cluster.healthy_workers(),
+                            key=lambda w: w.worker_id != placed_id)[:2]
+        if not candidates:
+            raise TaskError(f"no healthy workers left to read {tid!r}")
+        err: Optional[Exception] = None
+        for worker in candidates:
+            try:
+                return worker.transport.get(handle)
+            except (ConnectionError, OSError, KeyError) as e:
+                err = e
+        raise TaskError(
+            f"buffers for {tid!r} are gone (producer worker lost, channel "
+            f"{handle.channel!r}); re-run to recompute") from err
 
 
 @dataclasses.dataclass
@@ -183,9 +215,23 @@ class ExecutionEngine:
         self._load: Dict[str, int] = {}          # worker_id -> inflight tasks
         self._mem: Dict[str, int] = {}           # worker_id -> inflight bytes
         self._pool = ThreadPoolExecutor(
-            max_workers=max(16, worker_queue_depth * (len(cluster.workers) + 2)),
+            max_workers=self._pool_size(len(cluster.workers)),
             thread_name_prefix="engine")
         self._closed = False
+
+    def _pool_size(self, n_workers: int) -> int:
+        return max(16, self.worker_queue_depth * (n_workers + 2))
+
+    def fleet_resized(self, n_workers: int) -> None:
+        """On-demand provisioning grew the fleet: grow dispatch capacity
+        with it, or concurrency silently caps at the construction-time pool
+        size. ThreadPoolExecutor spawns threads lazily up to `_max_workers`
+        (checked on every submit), so raising the bound is sufficient —
+        no threads are ever torn down."""
+        needed = self._pool_size(n_workers)
+        with self._lock:
+            if needed > self._pool._max_workers:
+                self._pool._max_workers = needed
 
     # -- public API ---------------------------------------------------------
     def submit(self, plan: PhysicalPlan, project=None,
@@ -243,12 +289,13 @@ class ExecutionEngine:
         self._pool.shutdown(wait=False)
 
     # -- placement: late binding -------------------------------------------
-    def _select_worker(self, state: _RunState, task,
-                       exclude: Set[str]) -> Optional[Worker]:
+    def _select_worker(self, state: _RunState, task, exclude: Set[str],
+                       allow_provision: bool = True) -> Optional[Worker]:
         """Bind a worker now, from actual load/liveness: group-pinned if
         possible, else least-loaded whose memory fits; provision on-demand
-        when nothing fits; None = all candidates at queue depth (backpressure:
-        a completion event will re-drain the ready queue)."""
+        when nothing fits (unless the caller forbids it — speculation must
+        never grow the fleet for a twin); None = no candidate right now
+        (backpressure: a completion event will re-drain the ready queue)."""
         hints = task.hints
         need = hints.memory_bytes
 
@@ -262,6 +309,8 @@ class ExecutionEngine:
         if not fits:
             if healthy and not hints.on_demand:
                 fits = healthy          # degraded fleet: overcommit memory
+            elif not allow_provision:
+                return None
             else:
                 prof = WorkerProfile(
                     f"ondemand-{len(self.cluster.workers)}",
@@ -352,6 +401,10 @@ class ExecutionEngine:
         placement (the consumer's placement is `worker`, decided just now)."""
         channels: Dict[str, str] = {}
         if not isinstance(task, FunctionTask):
+            # scans have no inputs; gathers self-resolve each part through
+            # their partitioned handle (local zero-copy, else the part's own
+            # channel), so binding edges here would be dead work on the
+            # lock-held dispatch path
             return channels
         force = state.plan.force_channel
         for edge in task.inputs:
@@ -567,12 +620,15 @@ class ExecutionEngine:
                                             delay=threshold - elapsed)
                 return
             task = state.plan.tasks[tid]
-            candidates = [w for w in self.cluster.healthy_workers()
-                          if w.worker_id not in info.workers]
-            if not candidates:
+            # the twin goes through the same placement constraints as any
+            # dispatch (queue depth, memory accounting): a straggler must not
+            # overcommit an already-loaded worker, and never provisions a
+            # fresh on-demand worker just to race itself
+            twin = self._select_worker(state, task, exclude=set(info.workers),
+                                       allow_provision=False)
+            if twin is None:
+                # backpressure: every candidate is at queue depth — try again
                 self._arm_speculation_timer(state, tid, info)
                 return
-            candidates.sort(key=lambda w: w.worker_id)
-            twin = candidates[_stable_digest(tid) % len(candidates)]
             info.speculated = True
             self._launch(state, tid, twin, speculative=True)

@@ -55,6 +55,8 @@ class PlacementHint:
     memory_bytes: int = 0       # working-set need (input + output estimate)
     colocate_group: str = ""    # tasks sharing a group prefer one worker
     on_demand: bool = False     # exceeds every standing profile -> provision
+    shard_index: int = 0        # this task's slice of a sharded producer
+    num_shards: int = 1         # 1 = unsharded
 
 
 @dataclasses.dataclass
@@ -95,6 +97,22 @@ class FunctionTask:
 
 
 @dataclasses.dataclass
+class GatherTask:
+    """Synthesized merge point for a sharded producer: one InputEdge per
+    shard, in shard order (concatenation order == unsharded row order).
+    Executes where the engine places it — local shards are read zero-copy,
+    remote ones over flight, and the single concat happens there
+    (columnar.compute.concat_tables)."""
+    task_id: str
+    name: str                               # logical dataframe being merged
+    inputs: List[InputEdge]                 # shard edges, index order
+    columns: Optional[Tuple[str, ...]]      # projection pushed into each part
+    estimated_bytes: int
+    hints: PlacementHint = dataclasses.field(default_factory=PlacementHint)
+    kind: str = "gather"
+
+
+@dataclasses.dataclass
 class PhysicalPlan:
     plan_id: str
     run_id: str
@@ -118,11 +136,10 @@ class PhysicalPlan:
         for tid in self.order:
             t = self.tasks[tid]
             ps: List[str] = []
-            if isinstance(t, FunctionTask):
-                for e in t.inputs:
-                    self.consumer_edges[e.parent_task].append((tid, e))
-                    if e.parent_task not in ps:
-                        ps.append(e.parent_task)
+            for e in getattr(t, "inputs", ()):  # FunctionTask or GatherTask
+                self.consumer_edges[e.parent_task].append((tid, e))
+                if e.parent_task not in ps:
+                    ps.append(e.parent_task)
             self.parents[tid] = ps
 
     def task(self, task_id: str):
@@ -142,10 +159,15 @@ class PhysicalPlan:
             h = t.hints
             place = (f"group={h.colocate_group or '-'}"
                      f"{' ondemand' if h.on_demand else ''}")
+            if h.num_shards > 1:
+                place += f" shard={h.shard_index}/{h.num_shards}"
             if isinstance(t, ScanTask):
                 cols = ",".join(t.columns) if t.columns else "*"
                 lines.append(f"  SCAN {t.table}@{t.snapshot_id[:8]} [{cols}] "
                              f"files={len(t.files)} [{place}]")
+            elif isinstance(t, GatherTask):
+                lines.append(f"  GATHER {t.name} parts={len(t.inputs)} "
+                             f"[{place}]")
             else:
                 edges = ", ".join(e.ref.name for e in t.inputs)
                 mat = " MATERIALIZE" if t.materialize else ""
@@ -159,12 +181,26 @@ class Planner:
 
     def __init__(self, catalog: Catalog,
                  workers: Sequence[WorkerProfile],
-                 force_channel: Optional[str] = None):
+                 force_channel: Optional[str] = None,
+                 shard_threshold_bytes: int = 64 << 20,
+                 max_shards: Optional[int] = None):
         self.catalog = catalog
         self.workers = list(workers)
         if force_channel is not None and force_channel not in CHANNELS:
             raise PlanError(f"unknown channel {force_channel}")
         self.force_channel = force_channel
+        # cost model: only tables worth the gather overhead are sharded, and
+        # never wider than the fleet (None = one shard per standing worker)
+        self.shard_threshold_bytes = shard_threshold_bytes
+        self.max_shards = max_shards
+
+    def _shard_count(self, est_bytes: int, n_files: int) -> int:
+        cap = (self.max_shards if self.max_shards is not None
+               else len(self.workers))
+        n = min(cap, n_files)   # file = unit of scan work (immutable manifest)
+        if n < 2 or est_bytes < self.shard_threshold_bytes:
+            return 1
+        return n
 
     # -- helpers --------------------------------------------------------------
     def _column_union(self, consumers: List[Tuple[str, ModelRef]],
@@ -194,6 +230,30 @@ class Planner:
         order: List[str] = []
         cache_keys: Dict[str, str] = {}     # logical name -> identity
         est_bytes: Dict[str, int] = {}
+        shard_map: Dict[str, List[str]] = {}    # logical name -> shard tids
+        # per-shard identities: chunk boundaries depend on the (consumer-
+        # pruned) file list, so shard k's identity must name the exact files
+        # it covers — a warm shared cluster must never serve a cached shard
+        # computed over a different chunk layout
+        shard_keys: Dict[str, List[str]] = {}
+
+        def ensure_gather(name: str) -> None:
+            """A consumer genuinely needs the whole table: synthesize the
+            merge task under the ORIGINAL task id, so downstream edges and
+            RunResult.read address it unchanged."""
+            shard_tids = shard_map[name]
+            tid = shard_tids[0].rsplit("#", 1)[0]
+            if tid in tasks:
+                return
+            first = tasks[shard_tids[0]]
+            cols = first.columns if isinstance(first, ScanTask) else None
+            edges = [InputEdge(param=f"part{k}", parent_task=stid,
+                               ref=ModelRef.create(name))
+                     for k, stid in enumerate(shard_tids)]
+            tasks[tid] = GatherTask(task_id=tid, name=name, inputs=edges,
+                                    columns=cols,
+                                    estimated_bytes=est_bytes[name])
+            order.append(tid)
 
         for name in logical.order:
             node = logical.nodes[name]
@@ -212,16 +272,40 @@ class Planner:
                     files = list(snap.files)
                 frac = (len(cols) / max(len(snap.schema), 1)) if cols else 1.0
                 est = int(sum(f.size_bytes for f in files) * frac)
-                tid = f"scan:{name}"
-                tasks[tid] = ScanTask(task_id=tid, table=name, branch=branch,
-                                      snapshot_id=snap.snapshot_id,
-                                      columns=cols,
-                                      files=tuple(f.key for f in files),
-                                      estimated_bytes=est)
                 cache_keys[name] = _key_hash("scan", snap.snapshot_id,
                                              ",".join(cols or ("*",)))
                 est_bytes[name] = est
-                order.append(tid)
+                n = self._shard_count(est, len(files))
+                if n > 1:
+                    # contiguous file chunks keep row order, so the gather's
+                    # index-ordered concat is byte-identical to one big scan
+                    shard_tids = []
+                    shard_keys[name] = []
+                    for k in range(n):
+                        chunk = files[k * len(files) // n:
+                                      (k + 1) * len(files) // n]
+                        stid = f"scan:{name}#{k}"
+                        tasks[stid] = ScanTask(
+                            task_id=stid, table=name, branch=branch,
+                            snapshot_id=snap.snapshot_id, columns=cols,
+                            files=tuple(f.key for f in chunk),
+                            estimated_bytes=int(
+                                sum(f.size_bytes for f in chunk) * frac),
+                            hints=PlacementHint(shard_index=k, num_shards=n))
+                        order.append(stid)
+                        shard_tids.append(stid)
+                        shard_keys[name].append(_key_hash(
+                            cache_keys[name], *(f.key for f in chunk)))
+                    shard_map[name] = shard_tids
+                else:
+                    tid = f"scan:{name}"
+                    tasks[tid] = ScanTask(task_id=tid, table=name,
+                                          branch=branch,
+                                          snapshot_id=snap.snapshot_id,
+                                          columns=cols,
+                                          files=tuple(f.key for f in files),
+                                          estimated_bytes=est)
+                    order.append(tid)
             else:
                 spec = node.spec
                 edge_ids = []
@@ -237,20 +321,63 @@ class Planner:
                 cache_keys[name] = cache_key
                 est = max(int(est * 1.2), 1)
                 est_bytes[name] = est
-                tid = f"func:{name}"
-                inputs = []
-                for param, ref in spec.inputs:
-                    ptid = (f"func:{ref.name}" if f"func:{ref.name}" in tasks
-                            else f"scan:{ref.name}")
-                    inputs.append(InputEdge(param=param, parent_task=ptid,
-                                            ref=ref))
-                tasks[tid] = FunctionTask(
-                    task_id=tid, name=name, env_id=spec.env.env_id,
-                    code_hash=spec.code_hash, cache_key=cache_key,
-                    inputs=inputs, materialize=spec.materialize,
-                    estimated_bytes=est, memory_gb=spec.resources.memory_gb,
-                    timeout_s=spec.resources.timeout_s)
-                order.append(tid)
+                # row-wise functions ride their parent's shards: one task per
+                # shard, no gather in between (f(concat(p)) == concat(f(p)))
+                shardable = (getattr(spec, "rowwise", False)
+                             and not spec.materialize
+                             and len(spec.inputs) == 1
+                             and spec.inputs[0][1].name in shard_map)
+                if shardable:
+                    param, ref = spec.inputs[0]
+                    parent_shards = shard_map[ref.name]
+                    n = len(parent_shards)
+                    shard_tids = []
+                    shard_keys[name] = []
+                    for k, ptid in enumerate(parent_shards):
+                        stid = f"func:{name}#{k}"
+                        # distinct identity per shard, transitively derived
+                        # from the parent shard's identity (ultimately the
+                        # exact file chunk): the intermediate cache must
+                        # never serve shard j — or shard k of a different
+                        # chunk layout — for shard k
+                        skey = _key_hash(cache_key, f"shard-{k}-{n}",
+                                         shard_keys[ref.name][k])
+                        shard_keys[name].append(skey)
+                        tasks[stid] = FunctionTask(
+                            task_id=stid, name=name, env_id=spec.env.env_id,
+                            code_hash=spec.code_hash,
+                            cache_key=skey,
+                            inputs=[InputEdge(param=param, parent_task=ptid,
+                                              ref=ref)],
+                            materialize=False,
+                            estimated_bytes=max(est // n, 1),
+                            memory_gb=spec.resources.memory_gb,
+                            timeout_s=spec.resources.timeout_s,
+                            hints=PlacementHint(shard_index=k, num_shards=n))
+                        order.append(stid)
+                        shard_tids.append(stid)
+                    shard_map[name] = shard_tids
+                else:
+                    tid = f"func:{name}"
+                    inputs = []
+                    for param, ref in spec.inputs:
+                        if ref.name in shard_map:
+                            ensure_gather(ref.name)
+                        ptid = (f"func:{ref.name}" if f"func:{ref.name}" in tasks
+                                else f"scan:{ref.name}")
+                        inputs.append(InputEdge(param=param, parent_task=ptid,
+                                                ref=ref))
+                    tasks[tid] = FunctionTask(
+                        task_id=tid, name=name, env_id=spec.env.env_id,
+                        code_hash=spec.code_hash, cache_key=cache_key,
+                        inputs=inputs, materialize=spec.materialize,
+                        estimated_bytes=est, memory_gb=spec.resources.memory_gb,
+                        timeout_s=spec.resources.timeout_s)
+                    order.append(tid)
+
+        for t in logical.targets:
+            if t in shard_map:
+                ensure_gather(t)    # run results expose the whole dataframe
 
         plan = PhysicalPlan(plan_id=_key_hash(run_id, *order), run_id=run_id,
                             branch=branch, tasks=tasks, order=order,
@@ -275,7 +402,9 @@ class Planner:
             t.hints.memory_bytes = need
             t.hints.on_demand = need > cap
             group = ""
-            if isinstance(t, FunctionTask) and not t.hints.on_demand:
+            if getattr(t, "inputs", None) and not t.hints.on_demand:
+                # gathers group with their largest shard: that shard is read
+                # zero-copy, only the smaller remote ones pay a flight hop
                 parent_groups = sorted(
                     ((plan.tasks[e.parent_task].hints.colocate_group,
                       plan.tasks[e.parent_task].estimated_bytes)

@@ -31,11 +31,12 @@ from repro.columnar.catalog import Catalog
 from repro.columnar.objectstore import ObjectStore
 from repro.columnar.table import ColumnTable
 from repro.core.cache import ColumnarScanCache, IntermediateCache
-from repro.core.channels import DataTransport, TableHandle
+from repro.core.channels import (DataTransport, ShardUnavailable, TableHandle,
+                                 partitioned_handle)
 from repro.core.envs import PackageLinkBuilder, PackageStore
 from repro.core.logical import build_logical_plan
-from repro.core.physical import (FunctionTask, PhysicalPlan, Planner, ScanTask,
-                                 WorkerProfile)
+from repro.core.physical import (FunctionTask, GatherTask, PhysicalPlan,
+                                 Planner, ScanTask, WorkerProfile)
 
 if TYPE_CHECKING:
     from repro.api import Project
@@ -191,6 +192,8 @@ class Worker:
         t0 = time.perf_counter()
         if isinstance(task, ScanTask):
             table = self._run_scan(task, client)
+        elif isinstance(task, GatherTask):
+            table = self._run_gather(plan, task, handles, client)
         else:
             table = self._run_function(plan, task, handles, client, project,
                                        edge_channels or {})
@@ -215,6 +218,34 @@ class Worker:
                           {"kind": "scan",
                            "hits": after["hits"] - before["hits"],
                            "misses": after["misses"] - before["misses"]}))
+        return table
+
+    def _run_gather(self, plan: PhysicalPlan, task: GatherTask,
+                    handles, client: Client) -> ColumnTable:
+        """Merge a sharded producer. The partitioned handle lets the
+        transport resolve each part where it lives — local shards zero-copy,
+        remote ones over their own channel — and concatenate exactly once."""
+        part_handles = []
+        for edge in task.inputs:
+            h = handles.get(edge.parent_task)
+            if h is None:
+                raise HandleUnavailable(edge.parent_task)
+            part_handles.append((edge.parent_task, h))
+        phandle = partitioned_handle(f"{plan.run_id}:{task.task_id}",
+                                     [h for _, h in part_handles])
+        cols = list(task.columns) if task.columns else None
+        n_local = sum(self.transport.has_local(h.key) for _, h in part_handles)
+        try:
+            table = self.transport.get(phandle, columns=cols)
+        except ShardUnavailable as e:
+            # map the lost part key back to its producer so the engine
+            # re-executes just that shard
+            lost = next((tid for tid, h in part_handles if h.key == e.key),
+                        task.inputs[0].parent_task)
+            raise HandleUnavailable(lost) from e
+        client.emit(Event("gather", task.task_id, self.worker_id,
+                          {"parts": len(part_handles), "local": n_local,
+                           "remote": len(part_handles) - n_local}))
         return table
 
     def _run_function(self, plan: PhysicalPlan, task: FunctionTask,
@@ -323,6 +354,12 @@ class LocalCluster:
                    self.scratch_root, self.package_store)
         with self._lock:
             self.workers[profile.worker_id] = w
+            engine, n = self._engine, len(self.workers)
+        if engine is not None:
+            # dispatch capacity must grow with the fleet, or on-demand
+            # provisioning silently caps concurrency at the construction-time
+            # pool size
+            engine.fleet_resized(n)
         return w
 
     def engine(self):
@@ -344,11 +381,17 @@ class LocalCluster:
         return self._add(profile)
 
     def get(self, worker_id: str) -> Worker:
-        if worker_id not in self.workers:
-            # late-binding may provision on-demand profiles mid-run
-            self.provision(WorkerProfile(worker_id, memory_gb=8.0,
-                                         on_demand=True))
-        return self.workers[worker_id]
+        with self._lock:   # provision() mutates `workers` concurrently
+            w = self.workers.get(worker_id)
+        if w is not None:
+            return w
+        if worker_id.startswith("ondemand-"):
+            # late binding may reference an on-demand profile mid-run
+            return self.provision(WorkerProfile(worker_id, memory_gb=8.0,
+                                                on_demand=True))
+        # fabricating a worker here would mask typos and stale placements
+        raise KeyError(f"unknown worker {worker_id!r}; "
+                       f"have {sorted(self.workers)}")
 
     def healthy_workers(self) -> List[Worker]:
         with self._lock:
@@ -375,12 +418,21 @@ def submit_run(project: "Project", cluster: "LocalCluster",
                branch: str = "main", targets: Optional[Sequence[str]] = None,
                client: Optional[Client] = None, run_id: Optional[str] = None,
                force_channel: Optional[str] = None,
-               journal_path: Optional[str] = None):
+               journal_path: Optional[str] = None,
+               shard_threshold_bytes: Optional[int] = None,
+               max_shards: Optional[int] = None):
     """Plan + submit a run to the cluster's shared engine; returns a
-    RunHandle immediately so N invocations can execute concurrently."""
+    RunHandle immediately so N invocations can execute concurrently.
+    Tables over `shard_threshold_bytes` are scanned as up to `max_shards`
+    (default: fleet size) parallel shard tasks."""
     logical = build_logical_plan(project, targets)
+    planner_kw = {}
+    if shard_threshold_bytes is not None:
+        planner_kw["shard_threshold_bytes"] = shard_threshold_bytes
+    if max_shards is not None:
+        planner_kw["max_shards"] = max_shards
     planner = Planner(cluster.catalog, cluster.profiles(),
-                      force_channel=force_channel)
+                      force_channel=force_channel, **planner_kw)
     plan = planner.plan(logical, branch=branch, run_id=run_id)
     return cluster.engine().submit(plan, project, client=client,
                                    journal_path=journal_path)
@@ -390,7 +442,9 @@ def execute_run(project: "Project", catalog: Catalog = None, cluster=None,
                 branch: str = "main", targets: Optional[Sequence[str]] = None,
                 client: Optional[Client] = None, run_id: Optional[str] = None,
                 force_channel: Optional[str] = None,
-                journal_path: Optional[str] = None):
+                journal_path: Optional[str] = None,
+                shard_threshold_bytes: Optional[int] = None,
+                max_shards: Optional[int] = None):
     import tempfile
 
     owns_cluster = cluster is None
@@ -403,7 +457,9 @@ def execute_run(project: "Project", catalog: Catalog = None, cluster=None,
         handle = submit_run(project, cluster, branch=branch, targets=targets,
                             client=client, run_id=run_id,
                             force_channel=force_channel,
-                            journal_path=journal_path)
+                            journal_path=journal_path,
+                            shard_threshold_bytes=shard_threshold_bytes,
+                            max_shards=max_shards)
         return handle.wait()
     finally:
         if owns_cluster:

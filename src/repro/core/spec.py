@@ -107,6 +107,10 @@ class FunctionSpec:
     env: EnvSpec
     materialize: bool = False
     resources: ResourceHint = dataclasses.field(default_factory=ResourceHint)
+    # user contract that f(concat(parts)) == concat(f(parts)): each output
+    # row depends only on its input row, so the planner may run the function
+    # once per input shard and defer the merge downstream
+    rowwise: bool = False
 
     @property
     def code_hash(self) -> str:

@@ -1,0 +1,470 @@
+"""Data-plane sharding: the planner splits large scans and row-wise
+functions across the fleet, the engine late-binds each shard independently,
+and a synthesized gather merges exactly once at the consumer.
+
+Also regression coverage for the concurrency fixes that rode along:
+speculation backpressure, pool growth on provisioning, strict worker lookup,
+locked transport stats, and graceful RunResult.read degradation."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import repro as bp
+from repro.columnar import Catalog, ColumnTable, ObjectStore
+from repro.core import (Client, GatherTask, LocalCluster, Planner, ScanTask,
+                        TaskError, WorkerProfile, build_logical_plan)
+from repro.core.channels import (DataTransport, ShardUnavailable,
+                                 partitioned_handle)
+from repro.core.engine import _Inflight, _RunState
+from repro.core.runtime import execute_run
+
+
+N_ROWS = 16_000
+
+
+@pytest.fixture
+def cat(tmp_path):
+    c = Catalog(ObjectStore(str(tmp_path / "s3")))
+    c.write_table("src", ColumnTable.from_pydict(
+        {"a": np.arange(float(N_ROWS)),
+         "b": np.arange(float(N_ROWS)) * 2.0,
+         "tag": [f"t{i % 7}" for i in range(N_ROWS)]}),
+        rows_per_file=N_ROWS // 8)          # 8 immutable files to shard over
+    return c
+
+
+def _cluster(cat, tmp_path, n=4):
+    return LocalCluster(cat, cat.store, str(tmp_path / "dp"), n_workers=n)
+
+
+def _proj(name="shard"):
+    proj = bp.Project(name)
+
+    @proj.model(rowwise=True)
+    def mapped(data=bp.Model("src", columns=["a", "b"])):
+        return {"a": np.asarray(data.column("a").to_numpy()) + 1.0,
+                "b": np.asarray(data.column("b").to_numpy())}
+
+    @proj.model()
+    def merged(data=bp.Model("mapped")):
+        a = np.asarray(data.column("a").to_numpy())
+        b = np.asarray(data.column("b").to_numpy())
+        return {"a": a, "b": b, "ab": a + b}
+
+    return proj
+
+
+def _holder_of(cluster, task_id):
+    for wid, w in cluster.workers.items():
+        if any(k.endswith(task_id) for k in w.transport._shm):
+            return wid
+    return None
+
+
+# ---------------------------------------------------------------------------
+# correctness: sharded == unsharded, byte for byte
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_run_matches_unsharded(cat, tmp_path):
+    cluster = _cluster(cat, tmp_path)
+    try:
+        sharded = execute_run(_proj("s1"), cluster=cluster,
+                              shard_threshold_bytes=1, max_shards=4)
+        unsharded = execute_run(_proj("s2"), cluster=cluster,
+                                shard_threshold_bytes=1 << 60)
+        shard_tids = [t for t in sharded.plan.order if "#" in t]
+        assert len([t for t in shard_tids if t.startswith("scan:")]) == 4
+        assert len([t for t in shard_tids if t.startswith("func:")]) == 4
+        for t in shard_tids:
+            h = sharded.plan.tasks[t].hints
+            assert h.num_shards == 4
+            assert h.shard_index == int(t.rsplit("#", 1)[1])
+        for name in ("mapped", "merged"):
+            assert sharded.read(name, cluster).equals(
+                unsharded.read(name, cluster))
+    finally:
+        cluster.close()
+
+
+def test_shards_span_multiple_workers(cat, tmp_path):
+    cluster = _cluster(cat, tmp_path)
+    try:
+        res = execute_run(_proj(), cluster=cluster,
+                          shard_threshold_bytes=1, max_shards=4)
+        scan_workers = {res.placements[t] for t in res.placements
+                       if t.startswith("scan:src#")}
+        assert len(scan_workers) >= 2
+    finally:
+        cluster.close()
+
+
+def test_small_tables_stay_unsharded_by_default(cat, tmp_path):
+    """Cost model: below the byte threshold (or with one file) the plan is
+    exactly the classic unsharded one."""
+    cluster = _cluster(cat, tmp_path)
+    try:
+        plan = Planner(cat, cluster.profiles()).plan(
+            build_logical_plan(_proj()))       # default 64 MiB threshold
+        assert all("#" not in t for t in plan.order)
+        assert not any(isinstance(plan.tasks[t], GatherTask)
+                       for t in plan.order)
+    finally:
+        cluster.close()
+
+
+def test_materializing_rowwise_function_not_sharded(cat, tmp_path):
+    proj = bp.Project("mat")
+
+    @proj.model(rowwise=True, materialize=True)
+    def out(data=bp.Model("src", columns=["a"])):
+        return {"a": np.asarray(data.column("a").to_numpy())}
+
+    cluster = _cluster(cat, tmp_path)
+    try:
+        planner = Planner(cat, cluster.profiles(), shard_threshold_bytes=1,
+                          max_shards=4)
+        plan = planner.plan(build_logical_plan(proj))
+        # the scan shards, but the materializing function consumes the whole
+        # table through a gather (catalog writes are not per-shard)
+        assert "scan:src#0" in plan.tasks
+        assert isinstance(plan.tasks["scan:src"], GatherTask)
+        assert "func:out#0" not in plan.tasks
+    finally:
+        cluster.close()
+
+
+def test_all_rowwise_chain_skips_gather_until_read(cat, tmp_path):
+    """A target reached purely through row-wise functions still gathers (run
+    results expose whole dataframes), but no gather sits between the scan
+    and the function shards."""
+    proj = bp.Project("chain")
+
+    @proj.model(rowwise=True)
+    def out(data=bp.Model("src", columns=["a"])):
+        return {"a": np.asarray(data.column("a").to_numpy()) * 3.0}
+
+    cluster = _cluster(cat, tmp_path)
+    try:
+        res = execute_run(proj, cluster=cluster, shard_threshold_bytes=1,
+                          max_shards=4)
+        assert "scan:src" not in res.plan.tasks        # no scan-level gather
+        assert isinstance(res.plan.tasks["func:out"], GatherTask)
+        np.testing.assert_array_equal(
+            res.read("out", cluster).column("a").to_numpy(),
+            np.arange(float(N_ROWS)) * 3.0)
+    finally:
+        cluster.close()
+
+
+# ---------------------------------------------------------------------------
+# per-shard fault tolerance
+# ---------------------------------------------------------------------------
+
+
+def test_per_shard_retry_after_worker_kill(cat, tmp_path):
+    """Killing the worker holding one shard re-executes that shard (via
+    lost-input recovery or retry), not the whole scan fan-out."""
+    cluster = _cluster(cat, tmp_path)
+    killed = {"done": False}
+    lock = threading.Lock()
+    proj = bp.Project("kill")
+
+    @proj.model(rowwise=True)
+    def mapped(data=bp.Model("src", columns=["a"])):
+        with lock:
+            if not killed["done"]:
+                killed["done"] = True
+                # shard 1 completes concurrently on another worker; wait for
+                # its buffers to land, then kill the worker holding them
+                victim = None
+                for _ in range(500):
+                    victim = _holder_of(cluster, "scan:src#1")
+                    if victim is not None:
+                        break
+                    time.sleep(0.01)
+                assert victim is not None
+                cluster.kill_worker(victim)
+        return {"a": np.asarray(data.column("a").to_numpy()) + 1.0}
+
+    @proj.model()
+    def merged(data=bp.Model("mapped")):
+        return {"a": np.asarray(data.column("a").to_numpy())}
+
+    try:
+        res = execute_run(proj, cluster=cluster, shard_threshold_bytes=1,
+                          max_shards=4)
+        np.testing.assert_array_equal(
+            res.read("merged", cluster).column("a").to_numpy(),
+            np.arange(float(N_ROWS)) + 1.0)
+        assert killed["done"]
+        # the killed shard's chain re-ran; at least one untouched shard
+        # chain ran exactly once (recovery stayed per-shard)
+        chain1 = (res.task_attempts["scan:src#1"]
+                  + res.task_attempts["func:mapped#1"])
+        assert chain1 >= 3
+        assert any(res.task_attempts[f"scan:src#{k}"] == 1
+                   and res.task_attempts[f"func:mapped#{k}"] == 1
+                   for k in (0, 2, 3))
+    finally:
+        cluster.close()
+
+
+# ---------------------------------------------------------------------------
+# gather: projection pushdown + partitioned handles
+# ---------------------------------------------------------------------------
+
+
+def test_gather_carries_column_projection(cat, tmp_path):
+    proj = bp.Project("proj")
+
+    @proj.model()
+    def narrow(data=bp.Model("src", columns=["a"])):
+        return {"a": np.asarray(data.column("a").to_numpy())}
+
+    cluster = _cluster(cat, tmp_path)
+    try:
+        res = execute_run(proj, cluster=cluster, shard_threshold_bytes=1,
+                          max_shards=4)
+        gather = res.plan.tasks["scan:src"]
+        assert isinstance(gather, GatherTask)
+        assert gather.columns == ("a",)     # pushed into every part fetch
+        table = res.read("narrow", cluster)
+        assert table.column_names == ["a"]
+        np.testing.assert_array_equal(table.column("a").to_numpy(),
+                                      np.arange(float(N_ROWS)))
+    finally:
+        cluster.close()
+
+
+def test_partitioned_get_mixes_local_and_remote(tmp_path):
+    t1 = DataTransport(str(tmp_path / "w1"))
+    t2 = DataTransport(str(tmp_path / "w2"))
+    a = ColumnTable.from_pydict({"a": np.arange(5.0), "b": np.arange(5.0)})
+    b = ColumnTable.from_pydict({"a": np.arange(5.0, 9.0),
+                                 "b": np.arange(5.0, 9.0)})
+    try:
+        local = t1.put("part0", a, "zerocopy")
+        remote = t2.put("part1", b, "zerocopy")
+        got = t1.get(partitioned_handle("whole", [local, remote]))
+        np.testing.assert_array_equal(got.column("a").to_numpy(),
+                                      np.arange(9.0))
+        narrow = t1.get(partitioned_handle("whole", [local, remote]),
+                        columns=["b"])
+        assert narrow.column_names == ["b"]
+    finally:
+        t1.close()
+        t2.close()
+
+
+def test_partitioned_single_local_part_is_zero_copy(tmp_path):
+    t1 = DataTransport(str(tmp_path / "w1"))
+    a = ColumnTable.from_pydict({"a": np.arange(5.0)})
+    try:
+        part = t1.put("p0", a, "zerocopy")
+        got = t1.get(partitioned_handle("whole", [part]))
+        assert got.column("a").data is a.column("a").data   # same buffers
+    finally:
+        t1.close()
+
+
+def test_partitioned_get_reports_which_shard_died(tmp_path):
+    t1 = DataTransport(str(tmp_path / "w1"))
+    t2 = DataTransport(str(tmp_path / "w2"))
+    a = ColumnTable.from_pydict({"a": np.arange(5.0)})
+    try:
+        local = t1.put("part0", a, "zerocopy")
+        remote = t2.put("part1", a, "zerocopy")
+        t2.flight.close()                   # producer dies
+        with pytest.raises(ShardUnavailable) as err:
+            t1.get(partitioned_handle("whole", [local, remote]))
+        assert err.value.key == "part1"
+    finally:
+        t1.close()
+        t2.close()
+
+
+# ---------------------------------------------------------------------------
+# regression: speculative twins respect backpressure + memory accounting
+# ---------------------------------------------------------------------------
+
+
+def test_speculative_twin_respects_backpressure(cat, tmp_path):
+    cluster = _cluster(cat, tmp_path, n=2)
+    engine = cluster.engine()
+    proj = bp.Project("spec")
+
+    @proj.model()
+    def out(data=bp.Model("src", columns=["a"])):
+        return data
+
+    plan = Planner(cat, cluster.profiles()).plan(build_logical_plan(proj))
+    state = _RunState(plan, None, Client(), None, 2, 4.0, 0.01)
+    tid = "func:out"
+    state.durations = [0.001] * 4
+    info = _Inflight(started=time.perf_counter() - 100.0,
+                     workers={"worker-0"})
+    state.inflight[tid] = info
+    try:
+        # the only other worker is at queue depth: no twin may launch there
+        engine._load["worker-1"] = engine.worker_queue_depth
+        engine._speculation_check(state, tid)
+        assert not info.speculated
+        assert info.timer is not None       # re-armed, will try again
+        info.timer.cancel()
+        engine._load["worker-1"] = 0        # slot freed -> twin launches
+        engine._speculation_check(state, tid)
+        assert info.speculated
+        assert "worker-1" in info.workers
+    finally:
+        if info.timer is not None:
+            info.timer.cancel()
+        cluster.close()
+
+
+def test_shard_cache_keys_name_their_file_chunk(cat, tmp_path):
+    """Per-shard identities derive from the exact file chunk: when predicate
+    pruning (an extra consumer) shifts chunk boundaries, shard k's cache key
+    changes, so a warm shared cluster can never serve a shard computed over
+    a different chunk layout."""
+    def make(proj, pruned):
+        @proj.model(rowwise=True)
+        def f(data=bp.Model("src", columns=["a"],
+                            filter=f"a >= {N_ROWS // 2}")):
+            return {"a": np.asarray(data.column("a").to_numpy()) + 1.0}
+
+        if not pruned:
+            @proj.model()
+            def g(data=bp.Model("src", columns=["a"])):    # disables pruning
+                return {"a": np.asarray(data.column("a").to_numpy())}
+
+    p1, p2 = bp.Project("prune1"), bp.Project("prune2")
+    make(p1, pruned=True)
+    make(p2, pruned=False)
+    planner = Planner(cat, [WorkerProfile(f"w{i}") for i in range(4)],
+                      shard_threshold_bytes=1, max_shards=4)
+    plan1 = planner.plan(build_logical_plan(p1, targets=["f"]))
+    plan2 = planner.plan(build_logical_plan(p2))
+    s1, s2 = plan1.tasks["scan:src#0"], plan2.tasks["scan:src#0"]
+    assert s1.files != s2.files          # pruning shifted the chunk layout
+    assert (plan1.tasks["func:f#0"].cache_key
+            != plan2.tasks["func:f#0"].cache_key)
+
+
+def test_speculation_never_provisions_for_a_twin(cat, tmp_path):
+    """An on-demand-hinted straggler must not spin up a fresh worker just to
+    race itself; with no feasible standing worker the check re-arms."""
+    cluster = _cluster(cat, tmp_path, n=2)
+    engine = cluster.engine()
+    proj = bp.Project("bigspec")
+
+    @proj.model(resources=bp.ResourceHint(memory_gb=64.0))
+    def out(data=bp.Model("src", columns=["a"])):
+        return data
+
+    plan = Planner(cat, cluster.profiles()).plan(build_logical_plan(proj))
+    assert plan.tasks["func:out"].hints.on_demand
+    state = _RunState(plan, None, Client(), None, 2, 4.0, 0.01)
+    tid = "func:out"
+    state.durations = [0.001] * 4
+    info = _Inflight(started=time.perf_counter() - 100.0,
+                     workers={"ondemand-2"})
+    state.inflight[tid] = info
+    fleet_before = set(cluster.workers)
+    try:
+        engine._speculation_check(state, tid)
+        assert not info.speculated
+        assert set(cluster.workers) == fleet_before     # nothing provisioned
+        assert info.timer is not None
+    finally:
+        if info.timer is not None:
+            info.timer.cancel()
+        cluster.close()
+
+
+def test_pool_grows_when_fleet_provisions(cat, tmp_path):
+    cluster = _cluster(cat, tmp_path, n=1)
+    engine = cluster.engine()
+    try:
+        before = engine._pool._max_workers
+        assert before == engine._pool_size(1)
+        for i in range(5):
+            cluster.provision(WorkerProfile(f"ondemand-{i}", memory_gb=1.0,
+                                            on_demand=True))
+        assert engine._pool._max_workers == engine._pool_size(6)
+        assert engine._pool._max_workers > before
+    finally:
+        cluster.close()
+
+
+def test_cluster_get_strict_lookup(cat, tmp_path):
+    cluster = _cluster(cat, tmp_path, n=2)
+    try:
+        assert cluster.get("worker-0") is cluster.workers["worker-0"]
+        with pytest.raises(KeyError, match="unknown worker"):
+            cluster.get("worker-7")        # typo: no silent 8 GB fabrication
+        w = cluster.get("ondemand-42")     # on-demand ids still materialize
+        assert w.profile.on_demand
+    finally:
+        cluster.close()
+
+
+def test_transport_stats_survive_concurrent_updates(tmp_path):
+    transport = DataTransport(str(tmp_path / "w"))
+    table = ColumnTable.from_pydict({"a": np.arange(8.0)})
+    n, threads = 300, 4
+    try:
+        def hammer(tag):
+            for i in range(n):
+                h = transport.put(f"{tag}-{i}", table, "zerocopy")
+                transport.get(h)
+
+        ts = [threading.Thread(target=hammer, args=(t,))
+              for t in range(threads)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        assert transport.stats["zerocopy_puts"] == n * threads
+        assert transport.stats["gets"] == n * threads
+    finally:
+        transport.close()
+
+
+def test_read_dead_zerocopy_producer_raises_task_error(cat, tmp_path):
+    cluster = _cluster(cat, tmp_path, n=2)
+    proj = bp.Project("dead")
+
+    @proj.model()
+    def out(data=bp.Model("src", columns=["a"])):
+        return {"a": np.asarray(data.column("a").to_numpy())}
+
+    try:
+        res = execute_run(proj, cluster=cluster)
+        cluster.kill_worker(res.placements["func:out"])
+        with pytest.raises(TaskError, match="buffers"):
+            res.read("out", cluster)        # clear error, not ConnectionError
+    finally:
+        cluster.close()
+
+
+def test_read_degrades_to_mmap_spill_after_kill(cat, tmp_path):
+    cluster = _cluster(cat, tmp_path, n=2)
+    engine = cluster.engine()
+    engine.mmap_spill_bytes = 0             # every output spills to disk
+    proj = bp.Project("spilled")
+
+    @proj.model()
+    def out(data=bp.Model("src", columns=["a"])):
+        return {"a": np.asarray(data.column("a").to_numpy()) * 2.0}
+
+    try:
+        res = execute_run(proj, cluster=cluster)
+        cluster.kill_worker(res.placements["func:out"])
+        got = res.read("out", cluster)      # spill file outlives the worker
+        np.testing.assert_array_equal(got.column("a").to_numpy(),
+                                      np.arange(float(N_ROWS)) * 2.0)
+    finally:
+        cluster.close()
