@@ -1,7 +1,8 @@
 PYTHON ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: test test-fast bench-smoke serve-smoke lint
+.PHONY: test test-fast bench-smoke bench-sharding bench-multihost \
+	serve-smoke lint
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -17,6 +18,9 @@ bench-smoke:
 
 bench-sharding:
 	$(PYTHON) -m benchmarks.sharded_scan --json sharded_scan.json
+
+bench-multihost:
+	$(PYTHON) -m benchmarks.multihost_scan --json multihost_scan.json
 
 serve-smoke:
 	$(PYTHON) -m repro.launch.serve --arch xlstm-125m --smoke --steps 8 --batch 2

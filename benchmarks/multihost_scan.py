@@ -1,0 +1,171 @@
+"""Multi-host data plane benchmark: the fleet as separate OS processes.
+
+`sharded_scan` proved the planner can split a scan across an in-process
+fleet; this benchmark proves the same plan runs across *process-isolated*
+workers (RemoteCluster + worker_main daemons) — separate memories, one GIL
+each, dataframes exchanged over flight, events/logs streaming back over the
+control-plane RPC — and that the output is byte-identical to a
+single-process run. Then it repeats the run and SIGKILLs one worker process
+after its first shard lands: per-shard retry plus lost-input recovery must
+complete the run on the survivor with the same bytes.
+
+    PYTHONPATH=src python -m benchmarks.multihost_scan [--smoke] [--json PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import report
+import repro as bp
+from repro.columnar import Catalog, ColumnTable, ObjectStore
+from repro.core import Client, LocalCluster
+from repro.core.remote import RemoteCluster
+from repro.core.runtime import execute_run, submit_run
+
+
+def make_project() -> bp.Project:
+    """Module-level factory: the worker daemons import THIS module (via
+    `--project benchmarks.multihost_scan:make_project`), so control plane
+    and data plane plan/execute the same function specs."""
+    proj = bp.Project("multihost")
+
+    @proj.model(rowwise=True)
+    def enriched(data=bp.Model("txns", columns=["usd", "qty"])):
+        usd = np.asarray(data.column("usd").to_numpy())
+        qty = np.asarray(data.column("qty").to_numpy())
+        score = np.sqrt(np.abs(usd)) * np.log1p(qty)
+        for _ in range(20):
+            score = np.tanh(score) + np.sqrt(np.abs(usd + score))
+        return {"score": score}
+
+    @proj.model()
+    def summary(data=bp.Model("enriched")):
+        score = np.asarray(data.column("score").to_numpy())
+        return {"total": np.array([score.sum()]),
+                "rows": np.array([len(score)])}
+
+    return proj
+
+
+PROJECT_SPEC = "benchmarks.multihost_scan:make_project"
+
+
+def run(n_rows: int = 1_000_000, n_workers: int = 2, n_files: int = 8,
+        json_path: str = None) -> dict:
+    rng = np.random.default_rng(7)
+    table = ColumnTable.from_pydict({
+        "usd": rng.normal(50.0, 20.0, n_rows),
+        "qty": rng.integers(1, 40, n_rows).astype(np.float64),
+    })
+    tmp = tempfile.mkdtemp(prefix="bench_multihost_")
+    store = ObjectStore(f"{tmp}/s3")
+    catalog = Catalog(store)
+    catalog.write_table("txns", table, rows_per_file=n_rows // n_files)
+    shard_kw = dict(shard_threshold_bytes=1, max_shards=n_workers)
+
+    # -- single-process baseline (1 worker, unsharded) ----------------------
+    local = LocalCluster(catalog, store, f"{tmp}/dp-local", n_workers=1)
+    try:
+        t0 = time.perf_counter()
+        res = execute_run(make_project(), cluster=local,
+                          shard_threshold_bytes=1 << 60)
+        t_local = time.perf_counter() - t0
+        out_base = res.read("enriched", local)
+        total_base = res.read("summary", local).column("total").to_numpy()[0]
+    finally:
+        local.close()
+
+    # -- the same plan over 2 worker *processes* ----------------------------
+    remote = RemoteCluster(catalog, store, f"{tmp}/dp-remote",
+                           n_workers=n_workers, project=PROJECT_SPEC)
+    try:
+        for w in remote.workers.values():
+            w.heartbeat(timeout=120)    # joins are lazy: measure a standing
+        t0 = time.perf_counter()        # fleet, not process boot
+        res = execute_run(make_project(), cluster=remote, **shard_kw)
+        t_remote = time.perf_counter() - t0
+        out_remote = res.read("enriched", remote)
+        total_remote = res.read("summary",
+                                remote).column("total").to_numpy()[0]
+        shard_workers = sorted({w for t, w in res.placements.items()
+                                if "#" in t})
+    finally:
+        remote.close()
+    identical = out_base.equals(out_remote) and total_base == total_remote
+
+    # -- chaos: SIGKILL one worker process mid-run --------------------------
+    chaos = RemoteCluster(catalog, store, f"{tmp}/dp-chaos",
+                          n_workers=n_workers, project=PROJECT_SPEC,
+                          heartbeat_interval_s=0.2)
+    client = Client()
+    try:
+        handle = submit_run(make_project(), chaos, client=client, **shard_kw)
+        victim = None
+        deadline = time.time() + 120
+        while victim is None and time.time() < deadline:
+            for e in client.of_kind("task_done"):
+                if "#" in e.task_id:            # first shard landed
+                    victim = e.worker
+                    break
+            time.sleep(0.005)
+        if victim is None:
+            raise SystemExit("no shard completed before the kill window")
+        pid = chaos.workers[victim].proc.pid
+        chaos.kill_worker(victim)               # real SIGKILL, buffers gone
+        res = handle.wait(timeout=300)
+        total_chaos = res.read("summary",
+                               chaos).column("total").to_numpy()[0]
+        out_chaos = res.read("enriched", chaos)
+        recovered = (total_chaos == total_base
+                     and out_chaos.equals(out_base))
+        retried = max(res.task_attempts.values())
+    finally:
+        chaos.close()
+
+    report("multihost/local_1proc", t_local, f"{n_rows} rows, in-process")
+    report("multihost/remote_2proc", t_remote,
+           f"{n_workers} worker processes on {len(shard_workers)} hosts, "
+           f"identical={identical}")
+    report("multihost/chaos_recovery", 0.0,
+           f"SIGKILL pid={pid} mid-run -> recovered={recovered}, "
+           f"max_attempts={retried}")
+
+    result = {"n_rows": n_rows, "n_workers": n_workers, "n_files": n_files,
+              "local_s": round(t_local, 4), "remote_s": round(t_remote, 4),
+              "identical": bool(identical),
+              "shard_workers": shard_workers,
+              "chaos_recovered": bool(recovered),
+              "chaos_max_attempts": int(retried)}
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(result, f, indent=2)
+    if not identical:
+        raise SystemExit("remote output differs from single-process run")
+    if len(shard_workers) < 2:
+        raise SystemExit("shards did not span multiple worker processes")
+    if not recovered:
+        raise SystemExit("run did not recover from the SIGKILL")
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes for CI (correctness + recovery only)")
+    ap.add_argument("--full", action="store_true", help="paper-scale sizes")
+    ap.add_argument("--json", default=None, help="write results JSON here")
+    args = ap.parse_args()
+    n_rows = 200_000 if args.smoke else (4_000_000 if args.full
+                                         else 1_000_000)
+    out = run(n_rows=n_rows, json_path=args.json)
+    print(json.dumps(out))
+
+
+if __name__ == "__main__":
+    main()

@@ -147,15 +147,18 @@ def submit(project: Optional[Project] = None, *, cluster,
            branch: str = "main", targets: Optional[Sequence[str]] = None,
            client=None, run_id: Optional[str] = None,
            shard_threshold_bytes: Optional[int] = None,
-           max_shards: Optional[int] = None):
+           max_shards: Optional[int] = None,
+           priority: int = 0):
     """Submit a run without blocking: returns a RunHandle whose `.wait()`
     yields the RunResult. Concurrent submissions share the cluster's worker
-    fleet and caches through one event-driven engine. Scans/row-wise
+    fleet and caches through one event-driven engine (`cluster` may be a
+    LocalCluster or a process-isolated remote.RemoteCluster). Scans/row-wise
     functions over `shard_threshold_bytes` split into up to `max_shards`
-    shard tasks spread across the fleet."""
+    shard tasks spread across the fleet. A higher `priority` wins contended
+    worker slots over lower-priority concurrent runs (FIFO on ties)."""
     from repro.core.runtime import submit_run
 
     return submit_run(project or _default_project, cluster, branch=branch,
                       targets=targets, client=client, run_id=run_id,
                       shard_threshold_bytes=shard_threshold_bytes,
-                      max_shards=max_shards)
+                      max_shards=max_shards, priority=priority)

@@ -7,11 +7,13 @@ from repro.core.logical import LogicalPlan, PlanError, build_logical_plan
 from repro.core.physical import (FunctionTask, GatherTask, PhysicalPlan,
                                  PlacementHint, Planner, ScanTask,
                                  WorkerProfile)
+from repro.core.contract import ClusterLike, TransportLike, WorkerLike
 from repro.core.runtime import (Client, Event, LocalCluster, TaskError,
                                 Worker, WorkerFailure, execute_run,
                                 submit_run)
 from repro.core.engine import (ExecutionEngine, HandleMap, RunHandle,
                                RunResult)
+from repro.core.remote import RemoteCluster, RemoteWorker, WorkerDaemon
 from repro.core.scheduler import Scheduler
 
 __all__ = [
@@ -19,7 +21,9 @@ __all__ = [
     "LogicalPlan", "PlanError", "build_logical_plan",
     "FunctionTask", "GatherTask", "PhysicalPlan", "PlacementHint", "Planner",
     "ScanTask", "WorkerProfile",
+    "ClusterLike", "TransportLike", "WorkerLike",
     "Client", "Event", "LocalCluster", "TaskError", "Worker", "WorkerFailure",
     "execute_run", "submit_run",
-    "ExecutionEngine", "HandleMap", "RunHandle", "RunResult", "Scheduler",
+    "ExecutionEngine", "HandleMap", "RunHandle", "RunResult",
+    "RemoteCluster", "RemoteWorker", "WorkerDaemon", "Scheduler",
 ]

@@ -191,12 +191,24 @@ class FlightServer:
 
 def flight_get(host: str, port: int, key: str,
                columns: Optional[Sequence[str]] = None) -> ColumnTable:
-    sock = socket.create_connection((host, port))
+    """Fetch a registered table from a peer's flight endpoint.
+
+    Error contract (the remote runtime's recovery paths lean on it):
+    a server that knows nothing about the key raises ``KeyError``; every
+    transport-level failure — connection refused/reset, the peer closing
+    after the do_get header or mid-stream, a garbled header, the localhost
+    self-connect artifact — raises ``ShardUnavailable(key)``, never a raw
+    socket error. Callers map ShardUnavailable/KeyError to
+    HandleUnavailable, which re-executes exactly the lost producer."""
+    try:
+        sock = socket.create_connection((host, port))
+    except OSError as e:
+        raise ShardUnavailable(key) from e
     try:
         if sock.getsockname() == sock.getpeername():
             # localhost ephemeral-port self-connection (server is gone and
             # TCP simultaneous-open hit our own source port)
-            raise ConnectionError("flight self-connect: server is gone")
+            raise ShardUnavailable(key)
         _send_frame(sock, json.dumps({"key": key,
                                       "columns": list(columns) if columns else None})
                     .encode())
@@ -214,6 +226,11 @@ def flight_get(host: str, port: int, key: str,
                                        bufs.get("offsets"),
                                        bufs.get("validity"))
         return ColumnTable(out)
+    except (ShardUnavailable, KeyError):
+        raise
+    except (ConnectionError, OSError, json.JSONDecodeError,
+            struct.error) as e:
+        raise ShardUnavailable(key) from e
     finally:
         sock.close()
 

@@ -7,7 +7,9 @@ not by a centralized polling loop over a precomputed schedule.
 
   * **indegree counters + ready queue** — every task knows how many distinct
     parents it still waits on; a completion callback decrements its children
-    and dispatches any that hit zero immediately (no `cv.wait` spin);
+    and dispatches any that hit zero immediately (no `cv.wait` spin); the
+    ready queue is a heap ordered by (run priority desc, FIFO seq), so a
+    high-priority run's tasks take contended worker slots first;
   * **late-binding placement** — the planner emits hints (memory needs,
     co-location groups, on-demand flags); the engine binds each task to a
     concrete worker at dispatch time: least-loaded among healthy workers
@@ -27,11 +29,12 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import heapq
+import itertools
 import threading
 import time
-from collections import deque
 from concurrent.futures import ThreadPoolExecutor
-from typing import Dict, List, Optional, Sequence, Set, TYPE_CHECKING
+from typing import Dict, List, Optional, Sequence, Set, Tuple, TYPE_CHECKING
 
 from repro.core.channels import TableHandle
 from repro.core.journal import RunJournal
@@ -42,7 +45,7 @@ from repro.core.runtime import (Client, Event, HandleUnavailable, TaskError,
 
 if TYPE_CHECKING:
     from repro.api import Project
-    from repro.core.runtime import LocalCluster
+    from repro.core.contract import ClusterLike, WorkerLike
 
 
 def _stable_digest(s: str) -> int:
@@ -94,7 +97,7 @@ class RunResult:
     task_attempts: Dict[str, int]
     placements: Dict[str, str] = dataclasses.field(default_factory=dict)
 
-    def read(self, name: str, cluster: "LocalCluster"):
+    def read(self, name: str, cluster: "ClusterLike"):
         """Fetch a produced dataframe (targets or any intermediate)."""
         tid = f"func:{name}" if f"func:{name}" in self.handles else f"scan:{name}"
         if tid in self.handles:
@@ -112,7 +115,7 @@ class RunResult:
         return compute.concat_tables(
             [self._read_handle(t, cluster) for t in shard_tids])
 
-    def _read_handle(self, tid: str, cluster: "LocalCluster"):
+    def _read_handle(self, tid: str, cluster: "ClusterLike"):
         """Read one task's buffers, degrading across the fleet: the recorded
         placement first, then any healthy worker (mmap/objectstore handles
         locate by path/key and zerocopy may have flight-visible twins). A
@@ -152,7 +155,7 @@ class _RunState:
 
     def __init__(self, plan: PhysicalPlan, project, client: Client,
                  journal: Optional[RunJournal], max_retries: int,
-                 spec_factor: float, spec_min_s: float):
+                 spec_factor: float, spec_min_s: float, priority: int = 0):
         self.plan = plan
         self.project = project
         self.client = client
@@ -160,13 +163,14 @@ class _RunState:
         self.max_retries = max_retries
         self.spec_factor = spec_factor
         self.spec_min_s = spec_min_s
+        self.priority = priority
         self.handles = HandleMap()
         self.attempts: Dict[str, int] = {t: 0 for t in plan.order}
         self.indegree: Dict[str, int] = {t: len(plan.parents[t])
                                          for t in plan.order}
         self.done: Set[str] = set()
         self.inflight: Dict[str, _Inflight] = {}
-        self.ready: deque = deque()
+        self.queued: Set[str] = set()   # tids on the engine's ready heap
         self.placements: Dict[str, str] = {}
         self.group_worker: Dict[str, str] = {}
         self.durations: List[float] = []
@@ -203,9 +207,11 @@ class RunHandle:
 
 
 class ExecutionEngine:
-    """Shared, event-driven dispatcher over one LocalCluster's fleet."""
+    """Shared, event-driven dispatcher over one cluster's worker fleet —
+    in-process threads (LocalCluster) or isolated processes (RemoteCluster),
+    via the contract.ClusterLike/WorkerLike surface."""
 
-    def __init__(self, cluster: "LocalCluster", worker_queue_depth: int = 4,
+    def __init__(self, cluster: "ClusterLike", worker_queue_depth: int = 4,
                  mmap_spill_bytes: int = int(2e9)):
         self.cluster = cluster
         self.worker_queue_depth = worker_queue_depth
@@ -214,6 +220,11 @@ class ExecutionEngine:
         self._runs: List[_RunState] = []
         self._load: Dict[str, int] = {}          # worker_id -> inflight tasks
         self._mem: Dict[str, int] = {}           # worker_id -> inflight bytes
+        # one ready heap across all runs: (-priority, seq, tid, state); seq
+        # is engine-global and unique, so equal-priority entries pop FIFO
+        # and the comparison never reaches the unorderable state object
+        self._ready: List[Tuple[int, int, str, _RunState]] = []
+        self._seq = itertools.count()
         self._pool = ThreadPoolExecutor(
             max_workers=self._pool_size(len(cluster.workers)),
             thread_name_prefix="engine")
@@ -233,14 +244,39 @@ class ExecutionEngine:
             if needed > self._pool._max_workers:
                 self._pool._max_workers = needed
 
+    def worker_lost(self, worker_id: str) -> None:
+        """Failure-detector hook (remote heartbeat / chaos kill): a worker
+        process died, so every zerocopy/flight output resident only in its
+        memory is gone. Proactively invalidate those completions and
+        re-dispatch, so recovery starts now instead of when a consumer trips
+        the hole; mmap and objectstore outputs are path/key-addressed and
+        survive the process, so they're kept."""
+        with self._lock:
+            for state in list(self._runs):
+                if state.finished.is_set():
+                    continue
+                lost = [tid for tid, wid in state.placements.items()
+                        if wid == worker_id and tid in state.done]
+                for tid in lost:
+                    handle = state.handles.get(tid)
+                    if handle is not None and handle.channel in ("mmap",
+                                                                 "objectstore"):
+                        continue
+                    state.client.emit(Event("worker_lost", tid, worker_id,
+                                            {"invalidated": True}))
+                    self._invalidate(state, tid)
+            self._dispatch_ready()
+
     # -- public API ---------------------------------------------------------
     def submit(self, plan: PhysicalPlan, project=None,
                client: Optional[Client] = None,
                journal_path: Optional[str] = None,
                max_retries: int = 2, speculation_factor: float = 4.0,
-               speculation_min_s: float = 0.5) -> RunHandle:
+               speculation_min_s: float = 0.5, priority: int = 0) -> RunHandle:
         """Register a run and dispatch its source tasks. Returns immediately;
-        the run progresses on completion events."""
+        the run progresses on completion events. `priority` orders the shared
+        ready heap: when worker slots are contended, a higher-priority run's
+        tasks dispatch first (equal priorities stay FIFO)."""
         with self._lock:
             if self._closed:
                 raise TaskError("engine is closed")
@@ -249,9 +285,11 @@ class ExecutionEngine:
         if journal:
             journal.record_plan(plan.plan_id, plan.run_id, plan.order)
         client.emit(Event("plan", plan.plan_id, "", {"tasks": len(plan.order),
-                                                     "run_id": plan.run_id}))
+                                                     "run_id": plan.run_id,
+                                                     "priority": priority}))
         state = _RunState(plan, project, client, journal, max_retries,
-                          speculation_factor, speculation_min_s)
+                          speculation_factor, speculation_min_s,
+                          priority=priority)
         with self._lock:
             if self._closed:
                 if journal:
@@ -260,8 +298,8 @@ class ExecutionEngine:
             self._runs.append(state)
             for tid in plan.order:
                 if state.indegree[tid] == 0:
-                    state.ready.append(tid)
-            self._dispatch_ready(state)
+                    self._enqueue(state, tid)
+            self._dispatch_ready()
         if not state.plan.order:
             self._finalize(state)
         return RunHandle(self, state)
@@ -271,13 +309,18 @@ class ExecutionEngine:
         return self.submit(plan, project, client, **kw).wait()
 
     def close(self) -> None:
+        to_cancel: List[Tuple[object, str, str]] = []
         with self._lock:
             self._closed = True
             pending = list(self._runs)
             for state in pending:
-                for info in state.inflight.values():
+                for tid, info in state.inflight.items():
                     if info.timer is not None:
                         info.timer.cancel()
+                    for wid in info.workers:
+                        w = self.cluster.workers.get(wid)
+                        if w is not None and hasattr(w, "cancel"):
+                            to_cancel.append((w, state.plan.run_id, tid))
             # fail pending runs so RunHandle.wait() never blocks forever
             # (under the lock: a run completing concurrently must not be
             # marked aborted after its result was finalized)
@@ -286,6 +329,13 @@ class ExecutionEngine:
                     state.error = (f"run {state.plan.run_id} aborted: "
                                    "engine closed")
                     self._finalize(state)
+        # best-effort, off-lock: tell remote workers to drop aborted tasks'
+        # outputs instead of publishing them after the run is gone
+        for w, run_id, tid in to_cancel:
+            try:
+                w.cancel(run_id, tid)
+            except Exception:  # noqa: BLE001 — dying worker, already aborted
+                pass
         self._pool.shutdown(wait=False)
 
     # -- placement: late binding -------------------------------------------
@@ -352,22 +402,39 @@ class ExecutionEngine:
         return healthy[_stable_digest(task.task_id) % len(healthy)]
 
     # -- dispatch -----------------------------------------------------------
-    def _dispatch_ready(self, state: _RunState) -> None:
-        """Drain the ready queue as far as worker queues allow (lock held)."""
-        blocked: List[str] = []
-        while state.ready:
-            tid = state.ready.popleft()
-            if tid in state.done or tid in state.inflight or state.error:
+    def _enqueue(self, state: _RunState, tid: str) -> None:
+        """Queue a task on the shared ready heap (lock held). The seq is
+        sticky for the entry's lifetime: a backpressure re-queue keeps its
+        FIFO position instead of dropping to the back of the line."""
+        if tid in state.queued:
+            return
+        state.queued.add(tid)
+        heapq.heappush(self._ready,
+                       (-state.priority, next(self._seq), tid, state))
+
+    def _dispatch_ready(self) -> None:
+        """Drain the ready heap — highest run priority first, FIFO within a
+        priority — as far as worker queues allow (lock held)."""
+        blocked: List[Tuple[int, int, str, _RunState]] = []
+        while self._ready:
+            entry = heapq.heappop(self._ready)
+            _, _, tid, state = entry
+            if (state.finished.is_set() or state.error
+                    or tid in state.done or tid in state.inflight
+                    or state.indegree[tid] != 0):
+                # stale entry: the run ended, a twin won, or a parent was
+                # invalidated after this was queued
+                state.queued.discard(tid)
                 continue
-            if state.indegree[tid] != 0:
-                continue    # a parent was invalidated after this was queued
             task = state.plan.tasks[tid]
             worker = self._select_worker(state, task, exclude=set())
             if worker is None:
-                blocked.append(tid)     # backpressure: re-queued below
+                blocked.append(entry)   # backpressure: re-pushed below
                 continue
+            state.queued.discard(tid)
             self._launch(state, tid, worker)
-        state.ready.extend(blocked)
+        for entry in blocked:
+            heapq.heappush(self._ready, entry)
 
     def _launch(self, state: _RunState, tid: str, worker: Worker,
                 speculative: bool = False) -> None:
@@ -466,10 +533,9 @@ class ExecutionEngine:
             self._load[worker.worker_id] = max(0, n - 1)
             m = self._mem.get(worker.worker_id, 0)
             self._mem[worker.worker_id] = max(0, m - task.hints.memory_bytes)
-            # a slot opened: drain any run blocked on backpressure
-            for state in self._runs:
-                if state.ready and not state.finished.is_set():
-                    self._dispatch_ready(state)
+            # a slot opened: drain whatever run the heap says goes next
+            if self._ready:
+                self._dispatch_ready()
 
     # -- completion events --------------------------------------------------
     def _on_done(self, state: _RunState, tid: str, worker: Worker,
@@ -503,8 +569,8 @@ class ExecutionEngine:
                     continue    # already consumed an earlier output of tid
                 state.indegree[child] -= 1
                 if state.indegree[child] == 0:
-                    state.ready.append(child)
-            self._dispatch_ready(state)
+                    self._enqueue(state, child)
+            self._dispatch_ready()
             if state.remaining() == 0:
                 self._finalize(state)
 
@@ -550,9 +616,9 @@ class ExecutionEngine:
                 self._invalidate(state, p)
             state.indegree[tid] = len([p for p in state.plan.parents[tid]
                                        if p not in state.done])
-            if state.indegree[tid] == 0 and tid not in state.ready:
-                state.ready.append(tid)
-            self._dispatch_ready(state)
+            if state.indegree[tid] == 0:
+                self._enqueue(state, tid)
+            self._dispatch_ready()
 
     def _invalidate(self, state: _RunState, tid: str) -> None:
         """Forget a completed task whose output buffers were lost; safe to
@@ -567,9 +633,8 @@ class ExecutionEngine:
                     state.indegree[child] = len(
                         [p for p in state.plan.parents[child]
                          if p not in state.done])
-        if tid not in state.inflight and tid not in state.ready:
-            if state.indegree[tid] == 0:
-                state.ready.append(tid)
+        if tid not in state.inflight and state.indegree[tid] == 0:
+            self._enqueue(state, tid)
 
     def _fail_run(self, state: _RunState, tid: str, err: str) -> None:
         state.error = f"run {state.plan.run_id} failed at {tid}: {err}"

@@ -414,17 +414,21 @@ class LocalCluster:
 # ---------------------------------------------------------------------------
 
 
-def submit_run(project: "Project", cluster: "LocalCluster",
+def submit_run(project: "Project", cluster,
                branch: str = "main", targets: Optional[Sequence[str]] = None,
                client: Optional[Client] = None, run_id: Optional[str] = None,
                force_channel: Optional[str] = None,
                journal_path: Optional[str] = None,
                shard_threshold_bytes: Optional[int] = None,
-               max_shards: Optional[int] = None):
+               max_shards: Optional[int] = None,
+               priority: int = 0):
     """Plan + submit a run to the cluster's shared engine; returns a
     RunHandle immediately so N invocations can execute concurrently.
+    `cluster` is anything ClusterLike (LocalCluster, remote.RemoteCluster).
     Tables over `shard_threshold_bytes` are scanned as up to `max_shards`
-    (default: fleet size) parallel shard tasks."""
+    (default: fleet size) parallel shard tasks. `priority` orders this
+    run's tasks on the engine's shared ready heap: higher wins contended
+    worker slots first; equal priorities stay FIFO."""
     logical = build_logical_plan(project, targets)
     planner_kw = {}
     if shard_threshold_bytes is not None:
@@ -435,7 +439,8 @@ def submit_run(project: "Project", cluster: "LocalCluster",
                       force_channel=force_channel, **planner_kw)
     plan = planner.plan(logical, branch=branch, run_id=run_id)
     return cluster.engine().submit(plan, project, client=client,
-                                   journal_path=journal_path)
+                                   journal_path=journal_path,
+                                   priority=priority)
 
 
 def execute_run(project: "Project", catalog: Catalog = None, cluster=None,

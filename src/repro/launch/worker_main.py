@@ -1,0 +1,83 @@
+"""Worker daemon entrypoint: one process-isolated data-plane worker.
+
+Spawned by ``RemoteCluster`` (or by hand / an init system on another host
+that shares the object store and scratch filesystem):
+
+    PYTHONPATH=src python -m repro.launch.worker_main \\
+        --worker-id w0 --store-root /shared/s3 --scratch /shared/dp \\
+        --project examples.remote_cluster:build_project --port 7070
+
+Hosts a ``runtime.Worker`` — DataTransport (shared-memory table store +
+flight endpoint + spill dir), scan/result caches, and a *per-process*
+PackageStore (package installs never race another worker's) — behind the
+control-plane RPC (``core.remote.WorkerDaemon``). Joinable by address: the
+bound control port is announced atomically via ``--port-file`` for spawners
+and printed to stderr for humans. Runs until a ``shutdown`` op or a signal.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import tempfile
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="repro data-plane worker daemon")
+    ap.add_argument("--worker-id", required=True)
+    ap.add_argument("--store-root", required=True,
+                    help="object-store root shared with the control plane")
+    ap.add_argument("--scratch", default=None,
+                    help="scratch root (spill/caches/envs); "
+                         "default: a fresh temp dir")
+    ap.add_argument("--project", default=None,
+                    help="'pkg.module:attr' or '/path/file.py:attr' "
+                         "(a Project or a zero-arg factory)")
+    ap.add_argument("--memory-gb", type=float, default=4.0)
+    ap.add_argument("--cpus", type=int, default=4)
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=0,
+                    help="control port (0 = ephemeral)")
+    ap.add_argument("--port-file", default=None,
+                    help="write the bound control port here (atomically)")
+    args = ap.parse_args(argv)
+
+    from repro.columnar.catalog import Catalog
+    from repro.columnar.objectstore import ObjectStore
+    from repro.core.envs import PackageStore
+    from repro.core.physical import WorkerProfile
+    from repro.core.remote import WorkerDaemon, load_project_spec
+    from repro.core.runtime import Worker
+
+    scratch = args.scratch or tempfile.mkdtemp(prefix="repro_worker_")
+    store = ObjectStore(args.store_root)
+    catalog = Catalog(store)
+    # per-process package store: cross-process installs can't collide on a
+    # shared staging dir (the in-process PackageStore only has thread locks)
+    pkgstore = PackageStore(os.path.join(scratch, args.worker_id, "pkgstore"))
+    worker = Worker(WorkerProfile(args.worker_id, memory_gb=args.memory_gb,
+                                  cpus=args.cpus),
+                    catalog, store, scratch, pkgstore)
+    project = load_project_spec(args.project) if args.project else None
+    daemon = WorkerDaemon(worker, project=project, host=args.host,
+                          port=args.port)
+    if args.port_file:
+        tmp = f"{args.port_file}.{os.getpid()}.tmp"
+        with open(tmp, "w") as f:
+            f.write(str(daemon.port))
+        os.replace(tmp, args.port_file)
+    print(f"worker {args.worker_id} pid={os.getpid()} "
+          f"control={daemon.host}:{daemon.port} "
+          f"flight={worker.transport.flight.host}:"
+          f"{worker.transport.flight.port}",
+          file=sys.stderr, flush=True)
+    try:
+        daemon.serve_forever()
+    finally:
+        daemon.close()
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,10 +1,15 @@
 """Data channels: zero-copy identity, mmap, flight-over-TCP, object store —
 the paper's Table 3 mechanisms, as correctness contracts."""
+import json
+import socket
+import threading
+
 import numpy as np
 import pytest
 
 from repro.columnar import ColumnTable, ObjectStore
-from repro.core.channels import DataTransport, flight_get
+from repro.core.channels import (DataTransport, ShardUnavailable,
+                                 _recv_frame, _send_frame, flight_get)
 
 
 @pytest.fixture
@@ -93,3 +98,114 @@ def test_evict_releases(transport, table):
     import os
 
     assert not os.path.exists(h.location)
+
+
+# ---------------------------------------------------------------------------
+# flight failure mapping: every transport-level failure surfaces as
+# ShardUnavailable (-> HandleUnavailable -> per-shard recovery), never a raw
+# socket error; an unknown key stays KeyError. The remote worker runtime
+# leans on exactly these paths.
+# ---------------------------------------------------------------------------
+
+
+def _fake_flight_server(script):
+    """One-shot server running `script(conn)` on the first connection."""
+    srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    srv.bind(("127.0.0.1", 0))
+    srv.listen(1)
+
+    def serve():
+        conn, _ = srv.accept()
+        try:
+            script(conn)
+        finally:
+            conn.close()
+            srv.close()
+
+    threading.Thread(target=serve, daemon=True).start()
+    return srv.getsockname()
+
+
+def test_flight_peer_close_after_header_is_shard_unavailable():
+    header = {"num_rows": 10, "columns": [
+        {"name": "a", "kind": "numeric",
+         "buffers": [{"role": "data", "dtype": "float64", "size": 80}]}]}
+
+    def script(conn):
+        _recv_frame(conn)                       # the do_get request
+        _send_frame(conn, json.dumps(header).encode())
+        # ...and vanish before sending any buffer bytes
+
+    host, port = _fake_flight_server(script)
+    with pytest.raises(ShardUnavailable):
+        flight_get(host, port, "k")
+
+
+def test_flight_midstream_disconnect_is_shard_unavailable():
+    header = {"num_rows": 10, "columns": [
+        {"name": "a", "kind": "numeric",
+         "buffers": [{"role": "data", "dtype": "float64", "size": 80}]}]}
+
+    def script(conn):
+        _recv_frame(conn)
+        _send_frame(conn, json.dumps(header).encode())
+        conn.sendall(b"\x00" * 16)              # 16 of 80 promised bytes
+
+    host, port = _fake_flight_server(script)
+    with pytest.raises(ShardUnavailable):
+        flight_get(host, port, "k")
+
+
+def test_flight_garbled_header_is_shard_unavailable():
+    def script(conn):
+        _recv_frame(conn)
+        _send_frame(conn, b"not json at all")
+
+    host, port = _fake_flight_server(script)
+    with pytest.raises(ShardUnavailable):
+        flight_get(host, port, "k")
+
+
+def test_flight_dead_server_is_shard_unavailable(tmp_path, table):
+    t = DataTransport(str(tmp_path / "spill"))
+    t.put("k", table, "flight")
+    host, port = t.flight.host, t.flight.port
+    t.close()                                   # producer dies
+    with pytest.raises(ShardUnavailable):
+        flight_get(host, port, "k")
+
+
+def test_flight_self_connect_guard(monkeypatch):
+    """TCP simultaneous-open can hand a client its OWN ephemeral port when
+    the server is gone; the guard must treat it as a dead shard, not a
+    server. Forge the artifact by self-connecting a bound socket."""
+    s = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    s.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+    s.bind(("127.0.0.1", 0))
+    s.connect(s.getsockname())                  # linux: self-connection
+    assert s.getsockname() == s.getpeername()
+    monkeypatch.setattr(socket, "create_connection",
+                        lambda addr, **kw: s)
+    with pytest.raises(ShardUnavailable):
+        flight_get("127.0.0.1", 1, "k")
+
+
+def test_flight_concurrent_do_get_same_key(transport, table):
+    transport.put("hotkey", table, "flight")
+    results = [None] * 8
+    errors = []
+
+    def fetch(i):
+        try:
+            results[i] = flight_get(transport.flight.host,
+                                    transport.flight.port, "hotkey")
+        except Exception as e:  # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=fetch, args=(i,)) for i in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    assert all(r is not None and r.equals(table) for r in results)

@@ -1,0 +1,109 @@
+"""Priority-aware ready queue: the engine's shared heap orders contended
+dispatch by (run priority desc, FIFO seq) instead of pure FIFO."""
+import threading
+
+import numpy as np
+import pytest
+
+import repro as bp
+from repro.columnar import Catalog, ColumnTable, ObjectStore
+from repro.core import LocalCluster
+from repro.core.engine import ExecutionEngine
+from repro.core.logical import build_logical_plan
+from repro.core.physical import Planner
+from repro.core.runtime import submit_run
+
+
+@pytest.fixture
+def cat(tmp_path):
+    c = Catalog(ObjectStore(str(tmp_path / "s3")))
+    c.write_table("src", ColumnTable.from_pydict({"a": np.arange(100.0)}))
+    return c
+
+
+def _tagged_project(tag, order, lock):
+    """exec'd per-tag source: the tag is baked into the code object, so the
+    two runs get distinct content-addressed cache keys (a shared fleet would
+    otherwise serve run 2 from run 1's result cache and never execute it)."""
+    proj = bp.Project(f"prio-{tag}")
+    src = (f'@proj.model(name="out_{tag}")\n'
+           f'def out(data=bp.Model("src", columns=["a"])):\n'
+           f'    with lock:\n'
+           f'        order.append("{tag}")\n'
+           f'    return {{"a": np.asarray(data.column("a").to_numpy())}}\n')
+    exec(src, {"proj": proj, "bp": bp, "lock": lock, "order": order,
+               "np": np})
+    return proj
+
+
+def _submit(engine, cat, cluster, proj, priority):
+    plan = Planner(cat, cluster.profiles()).plan(build_logical_plan(proj))
+    return engine.submit(plan, proj, priority=priority)
+
+
+def _contended_engine(cat, tmp_path):
+    """One worker, one slot: every queued task competes for the same slot,
+    so dispatch order is exactly the ready-heap order."""
+    cluster = LocalCluster(cat, cat.store, str(tmp_path / "dp"), n_workers=1)
+    engine = ExecutionEngine(cluster, worker_queue_depth=1)
+    cluster._engine = engine
+    return cluster, engine
+
+
+def _run_gated(cat, tmp_path, submissions):
+    """Occupy the only worker slot with a gate task, submit `submissions`
+    while it blocks, then release and return the observed execution order."""
+    cluster, engine = _contended_engine(cat, tmp_path)
+    order, lock = [], threading.Lock()
+    release = threading.Event()
+    started = threading.Event()
+    gate_proj = bp.Project("gate")
+
+    @gate_proj.model()
+    def gate(data=bp.Model("src", columns=["a"])):
+        started.set()
+        assert release.wait(timeout=30)
+        return {"a": np.asarray(data.column("a").to_numpy())}
+
+    try:
+        gate_handle = _submit(engine, cat, cluster, gate_proj, priority=0)
+        assert started.wait(timeout=30)     # worker slot is now occupied
+        handles = [
+            _submit(engine, cat, cluster,
+                    _tagged_project(tag, order, lock), prio)
+            for tag, prio in submissions]
+        release.set()
+        gate_handle.wait(timeout=60)
+        for h in handles:
+            h.wait(timeout=60)
+        return order
+    finally:
+        release.set()
+        cluster.close()
+
+
+def test_high_priority_run_preempts_queued_low(cat, tmp_path):
+    # submitted low first: pure FIFO would run low first; the heap must not
+    order = _run_gated(cat, tmp_path, [("low", 0), ("high", 10)])
+    assert order == ["high", "low"]
+
+
+def test_equal_priority_stays_fifo(cat, tmp_path):
+    order = _run_gated(cat, tmp_path, [("first", 3), ("second", 3)])
+    assert order == ["first", "second"]
+
+
+def test_submit_run_plumbs_priority(cat, tmp_path):
+    cluster = LocalCluster(cat, cat.store, str(tmp_path / "dp"), n_workers=2)
+    proj = bp.Project("plumb")
+
+    @proj.model()
+    def out(data=bp.Model("src", columns=["a"])):
+        return {"a": np.asarray(data.column("a").to_numpy())}
+
+    try:
+        handle = bp.submit(proj, cluster=cluster, priority=7)
+        assert handle._state.priority == 7
+        handle.wait(timeout=60)
+    finally:
+        cluster.close()

@@ -1,0 +1,209 @@
+"""Process-isolated remote worker runtime: the cluster/worker contract,
+control-plane RPC, log streaming over the control channel, heartbeat-based
+failure detection, and process-kill recovery (per-shard + transitive)."""
+import os
+import signal
+import time
+
+import numpy as np
+import pytest
+
+from repro.columnar import Catalog, ColumnTable, ObjectStore
+from repro.core import Client, LocalCluster
+from repro.core.contract import ClusterLike, TransportLike, WorkerLike
+from repro.core.physical import WorkerProfile
+from repro.core.remote import RemoteCluster, load_project_spec
+from repro.core.runtime import execute_run, submit_run
+
+PROJECT_SRC = '''
+import time
+
+import numpy as np
+
+import repro as bp
+
+
+def build():
+    proj = bp.Project("remote-test")
+
+    @proj.model(rowwise=True)
+    def doubled(data=bp.Model("src", columns=["a"])):
+        print("doubling", data.num_rows, "rows")
+        time.sleep(0.15)
+        return {"a": np.asarray(data.column("a").to_numpy()) * 2.0}
+
+    @proj.model()
+    def total(data=bp.Model("doubled")):
+        a = np.asarray(data.column("a").to_numpy())
+        return {"total": np.array([a.sum()]),
+                "rows": np.array([float(len(a))])}
+
+    return proj
+'''
+
+EXPECTED_TOTAL = np.arange(4000.0).sum() * 2
+
+
+@pytest.fixture
+def project_spec(tmp_path):
+    p = tmp_path / "remote_project.py"
+    p.write_text(PROJECT_SRC)
+    return f"{p}:build"
+
+
+@pytest.fixture
+def cat(tmp_path):
+    store = ObjectStore(str(tmp_path / "s3"))
+    c = Catalog(store)
+    c.write_table("src", ColumnTable.from_pydict({"a": np.arange(4000.0)}),
+                  rows_per_file=500)
+    return c
+
+
+@pytest.fixture
+def rcluster(cat, tmp_path, project_spec):
+    c = RemoteCluster(cat, cat.store, str(tmp_path / "dp"), n_workers=2,
+                      project=project_spec, heartbeat_interval_s=0.2)
+    yield c
+    c.close()
+
+
+def _wait_for(pred, timeout=30.0, interval=0.02):
+    deadline = time.time() + timeout
+    while time.time() < deadline:
+        if pred():
+            return True
+        time.sleep(interval)
+    return False
+
+
+# ---------------------------------------------------------------------------
+# the explicit contract: LocalCluster and RemoteCluster are interchangeable
+# ---------------------------------------------------------------------------
+
+
+def test_clusters_satisfy_the_contract(rcluster, cat, tmp_path):
+    local = LocalCluster(cat, cat.store, str(tmp_path / "ldp"), n_workers=1)
+    try:
+        for cluster in (local, rcluster):
+            assert isinstance(cluster, ClusterLike)
+            for w in cluster.workers.values():
+                assert isinstance(w, WorkerLike)
+                assert isinstance(w.transport, TransportLike)
+    finally:
+        local.close()
+
+
+def test_unknown_worker_raises(rcluster):
+    with pytest.raises(KeyError):
+        rcluster.get("nope")
+
+
+# ---------------------------------------------------------------------------
+# happy path: sharded remote run == single-process run, logs stream back
+# ---------------------------------------------------------------------------
+
+
+def test_remote_sharded_run_matches_local(rcluster, cat, tmp_path,
+                                          project_spec):
+    proj = load_project_spec(project_spec)
+    local = LocalCluster(cat, cat.store, str(tmp_path / "ldp"), n_workers=1)
+    try:
+        base = execute_run(proj, cluster=local,
+                           shard_threshold_bytes=1 << 60)
+        base_out = base.read("doubled", local)
+    finally:
+        local.close()
+
+    client = Client()
+    res = execute_run(proj, cluster=rcluster, client=client,
+                      shard_threshold_bytes=1, max_shards=2)
+    out = res.read("doubled", rcluster)
+    assert out.equals(base_out)                       # byte-identical
+    tot = res.read("total", rcluster).column("total").to_numpy()[0]
+    assert tot == EXPECTED_TOTAL
+    # shards actually spread across the two worker *processes*
+    shard_workers = {w for t, w in res.placements.items() if "#" in t}
+    assert len(shard_workers) == 2
+    # user prints crossed the control channel as real-time log events
+    assert any("doubling" in line for line in client.logs())
+
+
+def test_describe_heartbeat_and_cancel_rpcs(rcluster):
+    w = next(iter(rcluster.workers.values()))
+    hb = w.heartbeat()
+    assert hb["ok"] and hb["alive"]
+    d = w.describe()
+    assert d["worker_id"] == w.worker_id
+    assert d["pid"] == w.proc.pid
+    assert "transport_stats" in d and "scan_cache" in d
+    assert w.cancel("some-run", "func:doubled")["cancelled"]
+
+
+def test_stale_daemon_code_is_refused(rcluster, cat, tmp_path):
+    """A joinable daemon may outlive its project source: a plan whose
+    code_hash disagrees with the daemon's loaded function must error, not
+    silently publish old-code results under the new cache key."""
+    from repro.core import TaskError
+
+    edited = tmp_path / "remote_project_v2.py"
+    edited.write_text(PROJECT_SRC.replace("* 2.0", "* 3.0"))
+    proj = load_project_spec(f"{edited}:build")     # client plans new code
+    with pytest.raises(TaskError, match="stale code"):
+        execute_run(proj, cluster=rcluster, shard_threshold_bytes=1 << 60)
+
+
+def test_provision_spawns_a_process(rcluster, cat):
+    before = set(rcluster.workers)
+    w = rcluster.get("ondemand-9")          # late binding may reference one
+    assert w.worker_id == "ondemand-9"
+    assert set(rcluster.workers) - before == {"ondemand-9"}
+    assert w.proc.poll() is None            # a real, live OS process
+    assert w.heartbeat()["ok"]
+
+
+# ---------------------------------------------------------------------------
+# failure: SIGKILL a worker process mid-run -> per-shard recovery
+# ---------------------------------------------------------------------------
+
+
+def test_sigkill_worker_midrun_recovers(rcluster, cat, project_spec):
+    proj = load_project_spec(project_spec)
+    client = Client()
+    handle = submit_run(proj, rcluster, client=client,
+                        shard_threshold_bytes=1, max_shards=2)
+
+    victim = {}
+
+    def first_shard_done():
+        for e in client.of_kind("task_done"):
+            if "#" in e.task_id:
+                victim["worker"] = e.worker
+                return True
+        return False
+
+    assert _wait_for(first_shard_done), "no shard completed in time"
+    rcluster.kill_worker(victim["worker"])          # real SIGKILL
+    res = handle.wait(timeout=180)
+    assert res.read("total", rcluster).column("total").to_numpy()[0] \
+        == EXPECTED_TOTAL
+    # something was re-executed on the survivor
+    assert max(res.task_attempts.values()) > 1
+    assert rcluster.workers[victim["worker"]].proc.poll() is not None
+
+
+def test_heartbeat_detects_external_process_death(rcluster, cat,
+                                                  project_spec):
+    wid, proxy = sorted(rcluster.workers.items())[0]
+    os.kill(proxy.proc.pid, signal.SIGKILL)         # not via kill_worker
+    assert _wait_for(
+        lambda: [w.worker_id for w in rcluster.healthy_workers()] != []
+        and proxy.alive is False, timeout=15), \
+        "heartbeat never marked the dead worker down"
+    assert {w.worker_id for w in rcluster.healthy_workers()} \
+        == set(rcluster.workers) - {wid}
+    # the fleet still serves runs
+    proj = load_project_spec(project_spec)
+    res = execute_run(proj, cluster=rcluster, shard_threshold_bytes=1 << 60)
+    assert res.read("total", rcluster).column("total").to_numpy()[0] \
+        == EXPECTED_TOTAL
