@@ -1,8 +1,8 @@
 PYTHON ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: test test-fast bench-smoke bench-sharding bench-multihost \
-	serve-smoke lint
+.PHONY: test test-fast bench-smoke bench-sharding bench-combine \
+	bench-multihost serve-smoke lint
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -18,6 +18,9 @@ bench-smoke:
 
 bench-sharding:
 	$(PYTHON) -m benchmarks.sharded_scan --json sharded_scan.json
+
+bench-combine:
+	$(PYTHON) -m benchmarks.shard_combine --json shard_combine.json
 
 bench-multihost:
 	$(PYTHON) -m benchmarks.multihost_scan --json multihost_scan.json

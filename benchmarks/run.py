@@ -22,8 +22,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (kernels_bench, multihost_scan, pipeline_cache,
-                            sharded_scan, table1_limits, table2_envs,
-                            table3_passing, training_throughput)
+                            shard_combine, sharded_scan, table1_limits,
+                            table2_envs, table3_passing, training_throughput)
 
     plan = [
         ("table1_limits", lambda: table1_limits.run(
@@ -36,6 +36,8 @@ def main() -> None:
             n_rows=2_000_000 if args.full else 200_000)),
         ("sharded_scan", lambda: sharded_scan.run(
             n_rows=8_000_000 if args.full else 2_000_000)),
+        ("shard_combine", lambda: shard_combine.run(
+            n_rows=8_000_000 if args.full else 4_000_000)),
         ("multihost_scan", lambda: multihost_scan.run(
             n_rows=4_000_000 if args.full else 1_000_000)),
         ("kernels_bench", lambda: kernels_bench.run(

@@ -1,0 +1,151 @@
+"""Map-side combine benchmark: shard-local aggregation vs gather-then-agg.
+
+Before shard-aware operators, a sharded scan's win collapsed at the first
+aggregation: the gather concatenated every shard's raw rows onto one worker
+(most of them over flight) and ran the whole group_by there, single-threaded.
+With the combine rewrite the same declared aggregation
+(`@bp.model(combinable=bp.GroupByCombine(...))`) runs once per shard where
+the rows already live, and only per-group aggregation states — a few KB —
+cross workers into the CombineTask.
+
+Measures the same group_by pipeline three ways on a 4-worker LocalCluster:
+
+  * unsharded        — whole scan + aggregation on one worker (baseline for
+                       the byte-identity check);
+  * gather-then-agg  — sharded scan, raw-row gather, single-worker group_by
+                       (the pre-rewrite plan, forced by omitting the
+                       contract);
+  * sharded combine  — per-shard partials + CombineTask (the rewrite).
+
+Verifies the combined output is byte-identical to the unsharded run and
+(with --json) writes the numbers for CI to archive.
+
+    PYTHONPATH=src python -m benchmarks.shard_combine [--smoke] [--json PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import report
+import repro as bp
+from repro.columnar import Catalog, ColumnTable, ObjectStore, compute
+from repro.core import CombineTask, LocalCluster
+from repro.core.runtime import execute_run
+
+KEYS = ["country"]
+AGGS = {"total": ("usd", "sum"), "avg": ("usd", "mean"),
+        "n": ("qty", "count"), "hi": ("usd", "max"), "lo": ("qty", "min"),
+        "fees": ("fee", "sum"), "fee_avg": ("fee", "mean"),
+        "disc_hi": ("disc", "max")}
+COLS = ["country", "usd", "qty", "fee", "disc"]
+
+
+def _make_project(name: str, combinable: bool) -> bp.Project:
+    proj = bp.Project(name)
+    contract = bp.GroupByCombine(KEYS, AGGS) if combinable else None
+
+    @proj.model(combinable=contract)
+    def by_country(data=bp.Model("txns", columns=COLS)):
+        return compute.group_by(data, KEYS, AGGS)
+
+    return proj
+
+
+def run(n_rows: int = 4_000_000, n_workers: int = 4, n_files: int = 8,
+        n_groups: int = None, json_path: str = None) -> dict:
+    rng = np.random.default_rng(7)
+    if n_groups is None:
+        # keep per-shard states small relative to the shard (the regime the
+        # rewrite targets): ~0.1% of rows are distinct keys
+        n_groups = max(n_rows // 1000, 200)
+    # integer-valued columns: sums are exact, so "identical" is exact bytes
+    table = ColumnTable.from_pydict({
+        "country": rng.integers(0, n_groups, n_rows).astype(np.float64),
+        "region": rng.integers(0, 12, n_rows).astype(np.float64),
+        "usd": rng.integers(0, 10_000, n_rows).astype(np.float64),
+        "qty": rng.integers(1, 40, n_rows),
+        "fee": rng.integers(0, 500, n_rows).astype(np.float64),
+        "disc": rng.integers(0, 90, n_rows).astype(np.float64),
+    })
+    tmp = tempfile.mkdtemp(prefix="bench_combine_")
+    store = ObjectStore(f"{tmp}/s3")
+    catalog = Catalog(store)
+    catalog.write_table("txns", table, rows_per_file=n_rows // n_files)
+
+    def _measure(tag: str, combinable: bool, **shard_kw):
+        # fresh cluster per variant: scan/result caches stay cold, so every
+        # variant pays the full scan + aggregation
+        cluster = LocalCluster(catalog, store, f"{tmp}/dp-{tag}",
+                               n_workers=n_workers)
+        try:
+            t0 = time.perf_counter()
+            res = execute_run(_make_project(f"bench-{tag}", combinable),
+                              cluster=cluster, **shard_kw)
+            wall = time.perf_counter() - t0
+            out = res.read("by_country", cluster)
+            return wall, out, res.plan
+        finally:
+            cluster.close()
+
+    t_base, out_base, _ = _measure("unsharded", combinable=True,
+                                   shard_threshold_bytes=1 << 60)
+    t_gather, out_gather, plan_g = _measure("gather", combinable=False,
+                                            shard_threshold_bytes=1,
+                                            max_shards=n_workers)
+    t_comb, out_comb, plan_c = _measure("combine", combinable=True,
+                                        shard_threshold_bytes=1,
+                                        max_shards=n_workers)
+    assert isinstance(plan_c.tasks["func:by_country"], CombineTask)
+    assert not isinstance(plan_g.tasks["func:by_country"], CombineTask)
+
+    def _identical(a, b):
+        return (a.column_names == b.column_names
+                and all(a.column(c).data.tobytes() == b.column(c).data.tobytes()
+                        for c in a.column_names))
+
+    identical = _identical(out_comb, out_base) and _identical(out_gather,
+                                                              out_base)
+    speedup = t_gather / max(t_comb, 1e-9)
+
+    report("combine/unsharded_agg", t_base, f"{n_rows} rows, 1 worker")
+    report("combine/gather_then_agg", t_gather,
+           f"{n_workers} scan shards, raw-row gather + 1-worker group_by")
+    report("combine/sharded_combine", t_comb,
+           f"{n_workers} partials + combine, x{speedup:.2f} vs gather, "
+           f"identical={identical}")
+
+    result = {"n_rows": n_rows, "n_workers": n_workers, "n_files": n_files,
+              "n_groups": n_groups,
+              "unsharded_s": round(t_base, 4),
+              "gather_then_agg_s": round(t_gather, 4),
+              "sharded_combine_s": round(t_comb, 4),
+              "speedup_vs_gather": round(speedup, 3),
+              "identical": bool(identical)}
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(result, f, indent=2)
+    if not identical:
+        raise SystemExit("combined output differs from unsharded group_by")
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes for CI (correctness + plan shape only)")
+    ap.add_argument("--full", action="store_true", help="paper-scale sizes")
+    ap.add_argument("--json", default=None, help="write results JSON here")
+    args = ap.parse_args()
+    n_rows = 200_000 if args.smoke else (8_000_000 if args.full
+                                         else 4_000_000)
+    out = run(n_rows=n_rows, json_path=args.json)
+    print(json.dumps(out))
+
+
+if __name__ == "__main__":
+    main()

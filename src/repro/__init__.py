@@ -16,13 +16,16 @@ The public SDK mirrors the paper's programming model:
         ...
         return df
 """
-from repro.api import (Model, Project, default_project, model, python,
-                       resources, run, submit)
-from repro.core.spec import EnvSpec, ModelRef, ResourceHint
+from repro.api import (GroupByCombine, JoinCombine, Model, Project,
+                       StatsCombine, combinable, default_project, model,
+                       python, resources, run, submit)
+from repro.core.spec import CombineContract, EnvSpec, ModelRef, ResourceHint
 
 __version__ = "1.0.0"
 
 __all__ = [
     "Model", "Project", "default_project", "model", "python", "resources",
     "run", "submit", "EnvSpec", "ModelRef", "ResourceHint",
+    "CombineContract", "GroupByCombine", "JoinCombine", "StatsCombine",
+    "combinable",
 ]

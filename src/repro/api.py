@@ -27,11 +27,90 @@ from __future__ import annotations
 import threading
 from typing import Callable, Dict, List, Optional, Sequence, Union
 
-from repro.core.spec import (EnvSpec, FunctionSpec, ModelRef, ResourceHint,
-                             extract_inputs)
+from repro.core.spec import (CombineContract, EnvSpec, FunctionSpec, ModelRef,
+                             ResourceHint, extract_inputs)
 
 _ENV_ATTR = "__repro_env__"
 _RES_ATTR = "__repro_resources__"
+
+
+# ---------------------------------------------------------------------------
+# shard-combinable aggregation contracts (map-side combine)
+# ---------------------------------------------------------------------------
+
+
+def combinable(partial: Callable, combine: Callable,
+               shard_param: str = "") -> CombineContract:
+    """Mark a custom reducer shard-combinable: `partial` (same signature as
+    the model function) runs once per shard of the `shard_param` input and
+    returns a partial-state dataframe; `combine` merges the ordered list of
+    states into the final output. The contract is
+    ``fn(concat(shards)) == combine([partial(s) for s in shards])``."""
+    return CombineContract("custom", partial, combine, shard_param)
+
+
+def GroupByCombine(keys: Sequence[str], aggs: Dict[str, tuple],
+                   backend: str = "numpy") -> CombineContract:
+    """Declare the model as ``compute.group_by(input, keys, aggs)``. The
+    planner then aggregates each shard locally (mean as a sum+count pair)
+    and merges per-group states at the gather instead of raw rows.
+    ``backend="jax"`` routes both halves through the Pallas kernels
+    (device aggregation + the combine accumulator); numeric results then
+    carry the kernels' float32 profile rather than exact numpy bytes."""
+    from repro.columnar import compute
+
+    keys, aggs = list(keys), dict(aggs)
+
+    def partial(**kw):
+        (table,) = kw.values()
+        return compute.partial_group_by(table, keys, aggs, backend=backend)
+
+    def combine(parts):
+        return compute.combine_group_by(parts, keys, aggs, backend=backend)
+
+    return CombineContract("group_by", partial, combine,
+                           fingerprint=repr((keys, sorted(aggs.items()),
+                                             backend)))
+
+
+def JoinCombine(on: Sequence[str], probe: str, how: str = "inner",
+                suffix: str = "_r") -> CombineContract:
+    """Declare the model as ``compute.hash_join(probe, build, on)`` where
+    the `probe` param is the (large, sharded) probe side and the remaining
+    input is the small build side, broadcast whole to every shard. Each
+    shard probes locally; the combine is an ordered concat (inner only)."""
+    from repro.columnar import compute
+
+    on = list(on)
+    if how != "inner":
+        raise ValueError("only inner joins are shard-combinable")
+
+    def partial(**kw):
+        probe_t = kw.pop(probe)
+        if len(kw) != 1:
+            raise ValueError(f"JoinCombine needs exactly two inputs, got "
+                             f"{[probe] + list(kw)}")
+        (build_t,) = kw.values()
+        return compute.partial_join(probe_t, build_t, on, how=how,
+                                    suffix=suffix)
+
+    return CombineContract("join", partial, compute.combine_join,
+                           shard_param=probe,
+                           fingerprint=repr((on, probe, how, suffix)))
+
+
+def StatsCombine() -> CombineContract:
+    """Declare the model as ``compute.stats_table(input)``: per-shard stats
+    are already combinable states (null counts add, min of mins, max of
+    maxes)."""
+    from repro.columnar import compute
+
+    def partial(**kw):
+        (table,) = kw.values()
+        return compute.partial_stats(table)
+
+    return CombineContract("column_stats", partial, compute.combine_stats,
+                           fingerprint="stats")
 
 
 def Model(name: str, columns: Optional[Sequence[str]] = None,
@@ -51,10 +130,17 @@ class Project:
     # -- decorators ---------------------------------------------------------
     def model(self, name: Optional[str] = None, materialize: bool = False,
               resources: Optional[ResourceHint] = None,
-              rowwise: bool = False) -> Callable:
+              rowwise: bool = False,
+              combinable: Optional[CombineContract] = None) -> Callable:
         """`rowwise=True` declares that every output row depends only on its
         input row (map-style); the planner may then split the function across
-        the shards of a large input and merge once downstream."""
+        the shards of a large input and merge once downstream.
+
+        `combinable=` declares the function a distributive/algebraic
+        aggregation (bp.GroupByCombine / bp.JoinCombine / bp.StatsCombine, or
+        bp.combinable for a custom reducer): over a sharded input it runs as
+        per-shard partials whose states merge at the gather — the fleet
+        aggregates in parallel and only per-group states cross workers."""
         def deco(fn: Callable) -> Callable:
             spec = FunctionSpec(
                 name=name or fn.__name__,
@@ -64,6 +150,7 @@ class Project:
                 materialize=materialize,
                 resources=resources or getattr(fn, _RES_ATTR, ResourceHint()),
                 rowwise=rowwise,
+                combinable=combinable,
             )
             with self._lock:
                 if spec.name in self.functions:

@@ -165,6 +165,141 @@ def group_by(table: ColumnTable, keys: Sequence[str],
 
 
 # ---------------------------------------------------------------------------
+# map-side combine: partial/combine state pairs (shard-aware aggregation)
+# ---------------------------------------------------------------------------
+#
+# Contract: for any row-wise split of a table into ordered shards,
+#
+#     combine_group_by([partial_group_by(s, keys, aggs) for s in shards],
+#                      keys, aggs)  ==  group_by(concat(shards), keys, aggs)
+#
+# Distributive aggs (sum/count/min/max) carry their own value as state;
+# algebraic mean decomposes into a (sum, count) pair and is finalized only
+# at the combine — so a sharded producer's aggregation runs shard-local and
+# only tiny per-group states cross workers, never raw rows.
+
+
+def _state_aggs(aggs: Dict[str, Tuple[str, str]]) -> Dict[str, Tuple[str, str]]:
+    """Per-shard state columns for an agg set (mean -> sum+count pair).
+    ``<out>__sum`` / ``<out>__count`` are reserved for a mean's state; an
+    output name colliding with them would silently overwrite the state and
+    finalize the mean from the wrong column, so it's rejected here."""
+    state: Dict[str, Tuple[str, str]] = {}
+    for out, (src, fn) in aggs.items():
+        if fn not in AGG_FUNCS:
+            raise ValueError(f"unknown agg {fn!r}; supported: {AGG_FUNCS}")
+        if fn == "mean":
+            for suffix in ("__sum", "__count"):
+                if f"{out}{suffix}" in aggs:
+                    raise ValueError(
+                        f"agg name {out + suffix!r} collides with mean "
+                        f"{out!r}'s partial state; rename one of them")
+            state[f"{out}__sum"] = (src, "sum")
+            state[f"{out}__count"] = (src, "count")
+        else:
+            state[out] = (src, fn)
+    return state
+
+
+def partial_group_by(table: ColumnTable, keys: Sequence[str],
+                     aggs: Dict[str, Tuple[str, str]],
+                     backend: str = "numpy") -> ColumnTable:
+    """Shard-local aggregation state: one row per key present in the shard."""
+    return group_by(table, keys, _state_aggs(aggs), backend=backend)
+
+
+def combine_group_by(parts: Sequence[ColumnTable], keys: Sequence[str],
+                     aggs: Dict[str, Tuple[str, str]],
+                     backend: str = "numpy") -> ColumnTable:
+    """Merge per-shard partial states into the final aggregate.
+
+    Re-groups the concatenated state rows over the key union (sum of sums,
+    sum of counts, min of mins, max of maxes); key order is np.unique order,
+    identical to the unsharded ``group_by`` over the same rows. mean is
+    finalized here as total_sum / total_count, guarded so a group fed only
+    by empty shards (count 0) never divides by zero.
+    """
+    parts = list(parts)
+    if not parts:
+        raise ValueError("combine of zero partial states")
+    nonempty = [p for p in parts if p.num_rows]
+    if not nonempty:
+        # every shard was empty: mirror group_by's empty-table branch exactly
+        data = {k: parts[0].column(k) for k in keys}
+        for out in aggs:
+            data[out] = numeric_column(np.array([], dtype=np.float64))
+        return ColumnTable(data)
+    state = concat_tables(nonempty)
+    merge_aggs: Dict[str, Tuple[str, str]] = {}
+    for out, (_, fn) in aggs.items():
+        if fn == "mean":
+            merge_aggs[f"{out}__sum"] = (f"{out}__sum", "sum")
+            merge_aggs[f"{out}__count"] = (f"{out}__count", "sum")
+        elif fn == "count":
+            merge_aggs[out] = (out, "sum")      # counts add up
+        else:
+            merge_aggs[out] = (out, fn)         # sum->sum, min->min, max->max
+    if backend == "jax" and state.num_rows:
+        merged = _combine_states_jax(nonempty, state, keys, merge_aggs)
+    else:
+        merged = group_by(state, keys, merge_aggs)
+    out_cols: Dict[str, Column] = {k: merged.column(k) for k in keys}
+    for out, (_, fn) in aggs.items():
+        if fn == "mean":
+            sums = merged.column(f"{out}__sum").data.astype(np.float64)
+            counts = merged.column(f"{out}__count").data.astype(np.float64)
+            out_cols[out] = numeric_column(sums / np.maximum(counts, 1.0))
+        else:
+            out_cols[out] = merged.column(out)
+    return ColumnTable(out_cols)
+
+
+def _combine_states_jax(parts: Sequence[ColumnTable], state: ColumnTable,
+                        keys: Sequence[str],
+                        merge_aggs: Dict[str, Tuple[str, str]]) -> ColumnTable:
+    """Device path for the state merge: keys are aligned on host (cheap
+    metadata — at most one state row per key per shard), then each agg
+    column is scattered into a dense (parts, groups) matrix and reduced
+    across the part axis by the Pallas combine accumulator."""
+    from repro.kernels import ops as kops
+
+    codes, first = _encode_keys(state, keys)
+    n_groups = len(first)
+    # `state` is the parts concatenated in shard order; each state row's part
+    # index makes every (part, group) cell a single writer
+    row_part = np.repeat(np.arange(len(parts)),
+                         [p.num_rows for p in parts])
+    out: Dict[str, Column] = {k: state.column(k).take(first) for k in keys}
+    for out_name, (src, fn) in merge_aggs.items():
+        src_col = state.column(src)
+        vals = src_col.data.astype(np.float64)
+        neutral = {"sum": 0.0, "min": np.inf, "max": -np.inf}[fn]
+        dense = np.full((len(parts), n_groups), neutral, dtype=np.float64)
+        dense[row_part, codes] = vals
+        agg = np.asarray(kops.combine_aggregate(dense, n_groups, fn))
+        if np.issubdtype(src_col.dtype, np.integer):
+            agg = agg.astype(np.int64)
+        out[out_name] = numeric_column(agg)
+    return ColumnTable(out)
+
+
+def partial_join(probe: ColumnTable, build: ColumnTable, on: Sequence[str],
+                 how: str = "inner", suffix: str = "_r") -> ColumnTable:
+    """Per-shard probe of the broadcast build side. Only inner joins are
+    combinable by concatenation: ``hash_join`` appends left-join misses
+    after all matches, so per-shard left joins would interleave misses."""
+    if how != "inner":
+        raise ValueError("only inner joins are shard-combinable")
+    return hash_join(probe, build, on, how=how, suffix=suffix)
+
+
+def combine_join(parts: Sequence[ColumnTable]) -> ColumnTable:
+    """Probe outputs ride the shard order, so the ordered concat is exactly
+    the unsharded join's row order (inner join output follows probe order)."""
+    return concat_tables(list(parts))
+
+
+# ---------------------------------------------------------------------------
 # join
 # ---------------------------------------------------------------------------
 
@@ -215,6 +350,57 @@ def hash_join(left: ColumnTable, right: ColumnTable, on: Sequence[str],
 # ---------------------------------------------------------------------------
 # table stats (feed Iceberg-style manifests)
 # ---------------------------------------------------------------------------
+
+
+def stats_table(table: ColumnTable) -> ColumnTable:
+    """``column_stats`` as a dataframe (one row per column, schema order):
+    ``column`` / ``null_count`` / ``min`` / ``max``. Numeric min/max only;
+    utf8 and all-null columns carry NaN. This tabular form is what pipeline
+    models return (functions map dataframes to dataframes) and is itself a
+    combinable aggregation state: see ``combine_stats``."""
+    from repro.columnar.table import utf8_column
+
+    names = table.column_names
+    nulls = np.zeros(len(names), dtype=np.int64)
+    mins = np.full(len(names), np.nan)
+    maxs = np.full(len(names), np.nan)
+    for i, name in enumerate(names):
+        c = table.column(name)
+        nulls[i] = c.null_count
+        mask = c.valid_mask()
+        if c.kind != "utf8" and mask.any():
+            v = c.to_numpy()[mask]
+            mins[i] = float(v.min())
+            maxs[i] = float(v.max())
+    return ColumnTable({"column": utf8_column(list(names)),
+                        "null_count": numeric_column(nulls),
+                        "min": numeric_column(mins),
+                        "max": numeric_column(maxs)})
+
+
+# a shard's stats ARE its aggregation state — no separate encoding needed
+partial_stats = stats_table
+
+
+def combine_stats(parts: Sequence[ColumnTable]) -> ColumnTable:
+    """Merge per-shard ``stats_table`` outputs: null counts add, mins take
+    the min of mins, maxes the max of maxes. NaN marks "no value" (empty or
+    utf8 column in that shard) and is ignored unless every shard agrees."""
+    parts = list(parts)
+    if not parts:
+        raise ValueError("combine of zero stats parts")
+    base = parts[0]
+    for p in parts[1:]:
+        if p.column("column").to_numpy().tolist() != \
+                base.column("column").to_numpy().tolist():
+            raise ValueError("stats parts disagree on column set")
+    nulls = np.sum([p.column("null_count").data for p in parts], axis=0)
+    mins = np.fmin.reduce([p.column("min").data for p in parts])
+    maxs = np.fmax.reduce([p.column("max").data for p in parts])
+    return ColumnTable({"column": base.column("column"),
+                        "null_count": numeric_column(nulls.astype(np.int64)),
+                        "min": numeric_column(mins),
+                        "max": numeric_column(maxs)})
 
 
 def column_stats(table: ColumnTable) -> Dict[str, Dict]:

@@ -2,11 +2,12 @@
 # and data-aware runtime (logical/physical planning, zero-copy channels,
 # columnar differential caching, ephemeral package-level environments,
 # fault-tolerant scheduling).
-from repro.core.spec import EnvSpec, FunctionSpec, ModelRef, ResourceHint
+from repro.core.spec import (CombineContract, EnvSpec, FunctionSpec, ModelRef,
+                             ResourceHint)
 from repro.core.logical import LogicalPlan, PlanError, build_logical_plan
-from repro.core.physical import (FunctionTask, GatherTask, PhysicalPlan,
-                                 PlacementHint, Planner, ScanTask,
-                                 WorkerProfile)
+from repro.core.physical import (CombineTask, FunctionTask, GatherTask,
+                                 PhysicalPlan, PlacementHint, Planner,
+                                 ScanTask, WorkerProfile)
 from repro.core.contract import ClusterLike, TransportLike, WorkerLike
 from repro.core.runtime import (Client, Event, LocalCluster, TaskError,
                                 Worker, WorkerFailure, execute_run,
@@ -17,10 +18,10 @@ from repro.core.remote import RemoteCluster, RemoteWorker, WorkerDaemon
 from repro.core.scheduler import Scheduler
 
 __all__ = [
-    "EnvSpec", "FunctionSpec", "ModelRef", "ResourceHint",
+    "CombineContract", "EnvSpec", "FunctionSpec", "ModelRef", "ResourceHint",
     "LogicalPlan", "PlanError", "build_logical_plan",
-    "FunctionTask", "GatherTask", "PhysicalPlan", "PlacementHint", "Planner",
-    "ScanTask", "WorkerProfile",
+    "CombineTask", "FunctionTask", "GatherTask", "PhysicalPlan",
+    "PlacementHint", "Planner", "ScanTask", "WorkerProfile",
     "ClusterLike", "TransportLike", "WorkerLike",
     "Client", "Event", "LocalCluster", "TaskError", "Worker", "WorkerFailure",
     "execute_run", "submit_run",

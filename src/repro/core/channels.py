@@ -150,7 +150,11 @@ class FlightServer:
             if table is None:
                 _send_frame(conn, json.dumps({"error": "unknown key"}).encode())
                 return
-            cols = req.get("columns") or table.column_names
+            # missing columns are dropped, not an error: a strict projection
+            # here would close the connection, which the client must read as
+            # a dead shard (see _project_available)
+            cols = [c for c in (req.get("columns") or table.column_names)
+                    if c in table.column_names]
             table = table.project(cols)
             header: Dict = {"num_rows": table.num_rows, "columns": []}
             buffers: List[np.ndarray] = []
@@ -240,6 +244,30 @@ def flight_get(host: str, port: int, key: str,
 # ---------------------------------------------------------------------------
 
 
+# Channel-level column pushdown is an optimization, never the semantic
+# contract: deliver the requested columns that exist and let the consumer
+# edge's strict projection (runtime._run_function) raise on genuinely
+# missing ones. A strict channel-level projection would turn a column typo
+# into KeyError/connection-close — which every recovery path reads as a
+# dead shard (ShardUnavailable → HandleUnavailable) and answers by
+# re-executing the perfectly healthy producer, forever.
+
+
+def _project_available(table: ColumnTable,
+                       columns: Optional[Sequence[str]]) -> ColumnTable:
+    if not columns:
+        return table
+    return table.project([c for c in columns if c in table.column_names])
+
+
+def _file_columns_available(path: str, columns: Optional[Sequence[str]]
+                            ) -> Optional[List[str]]:
+    if not columns:
+        return None
+    names = {c["name"] for c in colfile.read_header(path)["columns"]}
+    return [c for c in columns if c in names]
+
+
 class DataTransport:
     def __init__(self, spill_dir: str, object_store: Optional[ObjectStore] = None,
                  flight: Optional[FlightServer] = None):
@@ -251,7 +279,8 @@ class DataTransport:
         self._lock = threading.Lock()
         self.stats = {"zerocopy_puts": 0, "mmap_puts": 0, "flight_puts": 0,
                       "objectstore_puts": 0, "gets": 0, "partitioned_gets": 0,
-                      "local_parts": 0, "remote_parts": 0}
+                      "local_parts": 0, "remote_parts": 0,
+                      "remote_part_bytes": 0}
 
     def _bump(self, name: str, by: int = 1) -> None:
         # counters are shared by every concurrent run on this worker; an
@@ -319,10 +348,12 @@ class DataTransport:
                 loc = handle.location or f"{self.flight.host}:{self.flight.port}"
                 host, port = loc.rsplit(":", 1)
                 return flight_get(host, int(port), handle.key, columns)
-            return table.project(columns) if columns else table
+            return _project_available(table, columns)
         if handle.channel == "mmap":
-            return colfile.read_table(handle.location, columns=columns,
-                                      mmap=True)
+            return colfile.read_table(
+                handle.location,
+                columns=_file_columns_available(handle.location, columns),
+                mmap=True)
         if handle.channel == "flight":
             host, port = handle.location.rsplit(":", 1)
             return flight_get(host, int(port), handle.key, columns)
@@ -331,7 +362,9 @@ class DataTransport:
                                f"dl-{uuid.uuid4().hex}.rcf")
             self.object_store.get_to_file(handle.location, tmp)
             try:
-                return colfile.read_table(tmp, columns=columns, mmap=False)
+                return colfile.read_table(
+                    tmp, columns=_file_columns_available(tmp, columns),
+                    mmap=False)
             finally:
                 os.remove(tmp)
         raise ValueError(f"unknown channel {handle.channel!r}")
@@ -342,17 +375,17 @@ class DataTransport:
         with self._lock:
             return key in self._shm
 
-    def _get_partitioned(self, handle: TableHandle,
-                         columns: Optional[Sequence[str]]) -> ColumnTable:
-        """Resolve each part where it actually lives: the local table store
-        first (zero-copy, no bytes moved), the part's own channel otherwise.
-        Remote parts stream concurrently (the flight server is thread-per-
-        connection, so gather latency is the slowest transfer, not the sum).
-        Column projection is pushed into every part fetch; the concat runs
-        once, here, at the consumer."""
-        from repro.columnar import compute
-
-        self._bump("partitioned_gets")
+    def get_parts(self, handle: TableHandle,
+                  columns: Optional[Sequence[str]] = None
+                  ) -> List[ColumnTable]:
+        """Resolve a partitioned handle's parts WITHOUT merging them, in
+        shard order: the local table store first (zero-copy, no bytes
+        moved), the part's own channel otherwise. Remote parts stream
+        concurrently (the flight server is thread-per-connection, so latency
+        is the slowest transfer, not the sum) with column projection pushed
+        into every fetch. This is the combine path's entry point — a
+        CombineTask merges aggregation states per part, so concatenation
+        would destroy the part boundaries it needs."""
         tables: List[Optional[ColumnTable]] = [None] * len(handle.parts)
         remote: List[Tuple[int, TableHandle]] = []
         for i, part in enumerate(handle.parts):
@@ -360,7 +393,7 @@ class DataTransport:
                 local = self._shm.get(part.key)
             if local is not None:
                 self._bump("local_parts")
-                tables[i] = local.project(columns) if columns else local
+                tables[i] = _project_available(local, columns)
             else:
                 remote.append((i, part))
         failures: List[Tuple[str, Exception]] = []
@@ -369,6 +402,7 @@ class DataTransport:
             try:
                 tables[i] = self._get_one(part, columns=columns)
                 self._bump("remote_parts")
+                self._bump("remote_part_bytes", tables[i].nbytes)
             except (OSError, ConnectionError, KeyError) as e:
                 failures.append((part.key, e))
 
@@ -384,7 +418,16 @@ class DataTransport:
         if failures:
             key, cause = failures[0]
             raise ShardUnavailable(key) from cause
-        return compute.concat_tables(tables)
+        return tables
+
+    def _get_partitioned(self, handle: TableHandle,
+                         columns: Optional[Sequence[str]]) -> ColumnTable:
+        """Gather: resolve every part (get_parts) and concatenate exactly
+        once, here, at the consumer."""
+        from repro.columnar import compute
+
+        self._bump("partitioned_gets")
+        return compute.concat_tables(self.get_parts(handle, columns))
 
     def evict(self, handle: TableHandle) -> None:
         with self._lock:

@@ -100,16 +100,24 @@ class RunResult:
     def read(self, name: str, cluster: "ClusterLike"):
         """Fetch a produced dataframe (targets or any intermediate)."""
         tid = f"func:{name}" if f"func:{name}" in self.handles else f"scan:{name}"
-        if tid in self.handles:
+        task = self.plan.tasks.get(tid)
+        # a projected gather holds only its consumers' column union — read
+        # the full dataframe from the shard handles below instead
+        projected = (getattr(task, "kind", "") == "gather"
+                     and getattr(task, "columns", None) is not None
+                     and tid.startswith("func:"))
+        if tid in self.handles and not projected:
             return self._read_handle(tid, cluster)
-        # sharded producer with no synthesized gather (every consumer rode
-        # the shards): assemble the whole table from the shard handles
+        # sharded producer with no (whole-table) merge point: assemble the
+        # full dataframe from the shard handles
         shard_tids = sorted(
             (t for t in self.handles
              if t.rsplit("#", 1)[0] in (f"func:{name}", f"scan:{name}")
              and "#" in t),
             key=lambda t: int(t.rsplit("#", 1)[1]))
         if not shard_tids:
+            if tid in self.handles:
+                return self._read_handle(tid, cluster)
             raise KeyError(f"no output named {name!r} in run {self.run_id}")
         from repro.columnar import compute
         return compute.concat_tables(
@@ -468,10 +476,10 @@ class ExecutionEngine:
         placement (the consumer's placement is `worker`, decided just now)."""
         channels: Dict[str, str] = {}
         if not isinstance(task, FunctionTask):
-            # scans have no inputs; gathers self-resolve each part through
-            # their partitioned handle (local zero-copy, else the part's own
-            # channel), so binding edges here would be dead work on the
-            # lock-held dispatch path
+            # scans have no inputs; gathers and combines self-resolve each
+            # part through their partitioned handle (local zero-copy, else
+            # the part's own channel), so binding edges here would be dead
+            # work on the lock-held dispatch path
             return channels
         force = state.plan.force_channel
         for edge in task.inputs:

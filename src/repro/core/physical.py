@@ -94,6 +94,13 @@ class FunctionTask:
     timeout_s: float
     hints: PlacementHint = dataclasses.field(default_factory=PlacementHint)
     kind: str = "function"
+    # "partial": run spec.combinable.partial over one shard instead of
+    # spec.fn — the output is aggregation state consumed by a CombineTask
+    agg_phase: str = ""
+    # contract identity for partial tasks: lets a remote daemon refuse a
+    # dispatch whose contract disagrees with its loaded project (a
+    # contract-only edit is invisible to code_hash)
+    contract_id: str = ""
 
 
 @dataclasses.dataclass
@@ -110,6 +117,28 @@ class GatherTask:
     estimated_bytes: int
     hints: PlacementHint = dataclasses.field(default_factory=PlacementHint)
     kind: str = "gather"
+
+
+@dataclasses.dataclass
+class CombineTask:
+    """Map-side-combine merge point: replaces the plain GatherTask when the
+    consumer of a sharded producer is a declared-combinable aggregation.
+    Inputs are the per-shard partial-state tasks in shard order; the worker
+    merges aggregation states (spec.combinable.combine) instead of
+    concatenating raw rows, so only per-group states cross workers. Like a
+    gather it executes under the ORIGINAL func task id, so downstream edges
+    and RunResult.read address it unchanged."""
+    task_id: str
+    name: str                               # the aggregation model
+    code_hash: str                          # daemon stale-code check
+    cache_key: str                          # layout-independent identity
+    inputs: List[InputEdge]                 # partial edges, shard order
+    materialize: bool
+    estimated_bytes: int
+    timeout_s: float = 600.0                # combine runs user code too
+    contract_id: str = ""                   # daemon stale-contract check
+    hints: PlacementHint = dataclasses.field(default_factory=PlacementHint)
+    kind: str = "combine"
 
 
 @dataclasses.dataclass
@@ -168,6 +197,9 @@ class PhysicalPlan:
             elif isinstance(t, GatherTask):
                 lines.append(f"  GATHER {t.name} parts={len(t.inputs)} "
                              f"[{place}]")
+            elif isinstance(t, CombineTask):
+                lines.append(f"  COMBINE {t.name} parts={len(t.inputs)} "
+                             f"cache={t.cache_key[:8]} [{place}]")
             else:
                 edges = ", ".join(e.ref.name for e in t.inputs)
                 mat = " MATERIALIZE" if t.materialize else ""
@@ -203,8 +235,42 @@ class Planner:
         return n
 
     # -- helpers --------------------------------------------------------------
+    def _classify_combinable(self, spec, shard_map: Dict[str, List[str]]
+                             ) -> Optional[Tuple[str, ModelRef]]:
+        """The rewrite-rule guard: returns the (param, ref) that rides the
+        shards when `spec` is a declared-combinable aggregation of exactly
+        one sharded input whose shard side matches the contract. Anything
+        else — no contract, an unsharded input, two sharded inputs (no
+        broadcast side), or a contract naming a different probe param —
+        falls back to the plain gather."""
+        contract = getattr(spec, "combinable", None)
+        if contract is None:
+            return None
+        # a contract that doesn't name its shard side (GroupByCombine,
+        # StatsCombine, single-input custom reducers) implies a single-input
+        # partial; rewriting a multi-input model with it would hand the
+        # partial kwargs it can't take — fall back to the gather instead
+        if not contract.shard_param and len(spec.inputs) != 1:
+            return None
+        # a join partial probes ONE build side: three or more inputs would
+        # pass classification only to crash every per-shard partial
+        if contract.kind == "join" and len(spec.inputs) != 2:
+            return None
+        sharded = [(p, r) for p, r in spec.inputs if r.name in shard_map]
+        if len(sharded) != 1:
+            return None
+        param, ref = sharded[0]
+        if contract.shard_param and contract.shard_param != param:
+            return None
+        return param, ref
+
     def _column_union(self, consumers: List[Tuple[str, ModelRef]],
-                      schema: Dict[str, str]) -> Optional[Tuple[str, ...]]:
+                      schema: Optional[Dict[str, str]] = None
+                      ) -> Optional[Tuple[str, ...]]:
+        """Union of the columns the consumers read (predicate columns
+        included); None when any consumer reads everything. Validated
+        against `schema` when one is known (source tables — function output
+        schemas don't exist at plan time)."""
         cols: List[str] = []
         for _, ref in consumers:
             if ref.columns is None:
@@ -217,9 +283,11 @@ class Planner:
                 for c in pred.referenced_columns():
                     if c not in cols:
                         cols.append(c)
-        unknown = [c for c in cols if c not in schema]
-        if unknown:
-            raise PlanError(f"columns {unknown} not in table schema {list(schema)}")
+        if schema is not None:
+            unknown = [c for c in cols if c not in schema]
+            if unknown:
+                raise PlanError(
+                    f"columns {unknown} not in table schema {list(schema)}")
         return tuple(cols)
 
     # -- planning ---------------------------------------------------------------
@@ -237,6 +305,17 @@ class Planner:
         # computed over a different chunk layout
         shard_keys: Dict[str, List[str]] = {}
 
+        def consumer_union(name: str) -> Optional[Tuple[str, ...]]:
+            """Column union of `name`'s logical consumers; None when any
+            consumer reads everything or `name` is a run target —
+            RunResult.read must expose the whole dataframe."""
+            if name in logical.targets:
+                return None
+            consumers = logical.nodes[name].consumers
+            if not consumers:
+                return None
+            return self._column_union(consumers)
+
         def ensure_gather(name: str) -> None:
             """A consumer genuinely needs the whole table: synthesize the
             merge task under the ORIGINAL task id, so downstream edges and
@@ -246,7 +325,11 @@ class Planner:
             if tid in tasks:
                 return
             first = tasks[shard_tids[0]]
-            cols = first.columns if isinstance(first, ScanTask) else None
+            # scans already carry the validated column union; function-level
+            # gathers push the consumers' column union into each part fetch,
+            # so only the bytes someone reads cross workers
+            cols = (first.columns if isinstance(first, ScanTask)
+                    else consumer_union(name))
             edges = [InputEdge(param=f"part{k}", parent_task=stid,
                                ref=ModelRef.create(name))
                      for k, stid in enumerate(shard_tids)]
@@ -316,18 +399,98 @@ class Planner:
                                               ",".join(ref.columns or ("*",)),
                                               ref.filter or ""))
                     est += est_bytes.get(ref.name, 0)
+                # a declared contract is part of the function's identity:
+                # code_hash can't see it (it may live in globals/closures),
+                # and a stale combined result served across a contract edit
+                # would silently report the OLD aggregation. Folding it here
+                # keeps the key layout-independent (sharded and unsharded
+                # runs still share results) while invalidating the combine
+                # and everything downstream on contract edits.
+                contract = getattr(spec, "combinable", None)
                 cache_key = _key_hash("func", spec.code_hash, spec.env.env_id,
-                                      *edge_ids)
+                                      *edge_ids,
+                                      *((contract.contract_id,)
+                                        if contract is not None else ()))
                 cache_keys[name] = cache_key
                 est = max(int(est * 1.2), 1)
                 est_bytes[name] = est
+                # recognized aggregations over a sharded input rewrite into
+                # per-shard partial tasks + a CombineTask at the merge point:
+                # the fleet aggregates in parallel and only per-group states
+                # cross workers (map-side combine)
+                combine_input = self._classify_combinable(spec, shard_map)
                 # row-wise functions ride their parent's shards: one task per
                 # shard, no gather in between (f(concat(p)) == concat(f(p)))
                 shardable = (getattr(spec, "rowwise", False)
                              and not spec.materialize
                              and len(spec.inputs) == 1
                              and spec.inputs[0][1].name in shard_map)
-                if shardable:
+                if combine_input is not None:
+                    param_s, ref_s = combine_input
+                    parent_shards = shard_map[ref_s.name]
+                    n = len(parent_shards)
+                    # non-shard inputs (a join's small build side) broadcast
+                    # whole to every partial; one shared edge per input, so
+                    # the build side is computed once and fanned out
+                    bcast: List[Tuple[str, ModelRef, str]] = []
+                    for p, r in spec.inputs:
+                        if p == param_s:
+                            continue
+                        if r.name in shard_map:
+                            ensure_gather(r.name)
+                        btid = (f"func:{r.name}"
+                                if f"func:{r.name}" in tasks
+                                else f"scan:{r.name}")
+                        bcast.append((p, r, btid))
+                    partial_tids = []
+                    for k, ptid in enumerate(parent_shards):
+                        stid = f"func:{name}#{k}"
+                        # per-shard identity: derives from the parent shard's
+                        # chunk identity AND the contract (editing keys/aggs
+                        # must invalidate cached partial states)
+                        skey = _key_hash(cache_key, contract.contract_id,
+                                         f"partial-{k}-{n}",
+                                         shard_keys[ref_s.name][k])
+                        edges = [InputEdge(param=param_s, parent_task=ptid,
+                                           ref=ref_s)]
+                        edges += [InputEdge(param=p, parent_task=bt, ref=r)
+                                  for p, r, bt in bcast]
+                        tasks[stid] = FunctionTask(
+                            task_id=stid, name=name, env_id=spec.env.env_id,
+                            code_hash=spec.code_hash, cache_key=skey,
+                            inputs=edges, materialize=False,
+                            estimated_bytes=max(est // n, 1),
+                            memory_gb=spec.resources.memory_gb,
+                            timeout_s=spec.resources.timeout_s,
+                            hints=PlacementHint(shard_index=k, num_shards=n),
+                            agg_phase="partial",
+                            contract_id=contract.contract_id)
+                        order.append(stid)
+                        partial_tids.append(stid)
+                    tid = f"func:{name}"
+                    # layout-independent cache key: a warm cluster may serve
+                    # the unsharded run's result for the combine and vice
+                    # versa — the contract guarantees they're the same table
+                    #
+                    # the combine's working set is per-group aggregation
+                    # states, not raw rows (the whole point of the rewrite);
+                    # inheriting the input-sized estimate would demand
+                    # input-sized memory hints — on-demand provisioning and
+                    # mmap spills to merge a few KB of states. est//20
+                    # mirrors the state<raw/20 bound the property harness
+                    # enforces.
+                    tasks[tid] = CombineTask(
+                        task_id=tid, name=name, code_hash=spec.code_hash,
+                        cache_key=cache_key,
+                        inputs=[InputEdge(param=f"part{k}", parent_task=st,
+                                          ref=ModelRef.create(name))
+                                for k, st in enumerate(partial_tids)],
+                        materialize=spec.materialize,
+                        estimated_bytes=max(est // 20, 1),
+                        timeout_s=spec.resources.timeout_s,
+                        contract_id=contract.contract_id)
+                    order.append(tid)
+                elif shardable:
                     param, ref = spec.inputs[0]
                     parent_shards = shard_map[ref.name]
                     n = len(parent_shards)

@@ -227,6 +227,24 @@ class WorkerDaemon:
                                  f"restart the worker with current project "
                                  f"source"})
                 return
+            # a contract-only edit (new CombineContract, same body) is
+            # invisible to code_hash; running the old partial/combine would
+            # publish old-aggregation results under the plan's new
+            # contract-folded cache keys — refuse, same as stale code
+            want_contract = getattr(task, "contract_id", "")
+            if want_contract and spec is not None:
+                have = (spec.combinable.contract_id
+                        if spec.combinable is not None else "<none>")
+                if have != want_contract:
+                    _send_msg(conn, {"kind": "error", "etype": "TaskError",
+                                     "message":
+                                     f"stale combine contract for "
+                                     f"{task.name!r}: worker "
+                                     f"{self.worker.worker_id} has {have}, "
+                                     f"plan wants {want_contract}; restart "
+                                     f"the worker with current project "
+                                     f"source"})
+                    return
         client = _StreamClient(conn)
         key = (plan.run_id, tid)
         with self._lock:

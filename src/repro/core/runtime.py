@@ -35,8 +35,9 @@ from repro.core.channels import (DataTransport, ShardUnavailable, TableHandle,
                                  partitioned_handle)
 from repro.core.envs import PackageLinkBuilder, PackageStore
 from repro.core.logical import build_logical_plan
-from repro.core.physical import (FunctionTask, GatherTask, PhysicalPlan,
-                                 Planner, ScanTask, WorkerProfile)
+from repro.core.physical import (CombineTask, FunctionTask, GatherTask,
+                                 PhysicalPlan, Planner, ScanTask,
+                                 WorkerProfile)
 
 if TYPE_CHECKING:
     from repro.api import Project
@@ -194,6 +195,8 @@ class Worker:
             table = self._run_scan(task, client)
         elif isinstance(task, GatherTask):
             table = self._run_gather(plan, task, handles, client)
+        elif isinstance(task, CombineTask):
+            table = self._run_combine(plan, task, handles, client, project)
         else:
             table = self._run_function(plan, task, handles, client, project,
                                        edge_channels or {})
@@ -220,11 +223,15 @@ class Worker:
                            "misses": after["misses"] - before["misses"]}))
         return table
 
-    def _run_gather(self, plan: PhysicalPlan, task: GatherTask,
-                    handles, client: Client) -> ColumnTable:
-        """Merge a sharded producer. The partitioned handle lets the
-        transport resolve each part where it lives — local shards zero-copy,
-        remote ones over their own channel — and concatenate exactly once."""
+    def _fetch_parts(self, plan: PhysicalPlan, task, handles,
+                     columns=None, as_parts: bool = False):
+        """Resolve a merge task's per-shard inputs through one partitioned
+        handle — local parts zero-copy, remote over their own channel. A
+        missing handle or a part whose buffers died maps back to exactly its
+        producer task (HandleUnavailable), so the engine re-executes that
+        one shard, never a sibling. Returns (result, n_parts, n_local) where
+        result is the concatenated table, or the ordered part list when
+        `as_parts` (the combine path needs the shard boundaries)."""
         part_handles = []
         for edge in task.inputs:
             h = handles.get(edge.parent_task)
@@ -233,19 +240,98 @@ class Worker:
             part_handles.append((edge.parent_task, h))
         phandle = partitioned_handle(f"{plan.run_id}:{task.task_id}",
                                      [h for _, h in part_handles])
-        cols = list(task.columns) if task.columns else None
         n_local = sum(self.transport.has_local(h.key) for _, h in part_handles)
         try:
-            table = self.transport.get(phandle, columns=cols)
+            if as_parts:
+                result = self.transport.get_parts(phandle, columns=columns)
+            else:
+                result = self.transport.get(phandle, columns=columns)
         except ShardUnavailable as e:
-            # map the lost part key back to its producer so the engine
-            # re-executes just that shard
             lost = next((tid for tid, h in part_handles if h.key == e.key),
                         task.inputs[0].parent_task)
             raise HandleUnavailable(lost) from e
+        return result, len(part_handles), n_local
+
+    def _run_gather(self, plan: PhysicalPlan, task: GatherTask,
+                    handles, client: Client) -> ColumnTable:
+        """Merge a sharded producer's raw rows: resolve every part where it
+        lives and concatenate exactly once."""
+        cols = list(task.columns) if task.columns else None
+        table, n_parts, n_local = self._fetch_parts(plan, task, handles,
+                                                    columns=cols)
         client.emit(Event("gather", task.task_id, self.worker_id,
-                          {"parts": len(part_handles), "local": n_local,
-                           "remote": len(part_handles) - n_local}))
+                          {"parts": n_parts, "local": n_local,
+                           "remote": n_parts - n_local}))
+        return table
+
+    def _run_combine(self, plan: PhysicalPlan, task: CombineTask,
+                     handles, client: Client,
+                     project: Optional["Project"]) -> ColumnTable:
+        """Merge a combinable aggregation's per-shard partial states
+        (spec.combinable.combine) — the map-side-combine replacement for a
+        raw-row gather. Parts resolve through the same partitioned machinery
+        (local states zero-copy, remote over their channel); a lost part
+        maps back to exactly its partial task for per-shard re-execution."""
+        from repro.api import default_project
+        project = project or default_project()
+        spec = project.functions[task.name]
+        if spec.combinable is None:
+            raise TaskError(f"{task.name}: plan expects a combinable "
+                            f"aggregation but the project declares none "
+                            f"(stale plan or project drift)")
+        cached = self.result_cache.get(task.cache_key)
+        if cached is not None:
+            client.emit(Event("cache_hit", task.task_id, self.worker_id,
+                              {"cache_key": task.cache_key}))
+            return cached
+        parts, n_parts, n_local = self._fetch_parts(plan, task, handles,
+                                                    as_parts=True)
+        # the combine is user code (custom reducers): it runs under the
+        # model's declared ephemeral environment, same as the partial half
+        table = self._invoke_user_code(
+            plan, task, spec, lambda: spec.combinable.combine(parts),
+            client, label=f"{task.name} (combine)")
+        client.emit(Event("combine", task.task_id, self.worker_id,
+                          {"parts": n_parts, "local": n_local,
+                           "remote": n_parts - n_local,
+                           "state_bytes": int(sum(p.nbytes for p in parts))}))
+        return table
+
+    def _invoke_user_code(self, plan: PhysicalPlan, task, spec,
+                          call, client: Client, label: str) -> ColumnTable:
+        """The shared tail of every user-code task — build the declared
+        ephemeral environment, run `call` with prints streaming as log
+        events, coerce + result-cache the output, and materialize when the
+        task asks. Inputs must already be resolved: only `call` itself is
+        wrapped as user error (HandleUnavailable has to keep propagating
+        for per-shard recovery)."""
+        report = self.env_builder.build(spec.env, fresh=True)
+        client.emit(Event("env_built", task.task_id, self.worker_id,
+                          {"env_id": report.env_id,
+                           "seconds": round(report.duration_s, 6),
+                           "cache_hit": report.cache_hit}))
+        emit_log = lambda line: client.emit(Event("log", task.task_id,
+                                                  self.worker_id,
+                                                  {"line": line}))
+        # (re)install at execution time: test harnesses swap sys.stdout
+        # between phases; production never re-wraps
+        router = _StdoutRouter.install()
+        try:
+            with router.route(emit_log):
+                out = call()
+        except Exception as e:  # noqa: BLE001 — user code
+            raise TaskError(f"{label}: {type(e).__name__}: {e}\n"
+                            f"{traceback.format_exc()}") from e
+        finally:
+            self.env_builder.destroy(report)  # truly ephemeral
+        table = _coerce_output(task.name, out)
+        table = self.result_cache.put(task.cache_key, table)
+        if task.materialize:
+            snap = self.catalog.write_table(task.name, table,
+                                            branch=plan.branch,
+                                            message=f"run {plan.run_id}")
+            client.emit(Event("materialized", task.task_id, self.worker_id,
+                              {"snapshot": snap.snapshot_id}))
         return table
 
     def _run_function(self, plan: PhysicalPlan, task: FunctionTask,
@@ -260,13 +346,7 @@ class Worker:
         from repro.api import default_project
         project = project or default_project()
         spec = project.functions[task.name]
-        # 1. ephemeral environment (paper §4.2)
-        report = self.env_builder.build(spec.env, fresh=True)
-        client.emit(Event("env_built", task.task_id, self.worker_id,
-                          {"env_id": report.env_id,
-                           "seconds": round(report.duration_s, 6),
-                           "cache_hit": report.cache_hit}))
-        # 2. inputs via the planned channels (paper §4.3)
+        # 1. inputs via the planned channels (paper §4.3)
         kwargs = {}
         for edge in task.inputs:
             handle = handles.get(edge.parent_task)
@@ -289,31 +369,21 @@ class Worker:
             if edge.ref.columns is not None:
                 table = table.project(list(edge.ref.columns))
             kwargs[edge.param] = table
-        # 3. run business logic with real-time log streaming
-        emit_log = lambda line: client.emit(Event("log", task.task_id,
-                                                  self.worker_id,
-                                                  {"line": line}))
-        # (re)install at execution time: test harnesses swap sys.stdout
-        # between phases; production never re-wraps
-        router = _StdoutRouter.install()
-        try:
-            with router.route(emit_log):
-                out = spec.fn(**kwargs)
-        except Exception as e:  # noqa: BLE001 — user code
-            raise TaskError(f"{task.name}: {type(e).__name__}: {e}\n"
-                            f"{traceback.format_exc()}") from e
-        finally:
-            self.env_builder.destroy(report)  # truly ephemeral
-        table = _coerce_output(task.name, out)
-        table = self.result_cache.put(task.cache_key, table)
-        # 4. materialization writes back to the lakehouse (paper Listing 1)
-        if task.materialize:
-            snap = self.catalog.write_table(task.name, table,
-                                            branch=plan.branch,
-                                            message=f"run {plan.run_id}")
-            client.emit(Event("materialized", task.task_id, self.worker_id,
-                              {"snapshot": snap.snapshot_id}))
-        return table
+        # 2. run business logic under the declared ephemeral environment
+        # (paper §4.2) with real-time log streaming; a materializing task
+        # writes back to the lakehouse (paper Listing 1). Partial phase of a
+        # combinable aggregation: run the contract's shard-local reducer
+        # over this shard instead of the model body — the CombineTask merges
+        # the resulting states downstream.
+        fn = spec.fn
+        if getattr(task, "agg_phase", "") == "partial":
+            if spec.combinable is None:
+                raise TaskError(f"{task.name}: plan expects a combinable "
+                                f"partial but the project declares none")
+            fn = spec.combinable.partial
+        return self._invoke_user_code(plan, task, spec,
+                                      lambda: fn(**kwargs), client,
+                                      label=task.name)
 
 
 def _coerce_output(name: str, out) -> ColumnTable:

@@ -9,6 +9,7 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import inspect
+import re
 from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.columnar.expr import Expr, parse_predicate
@@ -92,6 +93,88 @@ class ResourceHint:
 
 
 # ---------------------------------------------------------------------------
+# shard-combinable aggregations (map-side combine)
+# ---------------------------------------------------------------------------
+
+
+# default object reprs embed id(): "<function f at 0x7f...>" — a
+# process-specific address. The control plane folds contract_id into the
+# plan and a worker daemon recomputes it from its own import; an address in
+# the fingerprint would make them disagree forever.
+_ADDR_RE = re.compile(r" at 0x[0-9a-fA-F]+")
+
+
+def _value_fingerprint(v: object) -> str:
+    """Process-stable identity of a closed-over value. Plain repr() fails
+    two ways: default reprs embed a memory address (different in every
+    process), and large-array reprs elide the middle (edits invisible).
+    Functions recurse into their own code fingerprint; buffer-backed values
+    (ndarrays) hash their full bytes; anything else gets its repr with
+    addresses stripped."""
+    if hasattr(v, "__code__"):
+        return _code_fingerprint(v)
+    tobytes = getattr(v, "tobytes", None)
+    if callable(tobytes):
+        try:
+            return _stable_hash("buf", str(getattr(v, "dtype", "")),
+                                str(getattr(v, "shape", "")),
+                                hashlib.sha256(tobytes()).hexdigest())
+        except Exception:  # noqa: BLE001 — fall back to repr below
+            pass
+    return _ADDR_RE.sub(" at 0x", repr(v))
+
+
+def _code_fingerprint(fn: Callable) -> str:
+    """Identity of a partial/combine callable. co_code alone is blind to
+    edits of literals and closed-over parameters (the usual way a reducer's
+    keys/aggs are configured), so constants, names, and closure cells are
+    folded in — same rationale as FunctionSpec.code_hash."""
+    code = getattr(fn, "__code__", None)
+    if code is None:
+        return _ADDR_RE.sub(" at 0x", repr(fn))
+    consts = repr([c for c in code.co_consts if not inspect.iscode(c)])
+    cells = []
+    for cell in getattr(fn, "__closure__", None) or ():
+        try:
+            cells.append(_value_fingerprint(cell.cell_contents))
+        except ValueError:          # empty cell
+            cells.append("<empty>")
+    return _stable_hash(code.co_code.hex(), consts, repr(code.co_names),
+                        repr(cells))
+
+
+@dataclasses.dataclass(frozen=True)
+class CombineContract:
+    """User contract that an aggregation distributes over row-wise shards:
+
+        fn(concat(shards), **rest) == combine([partial(s, **rest) for s in shards])
+
+    ``partial`` has the model function's signature and runs once per shard
+    of the ``shard_param`` input (the other inputs are broadcast whole);
+    ``combine`` takes the ordered list of partial-state tables and produces
+    the final output. The planner uses this to rewrite the task into
+    per-shard partials plus a CombineTask, so only small aggregation states
+    — never raw rows — cross workers at the merge point.
+    """
+
+    kind: str                   # "group_by" | "join" | "column_stats" | "custom"
+    partial: Callable
+    combine: Callable
+    shard_param: str = ""       # which input rides the shards ("" = the only one)
+    fingerprint: str = ""       # parameter identity (keys/aggs/on/...)
+
+    @property
+    def contract_id(self) -> str:
+        """Folded into partial-task cache keys: editing the contract must
+        invalidate cached partial states even when the model body is
+        unchanged."""
+        return _stable_hash(self.kind, self.shard_param,
+                            self.fingerprint or
+                            _code_fingerprint(self.partial) + ":" +
+                            _code_fingerprint(self.combine))
+
+
+# ---------------------------------------------------------------------------
 # functions
 # ---------------------------------------------------------------------------
 
@@ -111,6 +194,9 @@ class FunctionSpec:
     # row depends only on its input row, so the planner may run the function
     # once per input shard and defer the merge downstream
     rowwise: bool = False
+    # declared distributive/algebraic aggregation: the planner may execute
+    # it as per-shard partials + a combine at the gather point
+    combinable: Optional[CombineContract] = None
 
     @property
     def code_hash(self) -> str:

@@ -51,6 +51,53 @@ def _gb_kernel(vals_ref, codes_ref, o_ref, acc_ref, *,
         o_ref[...] = acc_ref[...]
 
 
+def _combine_kernel(parts_ref, o_ref, acc_ref, *, bp: int, ng: int,
+                    n_blocks: int, fn: str):
+    """Combine accumulator: each grid step folds a (bp, ng) tile of per-shard
+    partial aggregates into the (ng,) VMEM accumulator with the agg's merge
+    op — sum for sum/count, elementwise min/max otherwise. Padded part rows
+    carry the op's neutral element."""
+    b = pl.program_id(0)
+
+    @pl.when(b == 0)
+    def _init():
+        acc_ref[...] = jnp.full_like(acc_ref, _INIT[fn])
+
+    tile = parts_ref[...].astype(jnp.float32)         # (bp, ng)
+    if fn in ("sum", "count"):
+        acc_ref[...] += jnp.sum(tile, axis=0)
+    elif fn == "min":
+        acc_ref[...] = jnp.minimum(acc_ref[...], jnp.min(tile, axis=0))
+    elif fn == "max":
+        acc_ref[...] = jnp.maximum(acc_ref[...], jnp.max(tile, axis=0))
+
+    @pl.when(b == n_blocks - 1)
+    def _finalize():
+        o_ref[...] = acc_ref[...]
+
+
+def combine_pallas(parts: jax.Array, fn: str = "sum", block_p: int = 8,
+                   interpret: bool = False) -> jax.Array:
+    """parts: (P, G) stacked per-shard partial aggregates, one row per shard,
+    G % 128 == 0 and P % block_p == 0 (ops.py pads with the neutral
+    element). Returns the (G,) merged aggregate."""
+    p, g = parts.shape
+    bp = min(block_p, p)
+    assert p % bp == 0, (p, bp)
+    grid = (p // bp,)
+    kernel = functools.partial(_combine_kernel, bp=bp, ng=g,
+                               n_blocks=grid[0], fn=fn)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bp, g), lambda b: (b, 0))],
+        out_specs=pl.BlockSpec((g,), lambda b: (0,)),
+        out_shape=jax.ShapeDtypeStruct((g,), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((g,), jnp.float32)],
+        interpret=interpret,
+    )(parts)
+
+
 def groupby_pallas(values: jax.Array, codes: jax.Array, n_groups: int,
                    fn: str = "sum", block_n: int = 1024,
                    interpret: bool = False) -> jax.Array:

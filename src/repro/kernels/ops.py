@@ -81,6 +81,28 @@ def groupby_aggregate(values: jax.Array, codes: jax.Array, n_groups: int,
     return out[:n_groups]
 
 
+@functools.partial(jax.jit, static_argnames=("n_groups", "fn", "block_p"))
+def combine_aggregate(parts: jax.Array, n_groups: int, fn: str = "sum",
+                      block_p: int = 8) -> jax.Array:
+    """Merge stacked per-shard partial aggregates: parts (P, n_groups), one
+    row per shard, cells absent from a shard pre-filled with the merge op's
+    neutral element. Returns the (n_groups,) combined aggregate. mean never
+    reaches this point — it travels as a sum+count pair and is finalized by
+    the caller."""
+    if fn not in ("sum", "count", "min", "max"):
+        raise ValueError(f"{fn!r} is not a distributive combine")
+    neutral = {"sum": 0.0, "count": 0.0,
+               "min": jnp.inf, "max": -jnp.inf}[fn]
+    p, g = parts.shape
+    g_pad = max((g + 127) // 128 * 128, 128)
+    bp = min(block_p, max(p, 1))
+    p_pad = (p + bp - 1) // bp * bp
+    padded = jnp.full((p_pad, g_pad), neutral, jnp.float32)
+    padded = padded.at[:p, :g].set(parts.astype(jnp.float32))
+    out = _gb.combine_pallas(padded, fn, bp, _interpret())
+    return out[:n_groups]
+
+
 # ---------------------------------------------------------------------------
 # filter compaction
 # ---------------------------------------------------------------------------

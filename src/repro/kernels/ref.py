@@ -67,6 +67,19 @@ def ref_groupby(values: jax.Array, codes: jax.Array, n_groups: int,
     raise ValueError(fn)
 
 
+def ref_combine(parts: jax.Array, fn: str = "sum") -> jax.Array:
+    """Oracle for the combine accumulator: parts (P, G) per-shard partial
+    aggregates -> (G,) merged (neutral-filled cells for absent groups)."""
+    parts = parts.astype(jnp.float32)
+    if fn in ("sum", "count"):
+        return jnp.sum(parts, axis=0)
+    if fn == "min":
+        return jnp.min(parts, axis=0)
+    if fn == "max":
+        return jnp.max(parts, axis=0)
+    raise ValueError(fn)
+
+
 # ---------------------------------------------------------------------------
 # filter compaction oracle
 # ---------------------------------------------------------------------------

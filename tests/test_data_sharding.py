@@ -212,6 +212,84 @@ def test_per_shard_retry_after_worker_kill(cat, tmp_path):
         cluster.close()
 
 
+def test_combine_retries_only_the_lost_partial(cat, tmp_path):
+    """Map-side combine under fault injection: kill the worker holding one
+    partial's aggregation state mid-run. Only that shard's partial chain
+    re-executes (per-shard recovery through the CombineTask), at least one
+    sibling runs exactly once, and the result matches the unsharded run."""
+    from repro.columnar import compute
+    from repro.core import CombineTask
+
+    cluster = _cluster(cat, tmp_path)
+    killed = {"done": False}
+    lock = threading.Lock()
+    aggs = {"total": ("a", "sum"), "avg": ("b", "mean"),
+            "n": ("a", "count")}
+
+    def make(name, hook):
+        proj = bp.Project(name)
+
+        def part(data):
+            # only shard 0 triggers the chaos: the victim-waiter must never
+            # run inside partial #1 itself (it would wait on its own output)
+            if float(np.asarray(data.column("a").to_numpy())[0]) < N_ROWS // 4:
+                hook()
+            return compute.partial_group_by(data, ["tag"], aggs)
+
+        def merge(parts):
+            return compute.combine_group_by(parts, ["tag"], aggs)
+
+        @proj.model(combinable=bp.combinable(part, merge))
+        def by_tag(data=bp.Model("src")):
+            return compute.group_by(data, ["tag"], aggs)
+
+        return proj
+
+    def kill_partial_holder():
+        with lock:
+            if killed["done"]:
+                return
+            killed["done"] = True
+        # partial #1 lands concurrently on another worker; wait for its
+        # state buffers, then kill the worker holding them
+        victim = None
+        for _ in range(500):
+            victim = _holder_of(cluster, "func:by_tag#1")
+            if victim is not None:
+                break
+            time.sleep(0.01)
+        assert victim is not None
+        cluster.kill_worker(victim)
+
+    try:
+        res = execute_run(make("fi1", kill_partial_holder), cluster=cluster,
+                          shard_threshold_bytes=1, max_shards=4)
+        assert killed["done"]
+        assert isinstance(res.plan.tasks["func:by_tag"], CombineTask)
+        # fresh cluster for the baseline: the combine's layout-independent
+        # cache key would otherwise hand the sharded result straight back
+        base_cluster = _cluster(cat, tmp_path / "base")
+        try:
+            base = execute_run(make("fi2", lambda: None),
+                               cluster=base_cluster,
+                               shard_threshold_bytes=1 << 60)
+            want = base.read("by_tag", base_cluster)
+        finally:
+            base_cluster.close()
+        got = res.read("by_tag", cluster)
+        assert got.column_names == want.column_names
+        for c in got.column_names:
+            assert got.column(c).data.tobytes() == \
+                want.column(c).data.tobytes(), c
+        # the killed partial's chain re-ran; a sibling chain ran exactly once
+        assert res.task_attempts["func:by_tag#1"] >= 2
+        assert any(res.task_attempts[f"func:by_tag#{k}"] == 1
+                   and res.task_attempts[f"scan:src#{k}"] == 1
+                   for k in (0, 2, 3))
+    finally:
+        cluster.close()
+
+
 # ---------------------------------------------------------------------------
 # gather: projection pushdown + partitioned handles
 # ---------------------------------------------------------------------------

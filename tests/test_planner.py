@@ -1,12 +1,13 @@
 """Logical + physical planning: topology, pushdown, bin-packing, channels,
-content-addressed cache keys."""
+content-addressed cache keys, and the map-side-combine rewrite rule."""
 import numpy as np
 import pytest
 
 import repro as bp
-from repro.columnar import Catalog, ColumnTable, ObjectStore
+from repro.columnar import Catalog, ColumnTable, ObjectStore, compute
 from repro.core import PlanError, Planner, WorkerProfile, build_logical_plan
-from repro.core.physical import FunctionTask, ScanTask
+from repro.core.physical import (CombineTask, FunctionTask, GatherTask,
+                                 ScanTask)
 
 
 @pytest.fixture
@@ -166,3 +167,287 @@ def test_unknown_column_rejected_at_plan_time(cat):
 def test_targets_restrict_plan(cat):
     logical = build_logical_plan(diamond_project(), targets=["left"])
     assert set(logical.nodes) == {"src", "left"}
+
+
+# ---------------------------------------------------------------------------
+# the map-side-combine rewrite rule
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture
+def wide_cat(tmp_path):
+    """8 files over the shard threshold used below (threshold=1)."""
+    rng = np.random.default_rng(0)
+    n = 4000
+    c = Catalog(ObjectStore(str(tmp_path / "s3w")))
+    c.write_table("big", ColumnTable.from_pydict({
+        "k": rng.integers(0, 9, n).astype(np.float64),
+        "v": rng.integers(0, 100, n).astype(np.float64)}),
+        rows_per_file=n // 8)
+    c.write_table("small", ColumnTable.from_pydict({
+        "k": np.arange(9.0), "label": [f"L{i}" for i in range(9)]}))
+    return c
+
+
+def _shard_planner(cat, n_workers=4):
+    return Planner(cat, [WorkerProfile(f"w{i}") for i in range(n_workers)],
+                   shard_threshold_bytes=1, max_shards=4)
+
+
+def test_rewrite_fires_only_for_recognized_aggs(wide_cat):
+    """A declared-combinable consumer of a sharded scan rewrites into
+    partials + CombineTask; an undeclared aggregation over the same input
+    keeps the plain raw-row gather."""
+    proj = bp.Project("rw")
+    aggs = {"s": ("v", "sum")}
+
+    @proj.model(combinable=bp.GroupByCombine(["k"], aggs))
+    def declared(data=bp.Model("big", columns=["k", "v"])):
+        return compute.group_by(data, ["k"], aggs)
+
+    @proj.model()
+    def undeclared(data=bp.Model("big", columns=["k", "v"])):
+        return compute.group_by(data, ["k"], aggs)
+
+    plan = _shard_planner(wide_cat).plan(build_logical_plan(proj))
+    assert isinstance(plan.tasks["func:declared"], CombineTask)
+    assert [plan.tasks[f"func:declared#{k}"].agg_phase for k in range(4)] \
+        == ["partial"] * 4
+    # the undeclared agg consumes the whole table through a gather
+    assert isinstance(plan.tasks["func:undeclared"], FunctionTask)
+    assert "func:undeclared#0" not in plan.tasks
+    assert isinstance(plan.tasks["scan:big"], GatherTask)
+
+
+def test_rewrite_skips_unsharded_input(wide_cat):
+    """Below the shard threshold the combinable model plans as a plain
+    function — no partials, no combine."""
+    proj = bp.Project("rw-unsharded")
+
+    @proj.model(combinable=bp.GroupByCombine(["k"], {"s": ("v", "sum")}))
+    def agg(data=bp.Model("big", columns=["k", "v"])):
+        return compute.group_by(data, ["k"], {"s": ("v", "sum")})
+
+    planner = Planner(wide_cat, [WorkerProfile("w0")])   # default threshold
+    plan = planner.plan(build_logical_plan(proj))
+    assert isinstance(plan.tasks["func:agg"], FunctionTask)
+    assert "func:agg#0" not in plan.tasks
+
+
+def test_rewrite_requires_matching_probe_param(wide_cat):
+    """A JoinCombine whose declared probe is the UNsharded side must fall
+    back to the gather — probing the broadcast side per shard would be
+    wrong."""
+    proj = bp.Project("rw-probe")
+
+    @proj.model(combinable=bp.JoinCombine(on=["k"], probe="r"))
+    def joined(l=bp.Model("big", columns=["k", "v"]),
+               r=bp.Model("small")):
+        return compute.hash_join(r, l, ["k"])
+
+    plan = _shard_planner(wide_cat).plan(build_logical_plan(proj))
+    assert isinstance(plan.tasks["func:joined"], FunctionTask)
+    assert isinstance(plan.tasks["scan:big"], GatherTask)
+
+
+def test_rewrite_requires_single_sharded_input(tmp_path):
+    """Two sharded inputs have no broadcast side: the rewrite must not fire
+    and both producers gather."""
+    rng = np.random.default_rng(1)
+    c = Catalog(ObjectStore(str(tmp_path / "s3t")))
+    for t in ("lhs", "rhs"):
+        c.write_table(t, ColumnTable.from_pydict({
+            "k": rng.integers(0, 9, 4000).astype(np.float64),
+            "v": rng.integers(0, 9, 4000).astype(np.float64)}),
+            rows_per_file=500)
+    proj = bp.Project("rw-two")
+
+    @proj.model(combinable=bp.JoinCombine(on=["k"], probe="l"))
+    def joined(l=bp.Model("lhs"), r=bp.Model("rhs")):
+        return compute.hash_join(l, r, ["k"])
+
+    plan = _shard_planner(c).plan(build_logical_plan(proj))
+    assert isinstance(plan.tasks["func:joined"], FunctionTask)
+    assert isinstance(plan.tasks["scan:lhs"], GatherTask)
+    assert isinstance(plan.tasks["scan:rhs"], GatherTask)
+
+
+def test_join_contract_requires_two_inputs(wide_cat, tmp_path):
+    """A three-input model declared JoinCombine must fall back to the
+    gather at plan time instead of crashing every per-shard partial."""
+    wide_cat.write_table("small2", ColumnTable.from_pydict({
+        "k": np.arange(9.0), "w": np.arange(9.0)}))
+    proj = bp.Project("rw-three")
+
+    @proj.model(combinable=bp.JoinCombine(on=["k"], probe="l"))
+    def joined(l=bp.Model("big", columns=["k", "v"]),
+               r=bp.Model("small"), r2=bp.Model("small2")):
+        return compute.hash_join(compute.hash_join(l, r, ["k"]), r2, ["k"])
+
+    plan = _shard_planner(wide_cat).plan(build_logical_plan(proj))
+    assert isinstance(plan.tasks["func:joined"], FunctionTask)
+    assert "func:joined#0" not in plan.tasks
+    assert isinstance(plan.tasks["scan:big"], GatherTask)
+
+
+def test_unnamed_contract_requires_single_input(wide_cat):
+    """GroupByCombine (no shard_param) declares a single-input partial;
+    attaching it to a two-input model must fall back to the gather instead
+    of handing the partial kwargs it can't take mid-run."""
+    proj = bp.Project("rw-multi")
+
+    @proj.model(combinable=bp.GroupByCombine(["k"], {"s": ("v", "sum")}))
+    def agg(data=bp.Model("big", columns=["k", "v"]),
+            lookup=bp.Model("small")):
+        return compute.group_by(data, ["k"], {"s": ("v", "sum")})
+
+    plan = _shard_planner(wide_cat).plan(build_logical_plan(proj))
+    assert isinstance(plan.tasks["func:agg"], FunctionTask)
+    assert "func:agg#0" not in plan.tasks
+    assert isinstance(plan.tasks["scan:big"], GatherTask)
+
+
+# ---------------------------------------------------------------------------
+# column-union pushdown into function-level gathers
+# ---------------------------------------------------------------------------
+
+
+def _pushdown_project(name, narrow):
+    proj = bp.Project(name)
+
+    @proj.model(rowwise=True)
+    def mapped(data=bp.Model("big", columns=["k", "v"])):
+        v = np.asarray(data.column("v").to_numpy())
+        # pad is 8x the bytes of v2: the column the pushdown should keep
+        # off the wire
+        return {"v2": v * 2.0, "pad": ["x" * 64] * len(v)}
+
+    if narrow:
+        @proj.model()
+        def consumer(data=bp.Model("mapped", columns=["v2"])):
+            return {"v2": np.asarray(data.column("v2").to_numpy())}
+    else:
+        @proj.model()
+        def consumer(data=bp.Model("mapped")):
+            return {"v2": np.asarray(data.column("v2").to_numpy())}
+
+    return proj
+
+
+def test_function_gather_carries_consumer_column_union(wide_cat):
+    plan = _shard_planner(wide_cat).plan(
+        build_logical_plan(_pushdown_project("pd-plan", narrow=True)))
+    gather = plan.tasks["func:mapped"]
+    assert isinstance(gather, GatherTask)
+    assert gather.columns == ("v2",)       # pad never crosses a worker
+    # a consumer that reads everything disables the projection
+    plan_all = _shard_planner(wide_cat).plan(
+        build_logical_plan(_pushdown_project("pd-all", narrow=False)))
+    assert plan_all.tasks["func:mapped"].columns is None
+    # ... and a gather created for the run TARGET stays unprojected:
+    # RunResult.read must expose the whole dataframe
+    proj = _pushdown_project("pd-target", narrow=True)
+    plan_t = _shard_planner(wide_cat).plan(
+        build_logical_plan(proj, targets=["mapped"]))
+    assert plan_t.tasks["func:mapped"].columns is None
+
+
+def test_column_union_pushdown_shrinks_part_fetches(wide_cat, tmp_path):
+    """DataTransport counters: with the union pushed into the gather, the
+    bytes fetched from remote parts drop (only `v2` crosses workers; the
+    8x-wide `pad` column stays put)."""
+    from repro.core import LocalCluster
+    from repro.core.runtime import execute_run
+
+    def run_and_count(name, narrow):
+        cluster = LocalCluster(wide_cat, wide_cat.store,
+                               str(tmp_path / f"dp-{name}"), n_workers=4)
+        try:
+            res = execute_run(_pushdown_project(name, narrow),
+                              cluster=cluster, shard_threshold_bytes=1,
+                              max_shards=4)
+            assert res.read("consumer", cluster).num_rows == 4000
+            stats = [w.transport.stats for w in cluster.workers.values()]
+            return (sum(s["remote_part_bytes"] for s in stats),
+                    sum(s["remote_parts"] for s in stats))
+        finally:
+            cluster.close()
+
+    narrow_bytes, narrow_parts = run_and_count("pd-narrow", narrow=True)
+    wide_bytes, wide_parts = run_and_count("pd-wide", narrow=False)
+    assert narrow_parts and wide_parts        # some parts crossed workers
+    assert narrow_bytes < wide_bytes / 2      # pad (8x data) stayed local
+
+
+def test_read_of_projected_intermediate_returns_all_columns(wide_cat,
+                                                            tmp_path):
+    """The pushdown narrows the gather's buffers, but RunResult.read of the
+    intermediate must still expose the whole dataframe (assembled from the
+    shard handles)."""
+    from repro.core import LocalCluster
+    from repro.core.runtime import execute_run
+
+    cluster = LocalCluster(wide_cat, wide_cat.store, str(tmp_path / "dp-rd"),
+                           n_workers=4)
+    try:
+        res = execute_run(_pushdown_project("pd-read", narrow=True),
+                          cluster=cluster, shard_threshold_bytes=1,
+                          max_shards=4)
+        assert res.plan.tasks["func:mapped"].columns == ("v2",)
+        full = res.read("mapped", cluster)
+        assert sorted(full.column_names) == ["pad", "v2"]
+        assert full.num_rows == 4000
+    finally:
+        cluster.close()
+
+
+def test_combine_estimate_is_state_sized_not_input_sized(wide_cat):
+    """The combine merges per-group aggregation states, not raw rows: its
+    estimate (and so its memory hint) must be far below the input-sized
+    estimate the partials carry — otherwise aggregating a huge table would
+    demand an input-sized worker just to merge a few KB of states."""
+    proj = bp.Project("est-combine")
+
+    @proj.model(combinable=bp.GroupByCombine(["k"], {"s": ("v", "sum")}))
+    def agg(data=bp.Model("big", columns=["k", "v"])):
+        return compute.group_by(data, ["k"], {"s": ("v", "sum")})
+
+    plan = _shard_planner(wide_cat).plan(build_logical_plan(proj))
+    combine = plan.tasks["func:agg"]
+    assert isinstance(combine, CombineTask)
+    input_est = sum(plan.tasks[e.parent_task].estimated_bytes
+                    for e in combine.inputs)
+    assert combine.estimated_bytes * 10 <= input_est
+    assert combine.hints.memory_bytes == combine.estimated_bytes
+
+
+def test_unknown_consumer_column_fails_cleanly_not_as_dead_shard(wide_cat,
+                                                                 tmp_path):
+    """A consumer naming a column its sharded producer doesn't output must
+    fail at the consumer edge's strict projection. Channel-level projection
+    is best-effort by contract: if the gather's pushed-down union were
+    applied strictly inside the channels, the missing column would surface
+    as ShardUnavailable — and the engine would re-execute the perfectly
+    healthy producer shard forever instead of reporting the typo."""
+    from repro.core import LocalCluster
+    from repro.core.runtime import TaskError, execute_run
+
+    proj = bp.Project("badcol")
+
+    @proj.model(rowwise=True)
+    def mapped(data=bp.Model("big", columns=["k", "v"])):
+        return {"v2": np.asarray(data.column("v").to_numpy()) * 2.0}
+
+    @proj.model()
+    def consumer(data=bp.Model("mapped", columns=["v2", "typo"])):
+        return data
+
+    cluster = LocalCluster(wide_cat, wide_cat.store,
+                           str(tmp_path / "dp-badcol"), n_workers=4)
+    try:
+        with pytest.raises((TaskError, KeyError)) as ei:
+            execute_run(proj, cluster=cluster, shard_threshold_bytes=1,
+                        max_shards=4)
+        assert "typo" in str(ei.value)
+    finally:
+        cluster.close()

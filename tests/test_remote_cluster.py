@@ -192,6 +192,154 @@ def test_sigkill_worker_midrun_recovers(rcluster, cat, project_spec):
     assert rcluster.workers[victim["worker"]].proc.poll() is not None
 
 
+COMBINE_PROJECT_SRC = '''
+import time
+
+import numpy as np
+
+import repro as bp
+from repro.columnar import compute
+
+AGGS = {"total": ("v", "sum"), "avg": ("v", "mean"), "n": ("v", "count")}
+
+
+def build():
+    proj = bp.Project("remote-combine")
+
+    def part(data):
+        # stagger the shards so shard 0's state lands while shard 1 is
+        # still in flight — a real window for the chaos kill
+        first = float(np.asarray(data.column("idx").to_numpy())[0])
+        time.sleep(0.05 if first < 2000 else 1.0)
+        return compute.partial_group_by(data, ["k"], AGGS)
+
+    def merge(parts):
+        return compute.combine_group_by(parts, ["k"], AGGS)
+
+    @proj.model(combinable=bp.combinable(part, merge))
+    def by_k(data=bp.Model("kv", columns=["k", "v", "idx"])):
+        return compute.group_by(data, ["k"], AGGS)
+
+    return proj
+'''
+
+
+GB_PROJECT_SRC = '''
+import numpy as np
+
+import repro as bp
+from repro.columnar import compute
+
+AGGS = {"total": ("v", "sum")}
+
+
+def build():
+    proj = bp.Project("remote-gb")
+
+    @proj.model(combinable=bp.GroupByCombine(["k"], AGGS))
+    def by_k(data=bp.Model("kv", columns=["k", "v"])):
+        return compute.group_by(data, ["k"], AGGS)
+
+    return proj
+'''
+
+
+def test_stale_combine_contract_is_refused(cat, tmp_path):
+    """A contract-only edit (AGGS global changed, body identical) is
+    invisible to code_hash; a joinable daemon loaded with the old contract
+    must refuse the dispatch rather than publish old-aggregation results
+    under the plan's new contract-folded cache keys."""
+    from repro.core import TaskError
+
+    rng = np.random.default_rng(31)
+    n = 4000
+    cat.write_table("kv", ColumnTable.from_pydict({
+        "k": rng.integers(0, 7, n).astype(np.float64),
+        "v": rng.integers(0, 100, n).astype(np.float64)}),
+        rows_per_file=n // 8)
+    v1 = tmp_path / "gb_project.py"
+    v1.write_text(GB_PROJECT_SRC)
+    v2 = tmp_path / "gb_project_v2.py"
+    v2.write_text(GB_PROJECT_SRC.replace('"sum"', '"max"'))
+    proj_v2 = load_project_spec(f"{v2}:build")
+    proj_v1 = load_project_spec(f"{v1}:build")
+    # same body, different contract — exactly what code_hash can't see
+    assert (proj_v1.functions["by_k"].code_hash
+            == proj_v2.functions["by_k"].code_hash)
+    rcluster = RemoteCluster(cat, cat.store, str(tmp_path / "gdp"),
+                             n_workers=2, project=f"{v1}:build",
+                             heartbeat_interval_s=0.2)
+    try:
+        with pytest.raises(TaskError, match="stale combine contract"):
+            execute_run(proj_v2, cluster=rcluster, shard_threshold_bytes=1,
+                        max_shards=2)
+        # the daemon still serves plans that match its loaded contract
+        res = execute_run(proj_v1, cluster=rcluster, shard_threshold_bytes=1,
+                          max_shards=2)
+        assert res.read("by_k", rcluster).num_rows == 7
+    finally:
+        rcluster.close()
+
+
+def test_sigkill_partial_holder_recovers_combine(cat, tmp_path):
+    """Map-side combine across worker PROCESSES: SIGKILL the worker that
+    produced the first partial state while its sibling is still running.
+    The CombineTask maps the lost part back to exactly that partial, the
+    survivor re-executes it, and the merged aggregate matches the
+    single-process unsharded run byte for byte."""
+    rng = np.random.default_rng(29)
+    n = 4000
+    cat.write_table("kv", ColumnTable.from_pydict({
+        "k": rng.integers(0, 11, n).astype(np.float64),
+        "v": rng.integers(0, 1000, n).astype(np.float64),
+        "idx": np.arange(float(n))}),
+        rows_per_file=n // 8)
+    spec_path = tmp_path / "remote_combine_project.py"
+    spec_path.write_text(COMBINE_PROJECT_SRC)
+    spec = f"{spec_path}:build"
+    proj = load_project_spec(spec)
+
+    local = LocalCluster(cat, cat.store, str(tmp_path / "ldp"), n_workers=1)
+    try:
+        base = execute_run(proj, cluster=local, shard_threshold_bytes=1 << 60)
+        want = base.read("by_k", local)
+    finally:
+        local.close()
+
+    rcluster = RemoteCluster(cat, cat.store, str(tmp_path / "rdp"),
+                             n_workers=2, project=spec,
+                             heartbeat_interval_s=0.2)
+    try:
+        client = Client()
+        handle = submit_run(proj, rcluster, client=client,
+                            shard_threshold_bytes=1, max_shards=2)
+        victim = {}
+
+        def first_partial_done():
+            for e in client.of_kind("task_done"):
+                if e.task_id.startswith("func:by_k#"):
+                    victim["worker"] = e.worker
+                    victim["task"] = e.task_id
+                    return True
+            return False
+
+        assert _wait_for(first_partial_done), "no partial completed in time"
+        rcluster.kill_worker(victim["worker"])          # real SIGKILL
+        res = handle.wait(timeout=180)
+        from repro.core import CombineTask
+        assert isinstance(res.plan.tasks["func:by_k"], CombineTask)
+        got = res.read("by_k", rcluster)
+        assert got.column_names == want.column_names
+        for c in got.column_names:
+            assert got.column(c).data.tobytes() == \
+                want.column(c).data.tobytes(), c
+        # the killed partial (or its chain) re-executed on the survivor
+        assert res.task_attempts[victim["task"]] >= 2
+        assert rcluster.workers[victim["worker"]].proc.poll() is not None
+    finally:
+        rcluster.close()
+
+
 def test_heartbeat_detects_external_process_death(rcluster, cat,
                                                   project_spec):
     wid, proxy = sorted(rcluster.workers.items())[0]

@@ -1,0 +1,523 @@
+"""Shard-aware aggregation: property-based equivalence of the map-side
+combine against the unsharded operators, plus the planner rewrite and the
+CombineTask runtime end to end.
+
+The core property, checked byte-for-byte over randomized tables, key
+cardinalities, shard layouts (1..8) and agg sets (seeded RNG, no hypothesis
+dependency):
+
+    combine([partial(shard) for shard in split(t)]) == agg(t)
+
+Integer-valued columns make every sum exact, so "identical" really means
+identical buffers — the acceptance bar for the sharded data plane.
+"""
+import tempfile
+
+import numpy as np
+import pytest
+
+import repro as bp
+from repro.columnar import Catalog, ColumnTable, ObjectStore, compute
+from repro.columnar.table import concat_tables
+from repro.core import (CombineTask, FunctionTask, GatherTask, LocalCluster,
+                        Planner, build_logical_plan)
+from repro.core.runtime import execute_run
+
+AGG_POOL = {
+    "total": ("v1", "sum"),
+    "avg": ("v2", "mean"),
+    "n": ("v1", "count"),
+    "lo": ("v2", "min"),
+    "hi": ("v1", "max"),
+    "avg2": ("v1", "mean"),
+}
+
+
+def _random_table(rng, n_rows, key_card, str_keys=False):
+    """Integer-valued columns (exact float sums) + optional utf8 key."""
+    data = {
+        "k": rng.integers(0, key_card, n_rows).astype(np.float64),
+        "v1": rng.integers(-1000, 1000, n_rows),            # int64
+        "v2": rng.integers(0, 500, n_rows).astype(np.float64),
+    }
+    if str_keys:
+        data["s"] = [f"s{i}" for i in rng.integers(0, 5, n_rows)]
+    return ColumnTable.from_pydict(data)
+
+
+def _random_split(rng, table, n_shards):
+    """Contiguous row ranges in order — exactly how the planner shards."""
+    n = table.num_rows
+    if n_shards == 1:
+        return [table]
+    cuts = sorted(rng.integers(0, n + 1, n_shards - 1).tolist())
+    edges = [0] + cuts + [n]
+    return [table.slice(edges[i], edges[i + 1] - edges[i])
+            for i in range(n_shards)]
+
+
+def assert_bytes_identical(a: ColumnTable, b: ColumnTable, ctx=""):
+    assert a.column_names == b.column_names, (ctx, a.column_names,
+                                              b.column_names)
+    for name in a.column_names:
+        ca, cb = a.column(name), b.column(name)
+        assert ca.kind == cb.kind, (ctx, name)
+        assert ca.dtype == cb.dtype, (ctx, name, ca.dtype, cb.dtype)
+        assert ca.data.tobytes() == cb.data.tobytes(), (ctx, name)
+        if ca.offsets is not None or cb.offsets is not None:
+            assert ca.offsets.tobytes() == cb.offsets.tobytes(), (ctx, name)
+        assert np.array_equal(ca.valid_mask(), cb.valid_mask()), (ctx, name)
+
+
+# ---------------------------------------------------------------------------
+# property tests: compute-layer partial/combine pairs
+# ---------------------------------------------------------------------------
+
+
+def test_group_by_combine_property():
+    rng = np.random.default_rng(42)
+    agg_names = list(AGG_POOL)
+    for trial in range(40):
+        n_rows = int(rng.integers(1, 4000))
+        key_card = int(rng.choice([1, 2, 7, 40, 500]))
+        n_shards = int(rng.integers(1, 9))
+        str_keys = bool(rng.integers(0, 2))
+        picked = rng.choice(agg_names, size=int(rng.integers(1, 5)),
+                            replace=False)
+        aggs = {name: AGG_POOL[name] for name in picked}
+        keys = ["k", "s"] if str_keys and rng.integers(0, 2) else ["k"]
+        table = _random_table(rng, n_rows, key_card, str_keys=str_keys)
+        whole = compute.group_by(table, keys, aggs)
+        shards = _random_split(rng, table, n_shards)
+        combined = compute.combine_group_by(
+            [compute.partial_group_by(s, keys, aggs) for s in shards],
+            keys, aggs)
+        assert_bytes_identical(whole, combined,
+                               ctx=(trial, keys, n_shards, sorted(aggs)))
+
+
+def test_join_combine_property():
+    rng = np.random.default_rng(7)
+    for trial in range(25):
+        n_rows = int(rng.integers(1, 2000))
+        key_card = int(rng.choice([1, 3, 20, 100]))
+        n_shards = int(rng.integers(1, 9))
+        probe = _random_table(rng, n_rows, key_card)
+        # small build side covering a strict subset of keys: some probe rows
+        # must miss, so the inner join actually filters
+        build = ColumnTable.from_pydict({
+            "k": np.arange(0.0, max(key_card * 2 // 3, 1)),
+            "label": [f"L{i}" for i in range(max(key_card * 2 // 3, 1))]})
+        whole = compute.hash_join(probe, build, ["k"])
+        shards = _random_split(rng, probe, n_shards)
+        combined = compute.combine_join(
+            [compute.partial_join(s, build, ["k"]) for s in shards])
+        assert_bytes_identical(whole, combined, ctx=(trial, n_shards))
+
+
+def test_left_join_not_combinable():
+    with pytest.raises(ValueError, match="inner"):
+        compute.partial_join(ColumnTable.from_pydict({"k": [1.0]}),
+                             ColumnTable.from_pydict({"k": [1.0]}),
+                             ["k"], how="left")
+    with pytest.raises(ValueError, match="inner"):
+        bp.JoinCombine(on=["k"], probe="l", how="left")
+
+
+def test_stats_combine_property():
+    rng = np.random.default_rng(11)
+    for trial in range(25):
+        n_rows = int(rng.integers(1, 2000))
+        n_shards = int(rng.integers(1, 9))
+        table = _random_table(rng, n_rows, 50, str_keys=True)
+        whole = compute.stats_table(table)
+        shards = _random_split(rng, table, n_shards)
+        combined = compute.combine_stats(
+            [compute.partial_stats(s) for s in shards])
+        assert_bytes_identical(whole, combined, ctx=(trial, n_shards))
+
+
+def test_shards_concat_roundtrip_consistency():
+    """The split used by the properties reassembles to the original — the
+    planner's contiguous-chunk invariant the contracts lean on."""
+    rng = np.random.default_rng(3)
+    table = _random_table(rng, 777, 10, str_keys=True)
+    shards = _random_split(rng, table, 5)
+    assert_bytes_identical(table, concat_tables(shards))
+
+
+# ---------------------------------------------------------------------------
+# regression: empty shards and the mean divide-by-zero guard
+# ---------------------------------------------------------------------------
+
+
+def test_mean_combine_with_empty_shard_no_divzero():
+    """An empty shard contributes an empty state; combining must not divide
+    by its zero count (regression: mean = sum/count over partial states)."""
+    rng = np.random.default_rng(5)
+    table = _random_table(rng, 300, 7)
+    empty = table.slice(0, 0)
+    aggs = {"m": ("v2", "mean"), "s": ("v1", "sum")}
+    whole = compute.group_by(table, ["k"], aggs)
+    with np.errstate(divide="raise", invalid="raise"):
+        combined = compute.combine_group_by(
+            [compute.partial_group_by(s, ["k"], aggs)
+             for s in (empty, table, empty)],
+            ["k"], aggs)
+    assert_bytes_identical(whole, combined)
+
+
+def test_mean_combine_all_shards_empty_matches_unsharded():
+    rng = np.random.default_rng(6)
+    empty = _random_table(rng, 100, 7).slice(0, 0)
+    aggs = {"m": ("v2", "mean"), "n": ("v1", "count")}
+    whole = compute.group_by(empty, ["k"], aggs)
+    with np.errstate(divide="raise", invalid="raise"):
+        combined = compute.combine_group_by(
+            [compute.partial_group_by(empty, ["k"], aggs) for _ in range(3)],
+            ["k"], aggs)
+    assert_bytes_identical(whole, combined)
+
+
+def test_combine_rejects_unknown_agg_and_zero_parts():
+    t = ColumnTable.from_pydict({"k": [1.0], "v1": [1], "v2": [1.0]})
+    with pytest.raises(ValueError, match="unknown agg"):
+        compute.partial_group_by(t, ["k"], {"x": ("v1", "median")})
+    with pytest.raises(ValueError, match="zero"):
+        compute.combine_group_by([], ["k"], {"x": ("v1", "sum")})
+
+
+def test_mean_state_name_collision_rejected():
+    """`<out>__sum`/`<out>__count` are reserved for a mean's partial state;
+    an explicit agg under that name would silently overwrite the state and
+    finalize the mean from the wrong column (regression)."""
+    t = ColumnTable.from_pydict({"k": [1.0, 1.0], "v1": [1, 2],
+                                 "v2": [10.0, 20.0]})
+    bad = {"a": ("v2", "mean"), "a__sum": ("v1", "sum")}
+    with pytest.raises(ValueError, match="collides"):
+        compute.partial_group_by(t, ["k"], bad)
+    with pytest.raises(ValueError, match="collides"):
+        bp.GroupByCombine(["k"], bad).partial(data=t)
+
+
+def test_contract_id_stable_across_closure_rebuilds():
+    """The control plane folds contract_id into the plan and a worker
+    daemon recomputes it from its own import of the same source — the
+    fingerprint must not depend on anything process-specific. repr() of a
+    closed-over nested function embeds its memory address (different every
+    build, let alone every process); repr() of a large ndarray elides the
+    middle, hiding edits. Structurally identical reducers must agree; an
+    elided array edit must disagree."""
+    def build(arr):
+        def helper(parts):
+            return concat_tables(list(parts))
+
+        def part(data):
+            _ = arr                       # config array rides the closure
+            return compute.partial_group_by(data, ["k"], {"s": ("v1", "sum")})
+
+        def merge(parts):
+            _ = helper                    # nested function rides the closure
+            return compute.combine_group_by(list(parts), ["k"],
+                                            {"s": ("v1", "sum")})
+
+        return bp.combinable(part, merge)
+
+    weights = np.zeros(5000)
+    assert build(weights).contract_id == build(weights.copy()).contract_id
+    edited = weights.copy()
+    edited[2500] = 7.0                    # invisible to repr(edited)
+    assert "..." in repr(edited)          # the elision the repr path misses
+    assert build(edited).contract_id != build(weights).contract_id
+
+
+# ---------------------------------------------------------------------------
+# the pallas combine accumulator (interpret mode on CPU)
+# ---------------------------------------------------------------------------
+
+
+def test_kernel_combine_accumulator_matches_ref():
+    jnp = pytest.importorskip("jax.numpy")
+    from repro.kernels import ops, ref
+
+    rng = np.random.default_rng(13)
+    for p, g in ((1, 5), (3, 130), (8, 128), (11, 260)):
+        vals = rng.normal(size=(p, g)).astype(np.float32)
+        for fn in ("sum", "count", "min", "max"):
+            neutral = {"sum": 0.0, "count": 0.0,
+                       "min": np.inf, "max": -np.inf}[fn]
+            absent = rng.random((p, g)) < 0.3
+            parts = np.where(absent, neutral, vals)
+            got = np.asarray(ops.combine_aggregate(jnp.asarray(parts), g, fn))
+            want = np.asarray(ref.ref_combine(jnp.asarray(parts), fn))
+            np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_jax_backend_combine_group_by_matches_numpy():
+    pytest.importorskip("jax")
+    rng = np.random.default_rng(17)
+    table = _random_table(rng, 1500, 40)
+    aggs = {"s": ("v1", "sum"), "m": ("v2", "mean"), "lo": ("v2", "min")}
+    shards = _random_split(rng, table, 4)
+    parts = [compute.partial_group_by(s, ["k"], aggs) for s in shards]
+    np_out = compute.combine_group_by(parts, ["k"], aggs)
+    jax_out = compute.combine_group_by(parts, ["k"], aggs, backend="jax")
+    assert np_out.column_names == jax_out.column_names
+    for c in np_out.column_names:
+        np.testing.assert_allclose(
+            jax_out.column(c).data.astype(np.float64),
+            np_out.column(c).data.astype(np.float64), rtol=1e-5)
+
+
+def test_groupby_contract_backend_jax_reaches_kernels():
+    """The declared-contract path can actually drive the device kernels:
+    GroupByCombine(backend='jax') runs both halves through the Pallas
+    wrappers and matches the numpy contract within kernel tolerance. The
+    backend is part of the contract identity (different numeric profile)."""
+    pytest.importorskip("jax")
+    rng = np.random.default_rng(19)
+    table = _random_table(rng, 1200, 30)
+    aggs = {"s": ("v1", "sum"), "m": ("v2", "mean")}
+    shards = _random_split(rng, table, 3)
+    np_c = bp.GroupByCombine(["k"], aggs)
+    jx_c = bp.GroupByCombine(["k"], aggs, backend="jax")
+    assert np_c.contract_id != jx_c.contract_id
+    np_out = np_c.combine([np_c.partial(data=s) for s in shards])
+    jax_out = jx_c.combine([jx_c.partial(data=s) for s in shards])
+    for c in np_out.column_names:
+        np.testing.assert_allclose(
+            np.asarray(jax_out.column(c).data, dtype=np.float64),
+            np.asarray(np_out.column(c).data, dtype=np.float64), rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# end to end: planner rewrite + CombineTask on a live cluster
+# ---------------------------------------------------------------------------
+
+N_ROWS = 16_000
+AGGS = {"total": ("usd", "sum"), "avg": ("usd", "mean"),
+        "n": ("qty", "count"), "hi": ("usd", "max")}
+
+
+@pytest.fixture
+def cat(tmp_path):
+    rng = np.random.default_rng(23)
+    c = Catalog(ObjectStore(str(tmp_path / "s3")))
+    c.write_table("txns", ColumnTable.from_pydict({
+        "country": rng.integers(0, 25, N_ROWS).astype(np.float64),
+        "usd": rng.integers(0, 900, N_ROWS).astype(np.float64),
+        "qty": rng.integers(1, 9, N_ROWS),
+    }), rows_per_file=N_ROWS // 8)
+    c.write_table("fx", ColumnTable.from_pydict({
+        "country": np.arange(25.0),
+        "rate": (np.arange(25) + 1).astype(np.float64)}))
+    return c
+
+
+def _combine_project(name):
+    proj = bp.Project(name)
+
+    @proj.model(combinable=bp.GroupByCombine(["country"], AGGS))
+    def by_country(data=bp.Model("txns", columns=["country", "usd", "qty"])):
+        return compute.group_by(data, ["country"], AGGS)
+
+    @proj.model(combinable=bp.JoinCombine(on=["country"], probe="l"))
+    def enriched(l=bp.Model("txns", columns=["country", "usd"]),
+                 r=bp.Model("fx")):
+        return compute.hash_join(l, r, ["country"])
+
+    @proj.model(combinable=bp.StatsCombine())
+    def stats(data=bp.Model("txns")):
+        return compute.stats_table(data)
+
+    return proj
+
+
+def test_sharded_combine_run_matches_unsharded(cat, tmp_path):
+    cluster = LocalCluster(cat, cat.store, str(tmp_path / "dp"), n_workers=4)
+    try:
+        sharded = execute_run(_combine_project("c1"), cluster=cluster,
+                              shard_threshold_bytes=1, max_shards=4)
+        unsharded = execute_run(_combine_project("c2"), cluster=cluster,
+                                shard_threshold_bytes=1 << 60)
+        # the rewrite fired: partials ride the scan shards, a CombineTask
+        # sits under the original id, and NO raw-row gather was planned for
+        # the aggregation inputs
+        for fn_name in ("by_country", "enriched", "stats"):
+            assert isinstance(sharded.plan.tasks[f"func:{fn_name}"],
+                              CombineTask)
+            for k in range(4):
+                pt = sharded.plan.tasks[f"func:{fn_name}#{k}"]
+                assert isinstance(pt, FunctionTask)
+                assert pt.agg_phase == "partial"
+                assert pt.hints.shard_index == k and pt.hints.num_shards == 4
+        assert "scan:txns" not in sharded.plan.tasks   # no scan-level gather
+        for name in ("by_country", "enriched", "stats"):
+            assert_bytes_identical(sharded.read(name, cluster),
+                                   unsharded.read(name, cluster), ctx=name)
+    finally:
+        cluster.close()
+
+
+def test_combine_broadcast_side_computed_once(cat, tmp_path):
+    """The join's small build side is planned once and fanned out to every
+    partial — not re-scanned per shard."""
+    cluster = LocalCluster(cat, cat.store, str(tmp_path / "dp"), n_workers=4)
+    try:
+        res = execute_run(_combine_project("bc"), cluster=cluster,
+                          shard_threshold_bytes=1, max_shards=4,
+                          targets=["enriched"])
+        scan_fx = [t for t in res.plan.order if t.startswith("scan:fx")]
+        assert scan_fx == ["scan:fx"]
+        for k in range(4):
+            edges = res.plan.tasks[f"func:enriched#{k}"].inputs
+            assert [e.parent_task for e in edges] == [f"scan:txns#{k}",
+                                                      "scan:fx"]
+        assert res.task_attempts["scan:fx"] == 1
+    finally:
+        cluster.close()
+
+
+def test_custom_combinable_reducer(cat, tmp_path):
+    """bp.combinable: a user-written partial/combine pair runs shard-local
+    and merges at the gather like the builtins."""
+    def make(name):
+        proj = bp.Project(name)
+
+        def part(data):
+            return compute.group_by(data, ["country"],
+                                    {"s": ("usd", "sum")})
+
+        def merge(parts):
+            return compute.combine_group_by(parts, ["country"],
+                                            {"s": ("usd", "sum")})
+
+        @proj.model(combinable=bp.combinable(part, merge))
+        def totals(data=bp.Model("txns", columns=["country", "usd"])):
+            return compute.group_by(data, ["country"], {"s": ("usd", "sum")})
+
+        return proj
+
+    cluster = LocalCluster(cat, cat.store, str(tmp_path / "dp"), n_workers=4)
+    try:
+        sharded = execute_run(make("cu1"), cluster=cluster,
+                              shard_threshold_bytes=1, max_shards=4)
+        unsharded = execute_run(make("cu2"), cluster=cluster,
+                                shard_threshold_bytes=1 << 60)
+        assert isinstance(sharded.plan.tasks["func:totals"], CombineTask)
+        assert_bytes_identical(sharded.read("totals", cluster),
+                               unsharded.read("totals", cluster))
+    finally:
+        cluster.close()
+
+
+def test_combine_states_stay_small_vs_gather(cat, tmp_path):
+    """The point of the rewrite: only per-group states cross the merge — the
+    combine's input bytes are orders of magnitude below the raw table."""
+    from repro.core import Client
+
+    cluster = LocalCluster(cat, cat.store, str(tmp_path / "dp"), n_workers=4)
+    client = Client()
+    try:
+        res = execute_run(_combine_project("sz"), cluster=cluster,
+                          client=client, shard_threshold_bytes=1,
+                          max_shards=4, targets=["by_country"])
+        raw_bytes = sum(f.size_bytes for f in cat.get_table("txns").files)
+        combine_events = [e for e in client.of_kind("combine")
+                          if e.task_id == "func:by_country"]
+        assert combine_events, "CombineTask emitted no combine event"
+        state_bytes = combine_events[-1].payload["state_bytes"]
+        assert state_bytes < raw_bytes / 20
+        assert combine_events[-1].payload["parts"] == 4
+    finally:
+        cluster.close()
+
+
+def test_materializing_combinable_writes_final_table(cat, tmp_path):
+    """materialize=True on a combinable agg materializes the COMBINED
+    table (partials never hit the catalog)."""
+    proj = bp.Project("matc")
+
+    @proj.model(materialize=True,
+                combinable=bp.GroupByCombine(["country"],
+                                             {"s": ("usd", "sum")}))
+    def rollup(data=bp.Model("txns", columns=["country", "usd"])):
+        return compute.group_by(data, ["country"], {"s": ("usd", "sum")})
+
+    cluster = LocalCluster(cat, cat.store, str(tmp_path / "dp"), n_workers=4)
+    try:
+        res = execute_run(proj, cluster=cluster, shard_threshold_bytes=1,
+                          max_shards=4)
+        task = res.plan.tasks["func:rollup"]
+        assert isinstance(task, CombineTask) and task.materialize
+        assert all(not res.plan.tasks[f"func:rollup#{k}"].materialize
+                   for k in range(4))
+        snap = cat.get_table("rollup")
+        written = cluster.workers["worker-0"].scan_cache.read_snapshot(snap,
+                                                                       None)
+        assert_bytes_identical(written, res.read("rollup", cluster))
+    finally:
+        cluster.close()
+
+
+def test_partial_cache_keys_fold_in_contract(cat):
+    """Editing the contract (different aggs) must invalidate cached partial
+    states even when the model body is unchanged."""
+    def make(name, aggs):
+        proj = bp.Project(name)
+
+        @proj.model(combinable=bp.GroupByCombine(["country"], aggs))
+        def by_country(data=bp.Model("txns",
+                                     columns=["country", "usd", "qty"])):
+            return compute.group_by(data, ["country"], aggs)
+
+        return proj
+
+    from repro.core import WorkerProfile
+    planner = Planner(cat, [WorkerProfile(f"w{i}") for i in range(4)],
+                      shard_threshold_bytes=1, max_shards=4)
+    p1 = planner.plan(build_logical_plan(
+        make("k1", {"s": ("usd", "sum")})))
+    p2 = planner.plan(build_logical_plan(
+        make("k2", {"s": ("usd", "max")})))
+    assert (p1.tasks["func:by_country#0"].cache_key
+            != p2.tasks["func:by_country#0"].cache_key)
+    # ... and the COMBINE key too: a warm worker's result cache must never
+    # serve the old aggregation's combined table under the new contract
+    assert (p1.tasks["func:by_country"].cache_key
+            != p2.tasks["func:by_country"].cache_key)
+
+
+def test_warm_cluster_never_serves_stale_combine(cat, tmp_path):
+    """Regression: same model body, contract edited sum -> max, SAME warm
+    cluster. The second run must recompute (maxes), not replay the cached
+    sums."""
+    def make(name, fn):
+        # aggs lives in a closure: the body's code_hash is IDENTICAL across
+        # sum/max — only the contract fingerprint can tell the runs apart
+        aggs = {"s": ("usd", fn)}
+        proj = bp.Project(name)
+
+        @proj.model(combinable=bp.GroupByCombine(["country"], aggs))
+        def by_country(data=bp.Model("txns", columns=["country", "usd"])):
+            return compute.group_by(data, ["country"], aggs)
+
+        return proj
+
+    cluster = LocalCluster(cat, cat.store, str(tmp_path / "dp"), n_workers=4)
+    try:
+        first = execute_run(make("warm1", "sum"), cluster=cluster,
+                            shard_threshold_bytes=1, max_shards=4)
+        second = execute_run(make("warm2", "max"), cluster=cluster,
+                             shard_threshold_bytes=1, max_shards=4)
+        sums = first.read("by_country", cluster).column("s").to_numpy()
+        maxes = second.read("by_country", cluster).column("s").to_numpy()
+        table = cat.get_table("txns")
+        whole = compute.group_by(
+            cluster.workers["worker-0"].scan_cache.read_snapshot(table, None),
+            ["country"], {"s": ("usd", "max")})
+        np.testing.assert_array_equal(maxes,
+                                      whole.column("s").to_numpy())
+        assert not np.array_equal(sums, maxes)
+    finally:
+        cluster.close()
