@@ -2,7 +2,7 @@ PYTHON ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
 .PHONY: test test-fast bench-smoke bench-sharding bench-combine \
-	bench-multihost serve-smoke lint
+	bench-multihost bench-shuffle serve-smoke lint
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -24,6 +24,9 @@ bench-combine:
 
 bench-multihost:
 	$(PYTHON) -m benchmarks.multihost_scan --json multihost_scan.json
+
+bench-shuffle:
+	$(PYTHON) -m benchmarks.shuffle_exchange --json shuffle_exchange.json
 
 serve-smoke:
 	$(PYTHON) -m repro.launch.serve --arch xlstm-125m --smoke --steps 8 --batch 2

@@ -22,8 +22,9 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (kernels_bench, multihost_scan, pipeline_cache,
-                            shard_combine, sharded_scan, table1_limits,
-                            table2_envs, table3_passing, training_throughput)
+                            shard_combine, sharded_scan, shuffle_exchange,
+                            table1_limits, table2_envs, table3_passing,
+                            training_throughput)
 
     plan = [
         ("table1_limits", lambda: table1_limits.run(
@@ -40,6 +41,10 @@ def main() -> None:
             n_rows=8_000_000 if args.full else 4_000_000)),
         ("multihost_scan", lambda: multihost_scan.run(
             n_rows=4_000_000 if args.full else 1_000_000)),
+        ("shuffle_exchange", lambda: shuffle_exchange.run(
+            join_rows=4_000_000 if args.full else 1_000_000,
+            skew_rows=300_000 if args.full else 100_000,
+            trials=5 if args.full else 3)),
         ("kernels_bench", lambda: kernels_bench.run(
             n_rows=4_000_000 if args.full else 500_000)),
         ("training_throughput", lambda: training_throughput.run(

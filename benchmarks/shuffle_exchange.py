@@ -1,0 +1,358 @@
+"""Partition-exchange benchmark: shuffled joins vs gather-then-join, and
+skew-aware dynamic repartitioning vs static partitioning.
+
+Two scenarios on a 4-worker LocalCluster, both verified byte-identical to
+unsharded execution:
+
+  * large-large join — a selective inner join between two tables too big to
+    sit comfortably on one worker. The gather baseline (no exchange
+    contract) concatenates BOTH tables onto a single worker — full-table
+    intermediates that blow past the spill threshold onto disk — and runs
+    one monolithic join there. The shuffled plan hash-partitions each
+    side where its shards already live and joins partition-by-partition;
+    no full-table intermediate ever materializes.
+
+  * skewed-key join — 90% of probe rows carry one hot key, so one hash
+    partition holds ~90% of a CPU-heavy fan-out-join-plus-kernel. Static
+    partitioning serializes that partition on one worker; skew-aware
+    dynamic repartitioning re-splits it into row-range sub-tasks across
+    the fleet before its consumer dispatches.
+
+Two readings per comparison:
+
+  * ``wall`` — measured end-to-end wall clock (median over interleaved
+    trials). The CI box timeshares a single CPU across all four workers,
+    so wall mostly measures total work plus host noise.
+  * ``fleet`` — the 4-worker makespan the schedule admits: max over
+    workers of the summed seconds of the tasks placed on it. Placements
+    come from the real 4-worker run; per-task seconds come from a serial
+    profiling run (1 worker, queue depth 1), because a concurrent run's
+    per-task timings are inflated by GIL timesharing on a 1-CPU host.
+    Task ids are content-addressed and the skew-split decision is
+    data-driven, so the two runs join cleanly. (A serial run zero-copies
+    every fetch, so the metric models data-local transfer; it is the
+    quantity partition exchange and skew re-splitting optimize, and it
+    is stable under host timesharing.)
+
+Speculation is disabled for every variant (`speculation_min_s`), so 1-CPU
+queueing delays don't double-run multi-second tasks and add noise.
+
+    PYTHONPATH=src python -m benchmarks.shuffle_exchange [--smoke] [--full]
+                                                         [--json PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import report
+import repro as bp
+from repro.columnar import Catalog, ColumnTable, ObjectStore, compute
+from repro.core import LocalCluster
+from repro.core.runtime import execute_run
+
+N_WORKERS = 4
+
+
+def _identical(a, b):
+    return (a.column_names == b.column_names
+            and all(a.column(c).data.tobytes() == b.column(c).data.tobytes()
+                    for c in a.column_names))
+
+
+def _durations(res) -> dict:
+    """Per-task seconds from a run's task_done events."""
+    out = {}
+    for ev in res.client.of_kind("task_done"):
+        out.setdefault(ev.task_id, ev.payload.get("seconds", 0.0))
+    return out
+
+
+def _fleet_makespan(res, serial: dict) -> float:
+    """Max over workers of summed task seconds — the stage-parallel wall
+    clock a one-core-per-worker fleet would see. Placements come from
+    ``res`` (the concurrent 4-worker run); durations come from ``serial``
+    (an uncontended profiling run), falling back to the concurrent run's
+    own timing for any task the profile didn't see."""
+    busy = {}
+    for ev in res.client.of_kind("task_done"):
+        sec = serial.get(ev.task_id, ev.payload.get("seconds", 0.0))
+        busy[ev.worker] = busy.get(ev.worker, 0.0) + sec
+    return max(busy.values()) if busy else 0.0
+
+
+def _timed_run(project, cluster, **kw):
+    t0 = time.perf_counter()
+    res = execute_run(project, cluster=cluster, speculation_min_s=1e9, **kw)
+    return time.perf_counter() - t0, res
+
+
+# ---------------------------------------------------------------------------
+# scenario 1: large-large selective inner join
+# ---------------------------------------------------------------------------
+
+
+def _join_project(name: str, shuffled: bool) -> bp.Project:
+    proj = bp.Project(name)
+    contract = (bp.JoinExchange(on=["k"], probe="facts", build="dims",
+                                how="inner") if shuffled else None)
+
+    @proj.model(exchange=contract)
+    def joined(facts=bp.Model("facts"), dims=bp.Model("dims")):
+        return compute.hash_join(facts, dims, ["k"], how="inner")
+
+    return proj
+
+
+def join_scenario(n_rows: int, trials: int, tmp: str) -> dict:
+    rng = np.random.default_rng(11)
+    # keys sparse in a huge domain: ~2% of probe rows find a match, so the
+    # join is selective — partition outputs (and the order-merge) stay tiny
+    # while the gather baseline still materializes both full tables
+    domain = max(n_rows * 50, 1000)
+    facts = ColumnTable.from_pydict({
+        "k": rng.integers(0, domain, n_rows),
+        "v": rng.integers(0, 10_000, n_rows).astype(np.float64),
+        "q": rng.integers(1, 40, n_rows),
+    })
+    dims = ColumnTable.from_pydict({
+        "k": rng.integers(0, domain, n_rows),
+        "w": rng.integers(0, 100, n_rows).astype(np.float64),
+        "z": rng.integers(0, 100, n_rows).astype(np.float64),
+    })
+    store = ObjectStore(f"{tmp}/s3-join")
+    catalog = Catalog(store)
+    catalog.write_table("facts", facts, rows_per_file=max(n_rows // 4, 1))
+    catalog.write_table("dims", dims, rows_per_file=max(n_rows // 4, 1))
+    # full-table gathers (~facts.nbytes) spill; per-shard writer parts and
+    # per-partition slices (~facts.nbytes / 4) stay in shared memory
+    spill = int(facts.nbytes * 0.6)
+
+    def _measure(tag, shuffled, serial=None, n_workers=N_WORKERS, **kw):
+        opts = {"mmap_spill_bytes": spill}
+        if n_workers == 1:
+            opts["worker_queue_depth"] = 1    # truly serial: no overlap
+        cluster = LocalCluster(catalog, store, f"{tmp}/dp-j-{tag}",
+                               n_workers=n_workers, engine_opts=opts)
+        try:
+            wall, res = _timed_run(_join_project(f"bj-{tag}", shuffled),
+                                   cluster, **kw)
+            return (wall, _fleet_makespan(res, serial or {}), res,
+                    res.read("joined", cluster))
+        finally:
+            cluster.close()
+
+    t_base, _, _, out_base = _measure("unsharded", True,
+                                      shard_threshold_bytes=1 << 60)
+    # uncontended per-task durations for the fleet metric (module docstring)
+    sharded = dict(shard_threshold_bytes=1, max_shards=N_WORKERS)
+    serial_g = _durations(_measure("pg", False, n_workers=1, **sharded)[2])
+    serial_s = _durations(_measure("ps", True, n_workers=1, **sharded)[2])
+    g_wall, g_fleet, s_wall, s_fleet = [], [], [], []
+    identical = True
+    for t in range(trials):
+        w, f, _, out = _measure(f"g{t}", False, serial=serial_g, **sharded)
+        g_wall.append(w)
+        g_fleet.append(f)
+        identical = identical and _identical(out, out_base)
+        w, f, _, out = _measure(f"s{t}", True, serial=serial_s, **sharded)
+        s_wall.append(w)
+        s_fleet.append(f)
+        identical = identical and _identical(out, out_base)
+
+    med = statistics.median
+    wall_speedup = med(g_wall) / max(med(s_wall), 1e-9)
+    fleet_speedup = med(g_fleet) / max(med(s_fleet), 1e-9)
+    report("shuffle/gather_then_join", med(g_wall),
+           f"{n_rows} rows/side, raw gather + 1-worker join")
+    report("shuffle/shuffled_join", med(s_wall),
+           f"hash exchange, x{wall_speedup:.2f} wall / "
+           f"x{fleet_speedup:.2f} on {N_WORKERS} workers, "
+           f"identical={identical}")
+    return {"n_rows": n_rows, "trials": trials,
+            "unsharded_s": round(t_base, 4),
+            "gather_wall_s": round(med(g_wall), 4),
+            "shuffled_wall_s": round(med(s_wall), 4),
+            "gather_fleet_s": round(med(g_fleet), 4),
+            "shuffled_fleet_s": round(med(s_fleet), 4),
+            "wall_speedup": round(wall_speedup, 3),
+            "fleet_speedup": round(fleet_speedup, 3),
+            "identical": bool(identical)}
+
+
+# ---------------------------------------------------------------------------
+# scenario 2: skewed-key join, dynamic re-split vs static partitioning
+# ---------------------------------------------------------------------------
+
+
+def _skew_project(name: str, passes: int) -> bp.Project:
+    """Fan-out join followed by a heavy row-wise kernel, declared as a
+    custom exchange: the partition operator's cost scales with its
+    probe-row count — the quantity a skew re-split divides — while the
+    output stays narrow (k, score) so the order-merge is cheap.
+    Elementwise math commutes with row-range slicing, so sub-task concat
+    stays byte-identical to the whole partition."""
+    proj = bp.Project(name)
+
+    def _score(j):
+        v = j.column("f0").data
+        acc = np.zeros_like(v)
+        for _ in range(passes):
+            for i in range(12):
+                b = j.column(f"b{i}").data
+                acc = acc + np.sqrt(np.abs(v * b)) + np.log1p(np.abs(b))
+        return acc
+
+    def _partition(events, attrs):
+        j = compute.join_partition(events, attrs, ["k"], how="inner")
+        # thread the hidden order columns through, like join_partition
+        # does, so merge="order" can restore the unsharded row order
+        return ColumnTable.from_pydict({
+            "k": j.column("k").data, "score": _score(j),
+            compute.HIDDEN_ORDER_COLUMN:
+                j.column(compute.HIDDEN_ORDER_COLUMN).data,
+            compute.HIDDEN_MISS_COLUMN:
+                j.column(compute.HIDDEN_MISS_COLUMN).data})
+
+    contract = bp.exchangeable(_partition, keys=["k"], merge="order",
+                               shard_params=("events", "attrs"),
+                               order_param="events", split_param="events")
+
+    @proj.model(exchange=contract)
+    def hot_join(events=bp.Model("events"), attrs=bp.Model("attrs")):
+        j = compute.hash_join(events, attrs, ["k"], how="inner")
+        return ColumnTable.from_pydict({"k": j.column("k").data,
+                                        "score": _score(j)})
+
+    return proj
+
+
+def skew_scenario(n_rows: int, trials: int, tmp: str) -> dict:
+    rng = np.random.default_rng(23)
+    n_keys = max(n_rows // 8, 64)
+    fanout = 10
+    hot = 7
+    k = rng.integers(0, n_keys, n_rows)
+    k[rng.random(n_rows) < 0.9] = hot   # 90% of probe rows hit one key
+    ecols = {"k": k}
+    for i in range(12):                  # wide rows: bytes ≫ rows
+        ecols[f"f{i}"] = rng.random(n_rows)
+    events = ColumnTable.from_pydict(ecols)
+    acols = {"k": np.repeat(np.arange(n_keys, dtype=np.int64), fanout)}
+    for i in range(12):
+        acols[f"b{i}"] = rng.random(n_keys * fanout)
+    attrs = ColumnTable.from_pydict(acols)
+    store = ObjectStore(f"{tmp}/s3-skew")
+    catalog = Catalog(store)
+    catalog.write_table("events", events, rows_per_file=max(n_rows // 4, 1))
+    catalog.write_table("attrs", attrs,
+                        rows_per_file=max((n_keys * fanout) // 4, 1))
+    # scale kernel weight with input so the hot partition costs seconds,
+    # not milliseconds, at every benchmark size
+    passes = max(1, 1_200_000 // max(n_rows, 1))
+
+    def _measure(tag, opts, serial=None, n_workers=N_WORKERS, **kw):
+        if n_workers == 1:
+            opts = dict(opts, worker_queue_depth=1)
+        cluster = LocalCluster(catalog, store, f"{tmp}/dp-k-{tag}",
+                               n_workers=n_workers, engine_opts=opts)
+        try:
+            wall, res = _timed_run(_skew_project(f"bk-{tag}", passes),
+                                   cluster, **kw)
+            splits = len(res.client.of_kind("skew_split"))
+            return (wall, _fleet_makespan(res, serial or {}), res,
+                    res.read("hot_join", cluster), splits)
+        finally:
+            cluster.close()
+
+    base = {}
+    t_base, _, _, out_base, _ = _measure("unsharded", dict(base),
+                                         shard_threshold_bytes=1 << 60)
+    # uncontended per-task durations; the split decision is data-driven, so
+    # the serial dynamic run produces the same sub-tasks as the fleet run
+    sharded = dict(shard_threshold_bytes=1, max_shards=N_WORKERS)
+    serial_st = _durations(_measure("pst", dict(base, skew_factor=None),
+                                    n_workers=1, **sharded)[2])
+    serial_dy = _durations(_measure("pdy", dict(base, skew_min_bytes=1 << 18),
+                                    n_workers=1, **sharded)[2])
+    st_wall, st_fleet, dy_wall, dy_fleet = [], [], [], []
+    identical = True
+    n_splits = 0
+    for t in range(trials):
+        w, f, _, out, _ = _measure(f"st{t}", dict(base, skew_factor=None),
+                                   serial=serial_st, **sharded)
+        st_wall.append(w)
+        st_fleet.append(f)
+        identical = identical and _identical(out, out_base)
+        w, f, _, out, s = _measure(f"dy{t}",
+                                   dict(base, skew_min_bytes=1 << 18),
+                                   serial=serial_dy, **sharded)
+        dy_wall.append(w)
+        dy_fleet.append(f)
+        n_splits += s
+        identical = identical and _identical(out, out_base)
+
+    med = statistics.median
+    wall_speedup = med(st_wall) / max(med(dy_wall), 1e-9)
+    fleet_speedup = med(st_fleet) / max(med(dy_fleet), 1e-9)
+    report("shuffle/skew_static", med(st_wall),
+           f"{n_rows} probe rows, 90% one key, hot partition serialized")
+    report("shuffle/skew_dynamic", med(dy_wall),
+           f"{n_splits}/{trials} runs re-split, x{wall_speedup:.2f} wall / "
+           f"x{fleet_speedup:.2f} on {N_WORKERS} workers, "
+           f"identical={identical}")
+    return {"n_rows": n_rows, "trials": trials, "skew_splits": n_splits,
+            "unsharded_s": round(t_base, 4),
+            "static_wall_s": round(med(st_wall), 4),
+            "dynamic_wall_s": round(med(dy_wall), 4),
+            "static_fleet_s": round(med(st_fleet), 4),
+            "dynamic_fleet_s": round(med(dy_fleet), 4),
+            "wall_speedup": round(wall_speedup, 3),
+            "fleet_speedup": round(fleet_speedup, 3),
+            "identical": bool(identical)}
+
+
+def run(join_rows: int = 2_000_000, skew_rows: int = 150_000,
+        trials: int = 3, json_path: str = None) -> dict:
+    tmp = tempfile.mkdtemp(prefix="bench_shuffle_")
+    join = join_scenario(join_rows, trials, tmp)
+    skew = skew_scenario(skew_rows, trials, tmp)
+    result = {"n_workers": N_WORKERS,
+              "join": join, "skew": skew,
+              # the on-4-workers numbers (see module docstring): the
+              # schedule's makespan ratio with real placements/durations
+              "speedup_large_large_join": join["fleet_speedup"],
+              "speedup_skewed_vs_static": skew["fleet_speedup"],
+              "identical": bool(join["identical"] and skew["identical"])}
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(result, f, indent=2)
+    if not result["identical"]:
+        raise SystemExit("exchange output differs from unsharded execution")
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes for CI (correctness + plan shape)")
+    ap.add_argument("--full", action="store_true", help="paper-scale sizes")
+    ap.add_argument("--json", default=None, help="write results JSON here")
+    args = ap.parse_args()
+    if args.smoke:
+        kw = {"join_rows": 120_000, "skew_rows": 40_000, "trials": 1}
+    elif args.full:
+        kw = {"join_rows": 4_000_000, "skew_rows": 300_000, "trials": 5}
+    else:
+        kw = {}
+    out = run(json_path=args.json, **kw)
+    print(json.dumps(out))
+
+
+if __name__ == "__main__":
+    main()

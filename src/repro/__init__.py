@@ -16,10 +16,12 @@ The public SDK mirrors the paper's programming model:
         ...
         return df
 """
-from repro.api import (GroupByCombine, JoinCombine, Model, Project,
-                       StatsCombine, combinable, default_project, model,
-                       python, resources, run, submit)
-from repro.core.spec import CombineContract, EnvSpec, ModelRef, ResourceHint
+from repro.api import (GroupByCombine, GroupByExchange, JoinCombine,
+                       JoinExchange, Model, Project, SortExchange,
+                       StatsCombine, combinable, default_project,
+                       exchangeable, model, python, resources, run, submit)
+from repro.core.spec import (CombineContract, EnvSpec, ExchangeContract,
+                             ModelRef, ResourceHint)
 
 __version__ = "1.0.0"
 
@@ -28,4 +30,6 @@ __all__ = [
     "run", "submit", "EnvSpec", "ModelRef", "ResourceHint",
     "CombineContract", "GroupByCombine", "JoinCombine", "StatsCombine",
     "combinable",
+    "ExchangeContract", "GroupByExchange", "JoinExchange", "SortExchange",
+    "exchangeable",
 ]

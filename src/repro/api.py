@@ -27,8 +27,9 @@ from __future__ import annotations
 import threading
 from typing import Callable, Dict, List, Optional, Sequence, Union
 
-from repro.core.spec import (CombineContract, EnvSpec, FunctionSpec, ModelRef,
-                             ResourceHint, extract_inputs)
+from repro.core.spec import (CombineContract, EnvSpec, ExchangeContract,
+                             FunctionSpec, ModelRef, ResourceHint,
+                             extract_inputs)
 
 _ENV_ATTR = "__repro_env__"
 _RES_ATTR = "__repro_resources__"
@@ -113,6 +114,101 @@ def StatsCombine() -> CombineContract:
                            fingerprint="stats")
 
 
+# ---------------------------------------------------------------------------
+# partition exchange (shuffle) contracts
+# ---------------------------------------------------------------------------
+
+
+def exchangeable(partition: Callable, keys: Sequence[str],
+                 merge: str = "concat", mode: str = "hash",
+                 shard_params: Sequence[str] = (), order_param: str = "",
+                 split_param: str = "", descending: bool = False
+                 ) -> ExchangeContract:
+    """Mark a custom keyed operator partition-exchangeable: `partition`
+    (same signature as the model function) runs once per hash/range
+    partition of the `shard_params` inputs on `keys` (the rest broadcast
+    whole), and the built-in `merge` reassembles the partition outputs.
+    The contract is ``fn(inputs) == merge([partition(slice_j(inputs))])``."""
+    if merge not in ("concat", "keys", "order"):
+        raise ValueError(f"unknown merge {merge!r}")
+    return ExchangeContract("custom", tuple(keys), partition, merge=merge,
+                            mode=mode, shard_params=tuple(shard_params),
+                            order_param=order_param, split_param=split_param,
+                            descending=descending)
+
+
+def JoinExchange(on: Sequence[str], probe: str, build: str,
+                 how: str = "inner", suffix: str = "_r") -> ExchangeContract:
+    """Declare the model as ``compute.hash_join(probe, build, on)`` with
+    BOTH sides sharded: each side's shards hash-partition on `on`, and
+    partition j joins only the rows whose keys hash to j — including LEFT
+    joins, which JoinCombine cannot do (a shard-local probe can't tell a
+    local miss from a hit in another shard's build rows, but a
+    partition-local probe sees every build row for its keys). The merge
+    restores the unsharded row order via hidden order columns the probe
+    side's writers stamp; the probe side is also eligible for skew-aware
+    row-range re-splits (the build partition is consumed whole per sub)."""
+    from repro.columnar import compute
+
+    on = list(on)
+    if how not in ("inner", "left"):
+        raise ValueError(f"unsupported join {how!r}")
+
+    def partition(**kw):
+        probe_t = kw.pop(probe)
+        build_t = kw.pop(build)
+        if kw:
+            raise ValueError(f"JoinExchange needs exactly two inputs, got "
+                             f"extra {list(kw)}")
+        return compute.join_partition(probe_t, build_t, on, how=how,
+                                      suffix=suffix)
+
+    return ExchangeContract("join", tuple(on), partition, merge="order",
+                            mode="hash", shard_params=(probe, build),
+                            order_param=probe, split_param=probe,
+                            fingerprint=repr((on, probe, build, how, suffix)))
+
+
+def SortExchange(by: Sequence[str],
+                 descending: bool = False) -> ExchangeContract:
+    """Declare the model as ``compute.sort_by(input, by)``: producer shards
+    range-partition on sampled splits of the first sort key, each partition
+    sorts locally, and partitions concatenate in index order — a shard-local
+    global sort, byte-identical to sorting the gathered table."""
+    from repro.columnar import compute
+
+    by = list(by)
+
+    def partition(**kw):
+        (table,) = kw.values()
+        return compute.sort_by(table, by, descending=descending)
+
+    return ExchangeContract("sort", tuple(by), partition, merge="concat",
+                            mode="range", descending=descending,
+                            fingerprint=repr((by, descending)))
+
+
+def GroupByExchange(keys: Sequence[str],
+                    aggs: Dict[str, tuple]) -> ExchangeContract:
+    """Declare the model as ``compute.group_by(input, keys, aggs)`` executed
+    per hash partition: partitions hold disjoint key sets, so each group
+    aggregates entirely on one worker (exact medians/holistic aggregates
+    would be legal here, unlike GroupByCombine's two-phase states) and the
+    merge is a stable key sort. Downstream combinables/exchanges chain on
+    the partitions without ever gathering raw rows."""
+    from repro.columnar import compute
+
+    keys, aggs = list(keys), dict(aggs)
+
+    def partition(**kw):
+        (table,) = kw.values()
+        return compute.group_by(table, keys, aggs)
+
+    return ExchangeContract("group_by", tuple(keys), partition, merge="keys",
+                            mode="hash",
+                            fingerprint=repr((keys, sorted(aggs.items()))))
+
+
 def Model(name: str, columns: Optional[Sequence[str]] = None,
           filter: Optional[str] = None) -> ModelRef:
     """Reference a parent dataframe by name, with optional pushdown hints."""
@@ -131,7 +227,8 @@ class Project:
     def model(self, name: Optional[str] = None, materialize: bool = False,
               resources: Optional[ResourceHint] = None,
               rowwise: bool = False,
-              combinable: Optional[CombineContract] = None) -> Callable:
+              combinable: Optional[CombineContract] = None,
+              exchange: Optional[ExchangeContract] = None) -> Callable:
         """`rowwise=True` declares that every output row depends only on its
         input row (map-style); the planner may then split the function across
         the shards of a large input and merge once downstream.
@@ -140,7 +237,17 @@ class Project:
         aggregation (bp.GroupByCombine / bp.JoinCombine / bp.StatsCombine, or
         bp.combinable for a custom reducer): over a sharded input it runs as
         per-shard partials whose states merge at the gather — the fleet
-        aggregates in parallel and only per-group states cross workers."""
+        aggregates in parallel and only per-group states cross workers.
+
+        `exchange=` declares the function a keyed operator over a hash/range
+        partitioning (bp.JoinExchange / bp.SortExchange / bp.GroupByExchange,
+        or bp.exchangeable): sharded inputs shuffle into P key-addressed
+        partitions and the operator runs once per partition, shard-local end
+        to end — raw rows cross workers once, partition-addressed."""
+        if combinable is not None and exchange is not None:
+            raise ValueError("a model declares combinable= or exchange=, "
+                             "not both (the rewrites are exclusive)")
+
         def deco(fn: Callable) -> Callable:
             spec = FunctionSpec(
                 name=name or fn.__name__,
@@ -151,6 +258,7 @@ class Project:
                 resources=resources or getattr(fn, _RES_ATTR, ResourceHint()),
                 rowwise=rowwise,
                 combinable=combinable,
+                exchange=exchange,
             )
             with self._lock:
                 if spec.name in self.functions:

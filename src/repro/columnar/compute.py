@@ -125,9 +125,18 @@ def group_by(table: ColumnTable, keys: Sequence[str],
     only.
     """
     if table.num_rows == 0:
+        # an exchange partition may be legitimately empty; its aggregate
+        # dtypes must match the non-empty partitions' (count is always
+        # int64, int sum/min/max stay int64) or the partition merge would
+        # silently promote the whole column to float64
         data = {k: table.column(k).take(np.array([], np.int64)) for k in keys}
         for out_name, (src, fn) in aggs.items():
-            data[out_name] = numeric_column(np.array([], dtype=np.float64))
+            is_int = (fn == "count"
+                      or (fn in ("sum", "min", "max")
+                          and np.issubdtype(table.column(src).dtype,
+                                            np.integer)))
+            data[out_name] = numeric_column(
+                np.array([], dtype=np.int64 if is_int else np.float64))
         return ColumnTable(data)
     codes, first = _encode_keys(table, keys)
     n_groups = len(first)
@@ -225,9 +234,14 @@ def combine_group_by(parts: Sequence[ColumnTable], keys: Sequence[str],
     nonempty = [p for p in parts if p.num_rows]
     if not nonempty:
         # every shard was empty: mirror group_by's empty-table branch exactly
+        # — including its dtypes (count is int64, int sum/min/max stay int64;
+        # the empty partial states already carry those dtypes, mean has no
+        # state column of its own and finalizes to float64)
         data = {k: parts[0].column(k) for k in keys}
-        for out in aggs:
-            data[out] = numeric_column(np.array([], dtype=np.float64))
+        for out, (_, fn) in aggs.items():
+            dtype = (np.float64 if fn == "mean"
+                     else parts[0].column(out).dtype)
+            data[out] = numeric_column(np.array([], dtype=dtype))
         return ColumnTable(data)
     state = concat_tables(nonempty)
     merge_aggs: Dict[str, Tuple[str, str]] = {}
@@ -304,26 +318,100 @@ def combine_join(parts: Sequence[ColumnTable]) -> ColumnTable:
 # ---------------------------------------------------------------------------
 
 
-def hash_join(left: ColumnTable, right: ColumnTable, on: Sequence[str],
-              how: str = "inner", suffix: str = "_r") -> ColumnTable:
-    """Hash join on equal column names. Supports inner and left joins."""
+class _NullKey:
+    """Stand-in for a null utf8 join/sort key inside object arrays: totally
+    ordered below every string (so np.unique / argsort work) and equal only
+    to itself — the module singleton — which reproduces Python `None`
+    semantics in the dict-based join this vectorized path replaced."""
+
+    __slots__ = ()
+
+    def __lt__(self, other):
+        return other is not self
+
+    def __gt__(self, other):
+        return False
+
+    def __le__(self, other):
+        return True
+
+    def __ge__(self, other):
+        return other is self
+
+    def __repr__(self):
+        return "<null>"
+
+
+_NULL_KEY = _NullKey()
+
+
+def _object_keys(col: Column) -> np.ndarray:
+    vals = np.asarray(col.to_numpy(), dtype=object)
+    if col.null_count:
+        vals = np.array([v if v is not None else _NULL_KEY for v in vals],
+                        dtype=object)
+    return vals
+
+
+def _join_codes(left: ColumnTable, right: ColumnTable,
+                on: Sequence[str]) -> Tuple[np.ndarray, np.ndarray]:
+    """Dense integer key codes over the union of both sides: equal keys get
+    equal codes. Keys containing NaN never match anything (float NaN compares
+    unequal to itself, so the row-loop join this replaces never matched
+    them); null utf8 keys match each other (`None` is a singleton)."""
+    nl, nr = left.num_rows, right.num_rows
+    combined = np.zeros(nl + nr, dtype=np.int64)
+    nan_mask = np.zeros(nl + nr, dtype=bool)
+    for k in on:
+        cl, cr = left.column(k), right.column(k)
+        if cl.kind == "utf8" or cr.kind == "utf8":
+            arr = np.concatenate([_object_keys(cl), _object_keys(cr)])
+        else:
+            arr = np.concatenate([np.asarray(cl.to_numpy()),
+                                  np.asarray(cr.to_numpy())])
+            if np.issubdtype(arr.dtype, np.floating):
+                nan_mask |= np.isnan(arr)
+        _, sub = np.unique(arr, return_inverse=True)
+        combined = combined * (sub.max(initial=0) + 1) + sub
+    lc, rc = combined[:nl].copy(), combined[nl:].copy()
+    lc[nan_mask[:nl]] = -1      # NaN keys: distinct sentinels per side so
+    rc[nan_mask[nl:]] = -2      # they never pair up
+    return lc, rc
+
+
+def _join_indices(left: ColumnTable, right: ColumnTable, on: Sequence[str],
+                  how: str) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Vectorized build-and-probe: sort the right side's key codes once,
+    then binary-search every left code into it. Returns (li, ri, lmiss)
+    where (li, ri) are the match pairs ordered exactly like the row-loop
+    join they replace — left rows in order, each left row's matches in
+    right-row order — and lmiss are the unmatched left rows (left joins)."""
     if how not in ("inner", "left"):
         raise ValueError("how must be inner|left")
-    keys_l = [left.column(k).to_numpy() for k in on]
-    keys_r = [right.column(k).to_numpy() for k in on]
-    index: Dict[tuple, List[int]] = {}
-    for i in range(right.num_rows):
-        index.setdefault(tuple(k[i] for k in keys_r), []).append(i)
-    li, ri, lmiss = [], [], []
-    for i in range(left.num_rows):
-        matches = index.get(tuple(k[i] for k in keys_l))
-        if matches:
-            for j in matches:
-                li.append(i)
-                ri.append(j)
-        elif how == "left":
-            lmiss.append(i)
-    li_arr = np.asarray(li + lmiss, dtype=np.int64)
+    lc, rc = _join_codes(left, right, on)
+    order_r = np.argsort(rc, kind="stable")
+    rc_sorted = rc[order_r]
+    start = np.searchsorted(rc_sorted, lc, side="left")
+    counts = np.searchsorted(rc_sorted, lc, side="right") - start
+    li = np.repeat(np.arange(left.num_rows, dtype=np.int64), counts)
+    total = int(counts.sum())
+    # flatten the per-left-row [start, start+count) ranges into one gather
+    offsets = np.concatenate([[0], np.cumsum(counts)])
+    flat = (np.arange(total, dtype=np.int64)
+            - np.repeat(offsets[:-1], counts)
+            + np.repeat(start, counts))
+    ri = order_r[flat]
+    if how == "left":
+        lmiss = np.nonzero(counts == 0)[0].astype(np.int64)
+    else:
+        lmiss = np.array([], dtype=np.int64)
+    return li, ri, lmiss
+
+
+def _assemble_join(left: ColumnTable, right: ColumnTable, on: Sequence[str],
+                   li: np.ndarray, ri: np.ndarray, lmiss: np.ndarray,
+                   suffix: str) -> ColumnTable:
+    li_arr = np.concatenate([li, lmiss]).astype(np.int64)
     ri_arr = np.asarray(ri, dtype=np.int64)
     out = {n: left.column(n).take(li_arr) for n in left.column_names}
     n_miss = len(lmiss)
@@ -345,6 +433,208 @@ def hash_join(left: ColumnTable, right: ColumnTable, on: Sequence[str],
                 c = Column(c.kind, data, None, pack_validity(pad_valid))
         out[name] = c
     return ColumnTable(out)
+
+
+def hash_join(left: ColumnTable, right: ColumnTable, on: Sequence[str],
+              how: str = "inner", suffix: str = "_r") -> ColumnTable:
+    """Hash join on equal column names. Supports inner and left joins.
+    Output order matches the historical row-loop implementation byte for
+    byte: left rows in order, each left row's matches in right-row order,
+    left-join misses appended at the end (right columns null-padded)."""
+    li, ri, lmiss = _join_indices(left, right, on, how)
+    return _assemble_join(left, right, on, li, ri, lmiss, suffix)
+
+
+# ---------------------------------------------------------------------------
+# partition exchange (shuffle): hash/range partitioning + order-normalized
+# merges. The partitioner is a STABLE argsort on partition codes, so rows
+# sharing a partition keep their relative input order — which is what makes
+# sharded group_by sums bit-identical (same per-group add order) and lets
+# the join merge reconstruct the unsharded row order from a single hidden
+# order column.
+# ---------------------------------------------------------------------------
+
+
+# hidden column names threaded through join-exchange partitions (mirrors
+# repro.core.spec; duplicated literal so columnar stays core-free)
+HIDDEN_ORDER_COLUMN = "__xord__"
+HIDDEN_MISS_COLUMN = "__xmiss__"
+
+_SPLITMIX_A = np.uint64(0xBF58476D1CE4E5B9)
+_SPLITMIX_B = np.uint64(0x94D049BB133111EB)
+_GOLDEN = 0x9E3779B97F4A7C15
+
+
+def _mix64(h: np.ndarray) -> np.ndarray:
+    """splitmix64 finalizer over a uint64 array (wrapping arithmetic)."""
+    h = h ^ (h >> np.uint64(30))
+    h = h * _SPLITMIX_A
+    h = h ^ (h >> np.uint64(27))
+    h = h * _SPLITMIX_B
+    return h ^ (h >> np.uint64(31))
+
+
+def _hash_codes(table: ColumnTable, keys: Sequence[str],
+                salt: int = 0) -> np.ndarray:
+    """Content-based, process-stable uint64 hash per row over `keys`.
+    Equal key VALUES must hash equally everywhere — across shards, workers,
+    processes and reruns — or a key's rows land in different partitions and
+    the exchange silently loses matches. So: no PYTHONHASHSEED-dependent
+    hash(), float keys are canonicalized (-0.0 -> +0.0, one NaN bit
+    pattern), and utf8 hashes its bytes (crc32 per unique value, mapped
+    through np.unique codes so the Python loop is O(distinct), not O(rows))."""
+    import zlib
+
+    seed = (salt * _GOLDEN + _GOLDEN) & 0xFFFFFFFFFFFFFFFF
+    h = np.full(table.num_rows, seed, dtype=np.uint64)
+    for k in keys:
+        c = table.column(k)
+        if c.kind == "utf8":
+            uniq, codes = np.unique(_object_keys(c), return_inverse=True)
+            uh = np.empty(len(uniq), dtype=np.uint64)
+            for i, u in enumerate(uniq):
+                uh[i] = (zlib.crc32(u.encode("utf-8")) if isinstance(u, str)
+                         else 0x9E3779B9)    # null key: fixed sentinel
+            x = uh[codes]
+        else:
+            a = np.asarray(c.to_numpy())
+            if np.issubdtype(a.dtype, np.floating):
+                a = a.astype(np.float64, copy=True)
+                a[a == 0.0] = 0.0           # -0.0 == +0.0: same partition
+                a[np.isnan(a)] = np.nan     # canonical NaN bits
+                x = a.view(np.uint64)
+            elif a.dtype == np.bool_:
+                x = a.astype(np.uint64)
+            else:
+                x = a.astype(np.int64).view(np.uint64)
+        h = _mix64(h ^ (x * _SPLITMIX_A))
+    return h
+
+
+def _partition_by_codes(table: ColumnTable, codes: np.ndarray,
+                        num_partitions: int) -> List[ColumnTable]:
+    """Split by precomputed partition codes with ONE stable reorder: rows
+    within each partition keep their input order, and the parts are
+    zero-copy slices of a single reordered table."""
+    order = np.argsort(codes, kind="stable")
+    bounds = np.searchsorted(codes[order], np.arange(num_partitions + 1))
+    reordered = table.take(order)
+    return [reordered.slice(int(bounds[j]), int(bounds[j + 1] - bounds[j]))
+            for j in range(num_partitions)]
+
+
+def hash_partition(table: ColumnTable, keys: Sequence[str],
+                   num_partitions: int, salt: int = 0) -> List[ColumnTable]:
+    """Partition rows by key hash: every row with the same key lands in the
+    same partition index on every shard (content-based hash)."""
+    P = int(num_partitions)
+    if table.num_rows == 0:
+        return [table.slice(0, 0) for _ in range(P)]
+    codes = (_hash_codes(table, keys, salt) % np.uint64(P)).astype(np.int64)
+    return _partition_by_codes(table, codes, P)
+
+
+def sample_splits(tables: Sequence[ColumnTable], by: Sequence[str],
+                  num_partitions: int,
+                  max_samples_per_part: int = 4096) -> ColumnTable:
+    """Range-partition boundaries from a deterministic evenly-spaced sample
+    of the FIRST sort key across all shards. Returns a one-column table
+    (``split``, ascending, deduplicated) with at most P-1 rows; fewer
+    (skewed or tiny inputs) just leaves trailing partitions empty —
+    correctness never depends on split quality, only balance does."""
+    key = by[0]
+    samples: List[np.ndarray] = []
+    kind = None
+    for t in tables:
+        c = t.column(key)
+        kind = c.kind
+        v = (np.asarray(c.to_numpy(), dtype=object) if c.kind == "utf8"
+             else np.asarray(c.to_numpy()))
+        if len(v) > max_samples_per_part:
+            idx = np.linspace(0, len(v) - 1, max_samples_per_part)
+            v = v[idx.astype(np.int64)]
+        samples.append(v)
+    allv = np.concatenate(samples) if samples else np.array([])
+    if allv.size == 0:
+        return ColumnTable({"split": numeric_column(np.array([], np.float64))})
+    s = np.sort(allv, kind="stable")
+    pos = [len(s) * j // num_partitions for j in range(1, num_partitions)]
+    splits = np.unique(s[pos]) if pos else s[:0]
+    from repro.columnar.table import column_from_values
+
+    return ColumnTable({"split": column_from_values(list(splits))})
+
+
+def range_partition(table: ColumnTable, by: Sequence[str],
+                    splits: ColumnTable,
+                    descending: bool = False) -> List[ColumnTable]:
+    """Partition rows into contiguous ranges of the FIRST sort key at the
+    sampled split boundaries. One consistent searchsorted side means rows
+    with equal first keys always share a partition — so a per-partition
+    stable lexsort on the full key list, concatenated in partition order,
+    is byte-identical to the global stable sort. `num_partitions` is
+    len(splits)+1; descending reverses the partition order so partition 0
+    holds the largest keys."""
+    P = splits.num_rows + 1
+    if table.num_rows == 0:
+        return [table.slice(0, 0) for _ in range(P)]
+    c = table.column(by[0])
+    v = (np.asarray(c.to_numpy(), dtype=object) if c.kind == "utf8"
+         else np.asarray(c.to_numpy()))
+    sc = splits.column("split")
+    sv = (np.asarray(sc.to_numpy(), dtype=object) if c.kind == "utf8"
+          else np.asarray(sc.to_numpy()))
+    codes = np.searchsorted(sv, v, side="right").astype(np.int64)
+    if descending:
+        codes = (P - 1) - codes
+    return _partition_by_codes(table, codes, P)
+
+
+def join_partition(left: ColumnTable, right: ColumnTable, on: Sequence[str],
+                   how: str = "inner", suffix: str = "_r") -> ColumnTable:
+    """One shuffle partition of a distributed join. `left` carries the
+    hidden ``__xord__`` column its shuffle writers attached (the global
+    probe-row order key); the output threads it through — plus a
+    ``__xmiss__`` flag — so ``merge_partitions(mode="order")`` can restore
+    the exact unsharded join row order (matches by probe order, left-join
+    misses appended at the end)."""
+    ordv = left.column(HIDDEN_ORDER_COLUMN).data
+    lclean = left.project([n for n in left.column_names
+                           if n != HIDDEN_ORDER_COLUMN])
+    li, ri, lmiss = _join_indices(lclean, right, on, how)
+    out = _assemble_join(lclean, right, on, li, ri, lmiss, suffix)
+    li_arr = np.concatenate([li, lmiss]).astype(np.int64)
+    out = out.with_column(HIDDEN_ORDER_COLUMN,
+                          numeric_column(ordv[li_arr].astype(np.int64)))
+    miss = np.concatenate([np.zeros(len(li), np.int64),
+                           np.ones(len(lmiss), np.int64)])
+    return out.with_column(HIDDEN_MISS_COLUMN, numeric_column(miss))
+
+
+def merge_partitions(parts: Sequence[ColumnTable], mode: str,
+                     keys: Sequence[str] = ()) -> ColumnTable:
+    """Reassemble partition outputs into the byte-identical unsharded
+    result. "concat": partitions are contiguous output ranges (range
+    partitioning / sort). "keys": stable lexsort on `keys` — partitions
+    hold disjoint key sets, each internally in np.unique order, so the
+    sort restores group_by's global key order. "order": stable sort on the
+    hidden (miss, order) columns restores join row order, then drops them."""
+    t = concat_tables(list(parts))
+    if mode == "concat":
+        return t
+    if mode == "keys":
+        return t.take(_sort_indices(t, list(keys)))
+    if mode == "order":
+        ordv = t.column(HIDDEN_ORDER_COLUMN).data
+        if HIDDEN_MISS_COLUMN in t:
+            idx = np.lexsort((ordv, t.column(HIDDEN_MISS_COLUMN).data))
+        else:
+            idx = np.argsort(ordv, kind="stable")
+        t = t.take(idx)
+        return t.project([n for n in t.column_names
+                          if n not in (HIDDEN_ORDER_COLUMN,
+                                       HIDDEN_MISS_COLUMN)])
+    raise ValueError(f"unknown merge mode {mode!r}")
 
 
 # ---------------------------------------------------------------------------

@@ -2,12 +2,14 @@
 # and data-aware runtime (logical/physical planning, zero-copy channels,
 # columnar differential caching, ephemeral package-level environments,
 # fault-tolerant scheduling).
-from repro.core.spec import (CombineContract, EnvSpec, FunctionSpec, ModelRef,
-                             ResourceHint)
+from repro.core.spec import (CombineContract, EnvSpec, ExchangeContract,
+                             FunctionSpec, ModelRef, ResourceHint)
 from repro.core.logical import LogicalPlan, PlanError, build_logical_plan
 from repro.core.physical import (CombineTask, FunctionTask, GatherTask,
-                                 PhysicalPlan, PlacementHint, Planner,
-                                 ScanTask, WorkerProfile)
+                                 PartitionTask, PhysicalPlan, PlacementHint,
+                                 Planner, ScanTask, ShuffleMergeTask,
+                                 ShuffleSampleTask, ShuffleWriteTask,
+                                 WorkerProfile)
 from repro.core.contract import ClusterLike, TransportLike, WorkerLike
 from repro.core.runtime import (Client, Event, LocalCluster, TaskError,
                                 Worker, WorkerFailure, execute_run,
@@ -18,10 +20,13 @@ from repro.core.remote import RemoteCluster, RemoteWorker, WorkerDaemon
 from repro.core.scheduler import Scheduler
 
 __all__ = [
-    "CombineContract", "EnvSpec", "FunctionSpec", "ModelRef", "ResourceHint",
+    "CombineContract", "EnvSpec", "ExchangeContract", "FunctionSpec",
+    "ModelRef", "ResourceHint",
     "LogicalPlan", "PlanError", "build_logical_plan",
-    "CombineTask", "FunctionTask", "GatherTask", "PhysicalPlan",
-    "PlacementHint", "Planner", "ScanTask", "WorkerProfile",
+    "CombineTask", "FunctionTask", "GatherTask", "PartitionTask",
+    "PhysicalPlan", "PlacementHint", "Planner", "ScanTask",
+    "ShuffleMergeTask", "ShuffleSampleTask", "ShuffleWriteTask",
+    "WorkerProfile",
     "ClusterLike", "TransportLike", "WorkerLike",
     "Client", "Event", "LocalCluster", "TaskError", "Worker", "WorkerFailure",
     "execute_run", "submit_run",

@@ -38,6 +38,13 @@ from repro.columnar.objectstore import ObjectStore
 from repro.columnar.table import Column, ColumnTable
 
 
+def _fs_safe(key: str) -> str:
+    """Spill filenames derive from table keys; shuffle part keys contain
+    '/' ("shuffle:joined/facts#0/p2"), which os.path.join would read as
+    directories that don't exist."""
+    return key.replace("/", "%2F")
+
+
 @dataclasses.dataclass(frozen=True)
 class TableHandle:
     key: str
@@ -58,6 +65,20 @@ def partitioned_handle(key: str,
     if not parts:
         raise ValueError("partitioned handle needs at least one part")
     return TableHandle(key, "partitioned",
+                       sum(p.nbytes for p in parts),
+                       sum(p.num_rows for p in parts), "", parts)
+
+
+def shuffle_handle(key: str, parts: Sequence[TableHandle]) -> TableHandle:
+    """One shuffle writer's output: P key-addressed partition files. Unlike
+    ``partitioned`` (parts = shards of one logical table, consumed together),
+    a shuffle handle's parts are addressed INDIVIDUALLY — a per-partition
+    consumer fetches ``parts[j]`` from each of many writers and never touches
+    the other partitions' bytes."""
+    parts = tuple(parts)
+    if not parts:
+        raise ValueError("shuffle handle needs at least one partition")
+    return TableHandle(key, "shuffle",
                        sum(p.nbytes for p in parts),
                        sum(p.num_rows for p in parts), "", parts)
 
@@ -300,7 +321,7 @@ class DataTransport:
             return TableHandle(key, "zerocopy", table.nbytes, table.num_rows,
                                flight_loc)
         if channel == "mmap":
-            path = os.path.join(self.spill_dir, f"{key}.rcf")
+            path = os.path.join(self.spill_dir, f"{_fs_safe(key)}.rcf")
             colfile.write_table(path, table)
             self.flight.register(key, table)
             return TableHandle(key, "mmap", table.nbytes, table.num_rows, path)
@@ -311,9 +332,10 @@ class DataTransport:
         if channel == "objectstore":
             if self.object_store is None:
                 raise RuntimeError("objectstore channel requires an ObjectStore")
-            tmp = os.path.join(self.spill_dir, f"{key}-{uuid.uuid4().hex}.rcf")
+            tmp = os.path.join(self.spill_dir,
+                               f"{_fs_safe(key)}-{uuid.uuid4().hex}.rcf")
             colfile.write_table(tmp, table)
-            okey = f"intermediates/{key}.rcf"
+            okey = f"intermediates/{_fs_safe(key)}.rcf"
             self.object_store.put_file(okey, tmp)
             os.remove(tmp)
             return TableHandle(key, "objectstore", table.nbytes,
@@ -328,7 +350,7 @@ class DataTransport:
         unavailable local paths degrade to flight. `gets` counts logical
         fetches: a partitioned read is one get regardless of part count."""
         self._bump("gets")
-        if handle.channel == "partitioned":
+        if handle.channel in ("partitioned", "shuffle"):
             return self._get_partitioned(handle, columns)
         return self._get_one(handle, columns, via)
 
@@ -429,7 +451,44 @@ class DataTransport:
         self._bump("partitioned_gets")
         return compute.concat_tables(self.get_parts(handle, columns))
 
+    # -- shuffle -----------------------------------------------------------------
+    def put_shuffle(self, prefix: str, parts: Sequence[ColumnTable],
+                    channel: str = "zerocopy") -> TableHandle:
+        """Publish a shuffle writer's P partitions as individually addressable
+        tables (``{prefix}/p{j}``). Consumers fetch exactly one partition per
+        writer via :meth:`get_partition`; the other partitions' bytes never
+        move off this worker."""
+        handles = [self.put(f"{prefix}/p{j}", part, channel)
+                   for j, part in enumerate(parts)]
+        return shuffle_handle(prefix, handles)
+
+    def get_partition(self, handles: Sequence[TableHandle],
+                      partition_index: int,
+                      columns: Optional[Sequence[str]] = None
+                      ) -> List[ColumnTable]:
+        """Resolve partition ``j`` across MANY shuffle writers, in writer
+        order: one slice from each producer, local zero-copy first, remote
+        parts streamed concurrently. A dead producer surfaces as
+        ``ShardUnavailable(part key)`` so the engine can re-execute exactly
+        the writer that held the lost partition."""
+        selected: List[TableHandle] = []
+        for h in handles:
+            if h.channel != "shuffle":
+                raise ValueError(f"get_partition needs shuffle handles, "
+                                 f"got {h.channel!r} for {h.key}")
+            if partition_index >= len(h.parts):
+                raise ShardUnavailable(f"{h.key}/p{partition_index}")
+            selected.append(h.parts[partition_index])
+        synthetic = TableHandle(f"partition:{partition_index}", "partitioned",
+                                sum(p.nbytes for p in selected),
+                                sum(p.num_rows for p in selected), "",
+                                tuple(selected))
+        self._bump("partition_gets")
+        return self.get_parts(synthetic, columns)
+
     def evict(self, handle: TableHandle) -> None:
+        for part in handle.parts:   # shuffle/partitioned: evict every slice
+            self.evict(part)
         with self._lock:
             self._shm.pop(handle.key, None)
         self.flight.unregister(handle.key)

@@ -1,0 +1,30 @@
+"""Shared engine tuning constants.
+
+The engine (`repro.core.engine`) and the synchronous façade
+(`repro.core.scheduler`) both expose retry/speculation knobs; before this
+module existed each hardcoded its own copies and they could drift apart —
+a run submitted through `Scheduler` and one submitted through
+`ExecutionEngine.submit` would retry/speculate differently. Every default
+lives here exactly once.
+"""
+
+# fault tolerance: attempts beyond the first before the run is failed
+MAX_RETRIES = 2
+
+# straggler speculation: a task is twinned once it runs longer than
+# SPECULATION_FACTOR x the median completed-task duration, but never
+# earlier than SPECULATION_MIN_S
+SPECULATION_FACTOR = 4.0
+SPECULATION_MIN_S = 0.5
+
+# partition exchange, skew-aware repartitioning: a shuffle partition whose
+# written bytes exceed SKEW_FACTOR x the median partition is re-split into
+# row-range sub-partitions before its consumer dispatches (None disables).
+# Partitions under SKEW_MIN_BYTES are never split — the re-split overhead
+# would dwarf any straggler it prevents.
+SKEW_FACTOR = 2.0
+SKEW_MIN_BYTES = 1 << 20
+
+# outputs above this spill to a disk-backed mmap channel instead of the
+# in-memory table store (per-worker working-set bound)
+MMAP_SPILL_BYTES = int(2e9)

@@ -36,10 +36,12 @@ import time
 from concurrent.futures import ThreadPoolExecutor
 from typing import Dict, List, Optional, Sequence, Set, Tuple, TYPE_CHECKING
 
+from repro.core import defaults
 from repro.core.channels import TableHandle
 from repro.core.journal import RunJournal
-from repro.core.physical import (FunctionTask, PhysicalPlan, ScanTask,
-                                 WorkerProfile)
+from repro.core.physical import (FunctionTask, InputEdge, PartitionTask,
+                                 PhysicalPlan, PlacementHint, ScanTask,
+                                 ShuffleWriteTask, WorkerProfile, _key_hash)
 from repro.core.runtime import (Client, Event, HandleUnavailable, TaskError,
                                 Worker, WorkerFailure)
 
@@ -115,13 +117,30 @@ class RunResult:
              if t.rsplit("#", 1)[0] in (f"func:{name}", f"scan:{name}")
              and "#" in t),
             key=lambda t: int(t.rsplit("#", 1)[1]))
-        if not shard_tids:
-            if tid in self.handles:
-                return self._read_handle(tid, cluster)
-            raise KeyError(f"no output named {name!r} in run {self.run_id}")
-        from repro.columnar import compute
-        return compute.concat_tables(
-            [self._read_handle(t, cluster) for t in shard_tids])
+        if shard_tids:
+            from repro.columnar import compute
+            return compute.concat_tables(
+                [self._read_handle(t, cluster) for t in shard_tids])
+        # exchange partitions with no merge point (intermediates consumed
+        # per-partition downstream): reassemble with the contract's merge
+
+        def _pos(t: str) -> Tuple[int, int]:
+            tail = t.split("@", 1)[1]
+            j, _, s = tail.partition("~")
+            return int(j), int(s or 0)
+
+        part_tids = sorted((t for t in self.handles
+                            if t.startswith(f"func:{name}@")), key=_pos)
+        if part_tids:
+            from repro.columnar import compute
+            t0 = self.plan.tasks.get(part_tids[0])
+            return compute.merge_partitions(
+                [self._read_handle(t, cluster) for t in part_tids],
+                getattr(t0, "merge", "concat"),
+                keys=list(getattr(t0, "merge_keys", ()) or ()))
+        if tid in self.handles:
+            return self._read_handle(tid, cluster)
+        raise KeyError(f"no output named {name!r} in run {self.run_id}")
 
     def _read_handle(self, tid: str, cluster: "ClusterLike"):
         """Read one task's buffers, degrading across the fleet: the recorded
@@ -220,10 +239,18 @@ class ExecutionEngine:
     via the contract.ClusterLike/WorkerLike surface."""
 
     def __init__(self, cluster: "ClusterLike", worker_queue_depth: int = 4,
-                 mmap_spill_bytes: int = int(2e9)):
+                 mmap_spill_bytes: int = defaults.MMAP_SPILL_BYTES,
+                 skew_factor: Optional[float] = defaults.SKEW_FACTOR,
+                 skew_min_bytes: int = defaults.SKEW_MIN_BYTES):
         self.cluster = cluster
         self.worker_queue_depth = worker_queue_depth
         self.mmap_spill_bytes = mmap_spill_bytes
+        # skew-aware repartitioning: a shuffle partition whose split-side
+        # bytes exceed skew_factor x the median partition is re-split into
+        # row-range sub-partitions before its consumer dispatches
+        # (None disables — the static-partitioning baseline)
+        self.skew_factor = skew_factor
+        self.skew_min_bytes = skew_min_bytes
         self._lock = threading.RLock()
         self._runs: List[_RunState] = []
         self._load: Dict[str, int] = {}          # worker_id -> inflight tasks
@@ -267,8 +294,11 @@ class ExecutionEngine:
                         if wid == worker_id and tid in state.done]
                 for tid in lost:
                     handle = state.handles.get(tid)
-                    if handle is not None and handle.channel in ("mmap",
-                                                                 "objectstore"):
+                    if handle is not None and (
+                            handle.channel in ("mmap", "objectstore")
+                            or (handle.channel == "shuffle" and handle.parts
+                                and all(p.channel in ("mmap", "objectstore")
+                                        for p in handle.parts))):
                         continue
                     state.client.emit(Event("worker_lost", tid, worker_id,
                                             {"invalidated": True}))
@@ -279,8 +309,10 @@ class ExecutionEngine:
     def submit(self, plan: PhysicalPlan, project=None,
                client: Optional[Client] = None,
                journal_path: Optional[str] = None,
-               max_retries: int = 2, speculation_factor: float = 4.0,
-               speculation_min_s: float = 0.5, priority: int = 0) -> RunHandle:
+               max_retries: int = defaults.MAX_RETRIES,
+               speculation_factor: float = defaults.SPECULATION_FACTOR,
+               speculation_min_s: float = defaults.SPECULATION_MIN_S,
+               priority: int = 0) -> RunHandle:
         """Register a run and dispatch its source tasks. Returns immediately;
         the run progresses on completion events. `priority` orders the shared
         ready heap: when worker slots are contended, a higher-priority run's
@@ -475,11 +507,12 @@ class ExecutionEngine:
         """Choose each input edge's transfer channel from *actual* producer
         placement (the consumer's placement is `worker`, decided just now)."""
         channels: Dict[str, str] = {}
-        if not isinstance(task, FunctionTask):
-            # scans have no inputs; gathers and combines self-resolve each
-            # part through their partitioned handle (local zero-copy, else
-            # the part's own channel), so binding edges here would be dead
-            # work on the lock-held dispatch path
+        if not isinstance(task, (FunctionTask, ShuffleWriteTask)):
+            # scans have no inputs; gathers, combines, samples and partition
+            # tasks self-resolve each part through partitioned/shuffle
+            # handles (local zero-copy, else the part's own channel), so
+            # binding edges here would be dead work on the lock-held
+            # dispatch path
             return channels
         force = state.plan.force_channel
         for edge in task.inputs:
@@ -577,10 +610,105 @@ class ExecutionEngine:
                     continue    # already consumed an earlier output of tid
                 state.indegree[child] -= 1
                 if state.indegree[child] == 0:
-                    self._enqueue(state, child)
+                    # skew gate: all of a partition task's writers are done
+                    # and their byte histograms are known — re-split a hot
+                    # partition into row-range sub-tasks before it dispatches
+                    for rt in self._maybe_split_partition(state, child):
+                        self._enqueue(state, rt)
             self._dispatch_ready()
             if state.remaining() == 0:
                 self._finalize(state)
+
+    # -- skew-aware dynamic repartitioning ----------------------------------
+    def _maybe_split_partition(self, state: _RunState,
+                               tid: str) -> List[str]:
+        """Called (lock held) when a PartitionTask's indegree hits zero: its
+        shuffle writers are complete, so the per-partition byte histogram is
+        known from their handles. If this partition's split-side bytes
+        exceed skew_factor x the median partition, replace the task with S
+        contiguous row-range sub-tasks of the split input (the other inputs
+        — a join's build partition — are consumed whole by every sub).
+        Returns the task ids to enqueue (just [tid] when no split)."""
+        task = state.plan.tasks.get(tid)
+        if (self.skew_factor is None
+                or not isinstance(task, PartitionTask)
+                or task.num_subs > 1 or not task.split_param):
+            return [tid]
+        j = task.partition_index
+        split_prefix = f"{task.split_param}#"
+        sizes: List[int] = []
+        for e in task.inputs:
+            if not e.param.startswith(split_prefix):
+                continue
+            h = state.handles.get(e.parent_task)
+            if h is None or h.channel != "shuffle" or j >= len(h.parts):
+                return [tid]    # writer mid-recovery: dispatch unsplit
+            if not sizes:
+                sizes = [0] * len(h.parts)
+            for jj, p in enumerate(h.parts):
+                sizes[jj] += p.nbytes
+        if not sizes:
+            return [tid]
+        my_bytes = sizes[j]
+        median = sorted(sizes)[len(sizes) // 2]
+        if (my_bytes < self.skew_min_bytes
+                or my_bytes <= self.skew_factor * max(median, 1)):
+            return [tid]
+        n_subs = max(2, min(8, round(my_bytes / max(median, 1))))
+        plan = state.plan
+        subs: List[PartitionTask] = []
+        for s in range(n_subs):
+            stid = f"{tid}~{s}"
+            subs.append(dataclasses.replace(
+                task, task_id=stid,
+                # distinct content identity per sub-slice: the result cache
+                # must never serve sub 0's rows for sub 1, nor a whole
+                # partition for a slice of it
+                cache_key=_key_hash(task.cache_key, f"sub-{s}-{n_subs}"),
+                inputs=list(task.inputs),   # edges are read-only, share them
+                sub_index=s, num_subs=n_subs,
+                estimated_bytes=max(task.estimated_bytes // n_subs, 1),
+                hints=PlacementHint(
+                    memory_bytes=max(task.hints.memory_bytes // n_subs, 1),
+                    colocate_group=f"g:{stid}",
+                    shard_index=task.hints.shard_index,
+                    num_shards=task.hints.num_shards)))
+        # splice the subs into the per-run plan where the original stood and
+        # rewire each consumer edge (the merge) into one edge per sub
+        idx = plan.order.index(tid)
+        plan.order[idx:idx + 1] = [t.task_id for t in subs]
+        plan.tasks.pop(tid)
+        for t in subs:
+            plan.tasks[t.task_id] = t
+        for child, edge in list(plan.consumer_edges.get(tid, ())):
+            ctask = plan.tasks[child]
+            epos = ctask.inputs.index(edge)
+            ctask.inputs[epos:epos + 1] = [
+                InputEdge(param=f"{edge.param}~{s}",
+                          parent_task=subs[s].task_id, ref=edge.ref)
+                for s in range(n_subs)]
+        plan._build_index()
+        # run-state bookkeeping: the original never ran; subs are ready now
+        # (their parents are exactly the original's, all done)
+        state.queued.discard(tid)
+        state.attempts.pop(tid, None)
+        state.indegree.pop(tid, None)
+        for t in subs:
+            state.attempts[t.task_id] = 0
+            state.indegree[t.task_id] = len(
+                [p for p in plan.parents[t.task_id] if p not in state.done])
+        for child, _ in plan.consumer_edges.get(subs[0].task_id, ()):
+            if child not in state.done:
+                state.indegree[child] = len(
+                    [p for p in plan.parents[child] if p not in state.done])
+        # remote daemons key shipped plans by plan_id; the mutation must
+        # force a re-ship or they'd execute against the pre-split topology
+        plan.plan_id = _key_hash(plan.plan_id, tid, str(n_subs))
+        state.client.emit(Event("skew_split", tid, "",
+                                {"partition": j, "subs": n_subs,
+                                 "bytes": my_bytes, "median_bytes": median}))
+        return [t.task_id for t in subs
+                if state.indegree[t.task_id] == 0]
 
     def _on_failed(self, state: _RunState, tid: str, worker: Worker,
                    err: Exception) -> None:
@@ -641,6 +769,14 @@ class ExecutionEngine:
                     state.indegree[child] = len(
                         [p for p in state.plan.parents[child]
                          if p not in state.done])
+        # recompute OWN indegree before the requeue check: when a worker
+        # loss invalidates a producer and its consumer together, the
+        # consumer's counter still reads 0 from the producer's original
+        # completion. Enqueueing on that stale 0 lets the producer's re-run
+        # decrement it to -1, and the ready heap's stale-entry guard
+        # (indegree != 0) would then drop the task forever — a hung run
+        state.indegree[tid] = len([p for p in state.plan.parents[tid]
+                                   if p not in state.done])
         if tid not in state.inflight and state.indegree[tid] == 0:
             self._enqueue(state, tid)
 

@@ -142,6 +142,107 @@ class CombineTask:
 
 
 @dataclasses.dataclass
+class ShuffleWriteTask:
+    """Hash/range-partition one producer shard of an exchanged input into P
+    key-addressed part files (columnar.compute.hash_partition /
+    range_partition). The output is a partition-addressed shuffle handle:
+    per-partition consumers fetch exactly parts[j] from each writer, so raw
+    rows cross workers once, and only to the partition that reads them."""
+    task_id: str                # shuffle:{consumer}/{param}#{k}
+    name: str                   # the consumer model this writer feeds
+    param: str                  # which consumer input this writer partitions
+    cache_key: str
+    inputs: List[InputEdge]     # producer edge (+ __splits__ in range mode)
+    num_partitions: int
+    keys: Tuple[str, ...]
+    estimated_bytes: int
+    mode: str = "hash"          # "hash" | "range"
+    descending: bool = False
+    order_column: bool = False  # append __xord__ before partitioning
+    contract_id: str = ""       # daemon stale-contract check
+    hints: PlacementHint = dataclasses.field(default_factory=PlacementHint)
+    kind: str = "shuffle_write"
+
+
+@dataclasses.dataclass
+class ShuffleSampleTask:
+    """Range-mode split selection: sample the first sort key across every
+    producer shard and pick P-1 splits (columnar.compute.sample_splits).
+    Every shuffle writer of the exchange consumes the same splits table, so
+    all writers agree on partition boundaries."""
+    task_id: str                # shuffle:{consumer}/__splits__
+    name: str
+    cache_key: str
+    inputs: List[InputEdge]     # one per producer shard, shard order
+    keys: Tuple[str, ...]
+    num_partitions: int
+    estimated_bytes: int
+    contract_id: str = ""
+    hints: PlacementHint = dataclasses.field(default_factory=PlacementHint)
+    kind: str = "shuffle_sample"
+
+
+@dataclasses.dataclass
+class PartitionTask:
+    """Run the exchange contract's per-partition operator over partition j:
+    fetch parts[j] from every writer of each exchanged param (writer order ==
+    shard order, so concatenation preserves original relative row order),
+    broadcast the rest whole, and invoke contract.partition. Skew-aware
+    repartitioning re-splits one of these into `num_subs` contiguous
+    row-range sub-tasks of the `split_param` input (task ids `...~{s}`)."""
+    task_id: str                # func:{name}@{j}  (sub-splits: @{j}~{s})
+    name: str
+    env_id: str
+    code_hash: str
+    cache_key: str
+    inputs: List[InputEdge]     # writer edges param="{p}#{k}" + broadcasts
+    partition_index: int
+    param_shards: Dict[str, int]    # exchanged param -> writer count
+    estimated_bytes: int
+    memory_gb: float
+    timeout_s: float
+    split_param: str = ""       # input eligible for row-range sub-splits
+    sub_index: int = 0
+    num_subs: int = 1
+    # exchanged param -> upstream merge keys to stable-sort the gathered
+    # slices by before invoking the operator. Set when chaining onto a
+    # "keys"-merged exchange: its partitions arrive partition-major, and the
+    # sort restores the exact unsharded row order (upstream group keys are
+    # unique per row), keeping float accumulations byte-identical
+    param_sort: Dict[str, Tuple[str, ...]] = dataclasses.field(
+        default_factory=dict)
+    merge: str = "concat"       # how partitions reassemble (RunResult.read)
+    merge_keys: Tuple[str, ...] = ()
+    materialize: bool = False   # partitions never materialize; merge does
+    contract_id: str = ""
+    hints: PlacementHint = dataclasses.field(default_factory=PlacementHint)
+    kind: str = "partition"
+
+
+@dataclasses.dataclass
+class ShuffleMergeTask:
+    """Order-normalizing merge point for an exchange: reassemble partition
+    outputs (columnar.compute.merge_partitions) byte-identically to the
+    unsharded run — "concat" for range partitions, a stable key sort for
+    group_by, the hidden __xord__/__xmiss__ sort for joins. Like a gather it
+    executes under the ORIGINAL func task id, so downstream edges and
+    RunResult.read address it unchanged."""
+    task_id: str
+    name: str
+    code_hash: str
+    cache_key: str              # layout-independent identity
+    inputs: List[InputEdge]     # partition edges, partition (+sub) order
+    merge: str
+    keys: Tuple[str, ...]
+    materialize: bool
+    estimated_bytes: int
+    timeout_s: float = 600.0
+    contract_id: str = ""
+    hints: PlacementHint = dataclasses.field(default_factory=PlacementHint)
+    kind: str = "shuffle_merge"
+
+
+@dataclasses.dataclass
 class PhysicalPlan:
     plan_id: str
     run_id: str
@@ -200,6 +301,21 @@ class PhysicalPlan:
             elif isinstance(t, CombineTask):
                 lines.append(f"  COMBINE {t.name} parts={len(t.inputs)} "
                              f"cache={t.cache_key[:8]} [{place}]")
+            elif isinstance(t, ShuffleWriteTask):
+                lines.append(f"  SHUFFLE-WRITE {t.name}/{t.param} "
+                             f"P={t.num_partitions} mode={t.mode} "
+                             f"keys={','.join(t.keys)} [{place}]")
+            elif isinstance(t, ShuffleSampleTask):
+                lines.append(f"  SHUFFLE-SAMPLE {t.name} "
+                             f"P={t.num_partitions} [{place}]")
+            elif isinstance(t, PartitionTask):
+                sub = (f" sub={t.sub_index}/{t.num_subs}"
+                       if t.num_subs > 1 else "")
+                lines.append(f"  PARTITION {t.name}@{t.partition_index}{sub} "
+                             f"cache={t.cache_key[:8]} [{place}]")
+            elif isinstance(t, ShuffleMergeTask):
+                lines.append(f"  SHUFFLE-MERGE {t.name} merge={t.merge} "
+                             f"parts={len(t.inputs)} [{place}]")
             else:
                 edges = ", ".join(e.ref.name for e in t.inputs)
                 mat = " MATERIALIZE" if t.materialize else ""
@@ -264,6 +380,43 @@ class Planner:
             return None
         return param, ref
 
+    def _classify_exchange(self, spec, shard_map: Dict[str, List[str]],
+                           exchange_meta: Dict[str, Dict]
+                           ) -> Optional[List[str]]:
+        """The exchange rewrite-rule guard: returns the ordered list of
+        exchanged params when `spec` declares an ExchangeContract and at
+        least one exchanged input is sharded (the rewrite only pays when it
+        saves a gather). Anything malformed — a shard_param the signature
+        doesn't have, a multi-input range exchange, a split/order param
+        outside the exchanged set — falls back to the plain path."""
+        contract = getattr(spec, "exchange", None)
+        if contract is None:
+            return None
+        params = {p: r for p, r in spec.inputs}
+        exchanged = (list(contract.shard_params) if contract.shard_params
+                     else [p for p, _ in spec.inputs])
+        if not exchanged or any(p not in params for p in exchanged):
+            return None
+        if contract.mode == "range" and len(exchanged) != 1:
+            return None
+        if contract.split_param and contract.split_param not in exchanged:
+            return None
+        if contract.order_param and contract.order_param not in exchanged:
+            return None
+        if not any(params[p].name in shard_map for p in exchanged):
+            return None
+        for p in exchanged:
+            meta = exchange_meta.get(params[p].name)
+            if meta is None or meta["merge"] != "keys":
+                continue
+            # chaining onto permuted "keys" partitions is only byte-exact
+            # when the upstream group keys survive the consumer's projection
+            # (the partition task re-sorts by them to restore row order)
+            cols = params[p].columns
+            if cols is not None and not set(meta["keys"]) <= set(cols):
+                return None
+        return exchanged
+
     def _column_union(self, consumers: List[Tuple[str, ModelRef]],
                       schema: Optional[Dict[str, str]] = None
                       ) -> Optional[Tuple[str, ...]]:
@@ -304,6 +457,12 @@ class Planner:
         # it covers — a warm shared cluster must never serve a cached shard
         # computed over a different chunk layout
         shard_keys: Dict[str, List[str]] = {}
+        # names whose shard_map entries are exchange PARTITIONS, with the
+        # merge metadata a lazily-synthesized merge point needs. "keys"
+        # partitions are a permutation of the unsharded row order, so they
+        # may ride into order-insensitive consumers (combinables, further
+        # exchanges) but never into row-order-preserving ones (rowwise)
+        exchange_meta: Dict[str, Dict] = {}
 
         def consumer_union(name: str) -> Optional[Tuple[str, ...]]:
             """Column union of `name`'s logical consumers; None when any
@@ -319,10 +478,27 @@ class Planner:
         def ensure_gather(name: str) -> None:
             """A consumer genuinely needs the whole table: synthesize the
             merge task under the ORIGINAL task id, so downstream edges and
-            RunResult.read address it unchanged."""
+            RunResult.read address it unchanged. Exchange partitions whose
+            merge is order-normalizing ("keys") get a ShuffleMergeTask; plain
+            shards and "concat" partitions (contiguous output ranges) get the
+            raw-row GatherTask."""
             shard_tids = shard_map[name]
-            tid = shard_tids[0].rsplit("#", 1)[0]
+            tid = shard_tids[0].split("#")[0].split("@")[0]
             if tid in tasks:
+                return
+            edges = [InputEdge(param=f"part{k}", parent_task=stid,
+                               ref=ModelRef.create(name))
+                     for k, stid in enumerate(shard_tids)]
+            meta = exchange_meta.get(name)
+            if meta is not None and meta["merge"] != "concat":
+                tasks[tid] = ShuffleMergeTask(
+                    task_id=tid, name=name, code_hash=meta["code_hash"],
+                    cache_key=meta["cache_key"], inputs=edges,
+                    merge=meta["merge"], keys=meta["keys"],
+                    materialize=False, estimated_bytes=est_bytes[name],
+                    timeout_s=meta["timeout_s"],
+                    contract_id=meta["contract_id"])
+                order.append(tid)
                 return
             first = tasks[shard_tids[0]]
             # scans already carry the validated column union; function-level
@@ -330,9 +506,6 @@ class Planner:
             # so only the bytes someone reads cross workers
             cols = (first.columns if isinstance(first, ScanTask)
                     else consumer_union(name))
-            edges = [InputEdge(param=f"part{k}", parent_task=stid,
-                               ref=ModelRef.create(name))
-                     for k, stid in enumerate(shard_tids)]
             tasks[tid] = GatherTask(task_id=tid, name=name, inputs=edges,
                                     columns=cols,
                                     estimated_bytes=est_bytes[name])
@@ -406,7 +579,8 @@ class Planner:
                 # keeps the key layout-independent (sharded and unsharded
                 # runs still share results) while invalidating the combine
                 # and everything downstream on contract edits.
-                contract = getattr(spec, "combinable", None)
+                contract = (getattr(spec, "combinable", None)
+                            or getattr(spec, "exchange", None))
                 cache_key = _key_hash("func", spec.code_hash, spec.env.env_id,
                                       *edge_ids,
                                       *((contract.contract_id,)
@@ -418,14 +592,183 @@ class Planner:
                 # per-shard partial tasks + a CombineTask at the merge point:
                 # the fleet aggregates in parallel and only per-group states
                 # cross workers (map-side combine)
-                combine_input = self._classify_combinable(spec, shard_map)
+                exchange_params = self._classify_exchange(spec, shard_map,
+                                                          exchange_meta)
+                combine_input = (None if exchange_params is not None
+                                 else self._classify_combinable(spec, shard_map))
                 # row-wise functions ride their parent's shards: one task per
                 # shard, no gather in between (f(concat(p)) == concat(f(p)))
+                # — but never permuted exchange partitions ("keys" merge):
+                # concat(f(partitions)) would come back in partition order,
+                # not the unsharded row order
                 shardable = (getattr(spec, "rowwise", False)
                              and not spec.materialize
                              and len(spec.inputs) == 1
-                             and spec.inputs[0][1].name in shard_map)
-                if combine_input is not None:
+                             and spec.inputs[0][1].name in shard_map
+                             and exchange_meta.get(
+                                 spec.inputs[0][1].name,
+                                 {"merge": "concat"})["merge"] == "concat")
+                if exchange_params is not None:
+                    xc = spec.exchange
+                    params = dict(spec.inputs)
+
+                    def producers_of(r: ModelRef) -> Tuple[List[str], List[str]]:
+                        """(task ids, identities) of `r`'s producers: its
+                        shard/partition tasks when sharded, the single plain
+                        task otherwise."""
+                        if r.name in shard_map:
+                            return shard_map[r.name], shard_keys[r.name]
+                        ptid = (f"func:{r.name}" if f"func:{r.name}" in tasks
+                                else f"scan:{r.name}")
+                        return [ptid], [cache_keys[r.name]]
+
+                    # partition count: fleet-width parallelism, matched to
+                    # the widest exchanged producer
+                    P = max(2, max(len(shard_map.get(params[p].name, ()))
+                                   for p in exchange_params))
+                    # non-exchanged inputs broadcast whole to every partition
+                    bcast: List[Tuple[str, ModelRef, str]] = []
+                    for p, r in spec.inputs:
+                        if p in exchange_params:
+                            continue
+                        if r.name in shard_map:
+                            ensure_gather(r.name)
+                        btid = (f"func:{r.name}" if f"func:{r.name}" in tasks
+                                else f"scan:{r.name}")
+                        bcast.append((p, r, btid))
+                    # range mode: one sample task over every producer shard
+                    # picks the P-1 splits all writers share
+                    sample_tid = ""
+                    if xc.mode == "range":
+                        r0 = params[exchange_params[0]]
+                        ptids, pkeys = producers_of(r0)
+                        sample_tid = f"shuffle:{name}/__splits__"
+                        tasks[sample_tid] = ShuffleSampleTask(
+                            task_id=sample_tid, name=name,
+                            cache_key=_key_hash(cache_key, xc.contract_id,
+                                                f"sample-{P}", *pkeys),
+                            inputs=[InputEdge(param=f"shard{k}",
+                                              parent_task=pt, ref=r0)
+                                    for k, pt in enumerate(ptids)],
+                            keys=xc.keys, num_partitions=P,
+                            estimated_bytes=max(
+                                est_bytes[r0.name] // 10, 1),
+                            contract_id=xc.contract_id)
+                        order.append(sample_tid)
+                    # one writer per producer shard of each exchanged input;
+                    # the writer colocates with its shard (hints inherit the
+                    # only parent's group), so partitioning happens where the
+                    # rows already live
+                    writer_tids: Dict[str, List[str]] = {}
+                    writer_keys: Dict[str, List[str]] = {}
+                    for p in exchange_params:
+                        r = params[p]
+                        ptids, pkeys = producers_of(r)
+                        wt: List[str] = []
+                        wk: List[str] = []
+                        for k, ptid in enumerate(ptids):
+                            wtid = f"shuffle:{name}/{p}#{k}"
+                            wkey = _key_hash(cache_key, xc.contract_id,
+                                             f"write-{p}-{k}-{len(ptids)}-{P}",
+                                             pkeys[k])
+                            edges = [InputEdge(param=p, parent_task=ptid,
+                                               ref=r)]
+                            if sample_tid:
+                                edges.append(InputEdge(
+                                    param="__splits__",
+                                    parent_task=sample_tid,
+                                    ref=ModelRef.create(name)))
+                            tasks[wtid] = ShuffleWriteTask(
+                                task_id=wtid, name=name, param=p,
+                                cache_key=wkey, inputs=edges,
+                                num_partitions=P, keys=xc.keys,
+                                estimated_bytes=max(
+                                    est_bytes[r.name] // len(ptids), 1),
+                                mode=xc.mode, descending=xc.descending,
+                                order_column=(p == xc.order_param),
+                                contract_id=xc.contract_id,
+                                hints=PlacementHint(shard_index=k,
+                                                    num_shards=len(ptids)))
+                            order.append(wtid)
+                            wt.append(wtid)
+                            wk.append(wkey)
+                        writer_tids[p] = wt
+                        writer_keys[p] = wk
+                    # chained "keys" partitions arrive partition-major; the
+                    # partition task restores the unsharded row order by
+                    # stable-sorting on the upstream group keys
+                    param_sort = {
+                        p: exchange_meta[params[p].name]["keys"]
+                        for p in exchange_params
+                        if exchange_meta.get(params[p].name,
+                                             {}).get("merge") == "keys"}
+                    # P per-partition consumer tasks, each fetching exactly
+                    # its slice from every writer
+                    part_tids: List[str] = []
+                    part_keys: List[str] = []
+                    for j in range(P):
+                        ptid_j = f"func:{name}@{j}"
+                        pkey = _key_hash(cache_key, xc.contract_id,
+                                         f"part-{j}-{P}",
+                                         *(k for p in exchange_params
+                                           for k in writer_keys[p]))
+                        edges = [InputEdge(param=f"{p}#{k}", parent_task=wt,
+                                           ref=ModelRef.create(params[p].name))
+                                 for p in exchange_params
+                                 for k, wt in enumerate(writer_tids[p])]
+                        edges += [InputEdge(param=p, parent_task=bt, ref=r)
+                                  for p, r, bt in bcast]
+                        tasks[ptid_j] = PartitionTask(
+                            task_id=ptid_j, name=name,
+                            env_id=spec.env.env_id,
+                            code_hash=spec.code_hash, cache_key=pkey,
+                            inputs=edges, partition_index=j,
+                            param_shards={p: len(writer_tids[p])
+                                          for p in exchange_params},
+                            estimated_bytes=max(est // P, 1),
+                            memory_gb=spec.resources.memory_gb,
+                            timeout_s=spec.resources.timeout_s,
+                            split_param=xc.split_param,
+                            param_sort=dict(param_sort),
+                            merge=xc.merge, merge_keys=xc.keys,
+                            contract_id=xc.contract_id,
+                            hints=PlacementHint(shard_index=j,
+                                                num_shards=P))
+                        order.append(ptid_j)
+                        part_tids.append(ptid_j)
+                        part_keys.append(pkey)
+                    if xc.merge in ("concat", "keys") and not spec.materialize:
+                        # partitions chain downstream as shards (a further
+                        # combinable/exchange consumer runs per-partition and
+                        # never gathers raw rows); a consumer that needs the
+                        # whole table synthesizes the merge via ensure_gather
+                        shard_map[name] = part_tids
+                        shard_keys[name] = part_keys
+                        exchange_meta[name] = {
+                            "merge": xc.merge, "keys": xc.keys,
+                            "code_hash": spec.code_hash,
+                            "cache_key": cache_key,
+                            "timeout_s": spec.resources.timeout_s,
+                            "contract_id": xc.contract_id}
+                    else:
+                        # joins thread hidden order columns through their
+                        # partitions — downstream must never see them, so the
+                        # merge is synthesized immediately
+                        tid = f"func:{name}"
+                        tasks[tid] = ShuffleMergeTask(
+                            task_id=tid, name=name,
+                            code_hash=spec.code_hash, cache_key=cache_key,
+                            inputs=[InputEdge(param=f"part{j}",
+                                              parent_task=pt,
+                                              ref=ModelRef.create(name))
+                                    for j, pt in enumerate(part_tids)],
+                            merge=xc.merge, keys=xc.keys,
+                            materialize=spec.materialize,
+                            estimated_bytes=est,
+                            timeout_s=spec.resources.timeout_s,
+                            contract_id=xc.contract_id)
+                        order.append(tid)
+                elif combine_input is not None:
                     param_s, ref_s = combine_input
                     parent_shards = shard_map[ref_s.name]
                     n = len(parent_shards)
@@ -565,7 +908,12 @@ class Planner:
             t.hints.memory_bytes = need
             t.hints.on_demand = need > cap
             group = ""
-            if getattr(t, "inputs", None) and not t.hints.on_demand:
+            # partition tasks read one small slice from EVERY writer — no
+            # single parent dominates, and inheriting the largest writer's
+            # group would stack all P partitions on one worker; give each
+            # its own group so the engine spreads them by load
+            inherit = getattr(t, "kind", "") != "partition"
+            if inherit and getattr(t, "inputs", None) and not t.hints.on_demand:
                 # gathers group with their largest shard: that shard is read
                 # zero-copy, only the smaller remote ones pay a flight hop
                 parent_groups = sorted(

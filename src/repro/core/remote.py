@@ -41,6 +41,7 @@ from __future__ import annotations
 
 import os
 import pickle
+import select
 import socket
 import subprocess
 import sys
@@ -233,9 +234,12 @@ class WorkerDaemon:
             # contract-folded cache keys — refuse, same as stale code
             want_contract = getattr(task, "contract_id", "")
             if want_contract and spec is not None:
-                have = (spec.combinable.contract_id
-                        if spec.combinable is not None else "<none>")
-                if have != want_contract:
+                have_ids = [c.contract_id for c in
+                            (spec.combinable,
+                             getattr(spec, "exchange", None))
+                            if c is not None]
+                have = ", ".join(have_ids) if have_ids else "<none>"
+                if want_contract not in have_ids:
                     _send_msg(conn, {"kind": "error", "etype": "TaskError",
                                      "message":
                                      f"stale combine contract for "
@@ -553,12 +557,37 @@ class RemoteWorker:
             # a killed process resets the socket and a silently-dead one is
             # aborted by mark_down; the explicit deadline only bounds
             # genuinely wedged tasks
-            sock.settimeout(timeout_s + 30.0 if timeout_s else None)
+            sock.settimeout(timeout_s + 30.0 if timeout_s else 60.0)
+            deadline = (time.monotonic() + timeout_s + 30.0
+                        if timeout_s else None)
             _send_msg(sock, {"op": "dispatch", "plan_id": plan.plan_id,
                              "task_id": task.task_id, "handles": needed,
                              "put_channel": put_channel,
                              "edge_channels": dict(edge_channels or {})})
             while True:
+                # wait for readability in short slices, re-checking
+                # liveness each slice: mark_down's cross-thread
+                # shutdown+close can lose the race with this thread
+                # re-entering recv (the fd may even be reused by a new
+                # dispatch), leaving a recv that blocks forever on a
+                # worker everyone else knows is dead
+                while True:
+                    if not self.alive:
+                        raise WorkerFailure(
+                            f"worker {self.worker_id} marked down "
+                            f"mid-task {task.task_id}")
+                    if deadline is not None and time.monotonic() > deadline:
+                        raise WorkerFailure(
+                            f"worker {self.worker_id} timed out on task "
+                            f"{task.task_id} ({timeout_s:.0f}s limit)")
+                    try:
+                        readable, _, _ = select.select([sock], [], [], 0.5)
+                    except (OSError, ValueError) as e:
+                        raise WorkerFailure(
+                            f"worker {self.worker_id} lost mid-task "
+                            f"{task.task_id}: {e}") from e
+                    if readable:
+                        break
                 try:
                     msg = _recv_msg(sock)
                 except (OSError, EOFError, pickle.UnpicklingError) as e:

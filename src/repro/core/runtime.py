@@ -31,13 +31,17 @@ from repro.columnar.catalog import Catalog
 from repro.columnar.objectstore import ObjectStore
 from repro.columnar.table import ColumnTable
 from repro.core.cache import ColumnarScanCache, IntermediateCache
+from repro.columnar.table import numeric_column
 from repro.core.channels import (DataTransport, ShardUnavailable, TableHandle,
                                  partitioned_handle)
 from repro.core.envs import PackageLinkBuilder, PackageStore
 from repro.core.logical import build_logical_plan
 from repro.core.physical import (CombineTask, FunctionTask, GatherTask,
-                                 PhysicalPlan, Planner, ScanTask,
+                                 PartitionTask, PhysicalPlan, Planner,
+                                 ScanTask, ShuffleMergeTask,
+                                 ShuffleSampleTask, ShuffleWriteTask,
                                  WorkerProfile)
+from repro.core.spec import HIDDEN_ORDER_COLUMN
 
 if TYPE_CHECKING:
     from repro.api import Project
@@ -191,12 +195,37 @@ class Worker:
         channel, bound by the engine at dispatch time from actual placement."""
         self._check_alive()
         t0 = time.perf_counter()
+        if isinstance(task, ShuffleWriteTask):
+            # publishes its own partition-addressed handle: P individually
+            # fetchable slices, not one table — bypass the generic put
+            parts = self._run_shuffle_write(plan, task, handles, client,
+                                            edge_channels or {})
+            self._check_alive()
+            handle = self.transport.put_shuffle(
+                f"{plan.run_id}:{task.task_id}", parts, put_channel)
+            client.emit(Event("task_done", task.task_id, self.worker_id,
+                              {"rows": handle.num_rows,
+                               "bytes": handle.nbytes,
+                               "seconds": round(time.perf_counter() - t0, 6),
+                               "channel": "shuffle",
+                               # per-partition byte histogram: the engine's
+                               # skew detector reads these off the handle,
+                               # the event is for observability/tests
+                               "partition_bytes": [p.nbytes
+                                                   for p in handle.parts]}))
+            return handle
         if isinstance(task, ScanTask):
             table = self._run_scan(task, client)
         elif isinstance(task, GatherTask):
             table = self._run_gather(plan, task, handles, client)
         elif isinstance(task, CombineTask):
             table = self._run_combine(plan, task, handles, client, project)
+        elif isinstance(task, ShuffleSampleTask):
+            table = self._run_sample(plan, task, handles, client)
+        elif isinstance(task, PartitionTask):
+            table = self._run_partition(plan, task, handles, client, project)
+        elif isinstance(task, ShuffleMergeTask):
+            table = self._run_shuffle_merge(plan, task, handles, client)
         else:
             table = self._run_function(plan, task, handles, client, project,
                                        edge_channels or {})
@@ -297,6 +326,193 @@ class Worker:
                            "state_bytes": int(sum(p.nbytes for p in parts))}))
         return table
 
+    def _deliver_edge(self, edge, handles, via: Optional[str] = None,
+                      extra_columns: Sequence[str] = ()) -> ColumnTable:
+        """Resolve one input edge with its declared pushdowns: fetch via the
+        bound channel (or the handle's own), apply the edge predicate, then
+        the strict column projection. A lost handle or dead producer maps to
+        HandleUnavailable(producer) for per-task recovery."""
+        handle = handles.get(edge.parent_task)
+        if handle is None:
+            raise HandleUnavailable(edge.parent_task)
+        pred = edge.ref.predicate()
+        need = None
+        if edge.ref.columns is not None:
+            need = list(edge.ref.columns)
+            for c in list(extra_columns) + (pred.referenced_columns()
+                                            if pred else []):
+                if c not in need:
+                    need.append(c)
+        try:
+            table = self.transport.get(handle, columns=need, via=via)
+        except (OSError, ConnectionError, KeyError) as e:
+            raise HandleUnavailable(edge.parent_task) from e
+        if pred is not None:
+            table = compute.filter_table(table, pred)
+        if edge.ref.columns is not None:
+            # strict on the declared columns (a typo must raise, not silently
+            # vanish), lenient on system extras like a sample's sort key
+            keep = list(edge.ref.columns)
+            keep += [c for c in extra_columns
+                     if c not in keep and c in table.column_names]
+            table = table.project(keep)
+        return table
+
+    # -- partition exchange (shuffle) ---------------------------------------
+    def _run_shuffle_write(self, plan: PhysicalPlan, task: ShuffleWriteTask,
+                           handles, client: Client,
+                           edge_channels: Dict[str, str]) -> List[ColumnTable]:
+        """Partition one producer shard into P key-addressed slices. The
+        edge's predicate/projection run HERE, before partitioning, so
+        per-partition consumers see exactly what the unsharded model would;
+        a join's probe side also gets the hidden __xord__ column stamped
+        with (shard_index << 40) + local_row, which the final merge sorts
+        by to restore the unsharded row order."""
+        edge = next(e for e in task.inputs if e.param != "__splits__")
+        via = edge_channels.get(edge.parent_task) or edge.channel or None
+        table = self._deliver_edge(edge, handles, via=via)
+        if task.order_column:
+            base = np.int64(task.hints.shard_index) << np.int64(40)
+            ordv = base + np.arange(table.num_rows, dtype=np.int64)
+            table = table.with_column(HIDDEN_ORDER_COLUMN,
+                                      numeric_column(ordv))
+        if task.mode == "range":
+            sedge = next(e for e in task.inputs if e.param == "__splits__")
+            shandle = handles.get(sedge.parent_task)
+            if shandle is None:
+                raise HandleUnavailable(sedge.parent_task)
+            try:
+                splits = self.transport.get(shandle)
+            except (OSError, ConnectionError, KeyError) as e:
+                raise HandleUnavailable(sedge.parent_task) from e
+            return compute.range_partition(table, list(task.keys), splits,
+                                           descending=task.descending)
+        return compute.hash_partition(table, list(task.keys),
+                                      task.num_partitions)
+
+    def _run_sample(self, plan: PhysicalPlan, task: ShuffleSampleTask,
+                    handles, client: Client) -> ColumnTable:
+        """Range-mode split selection: read the first sort key from every
+        producer shard (column-projected — only key bytes move) and pick
+        P-1 splits all writers will share."""
+        cached = self.result_cache.get(task.cache_key)
+        if cached is not None:
+            client.emit(Event("cache_hit", task.task_id, self.worker_id,
+                              {"cache_key": task.cache_key}))
+            return cached
+        shards = [self._deliver_edge(e, handles,
+                                     extra_columns=task.keys[:1])
+                  for e in task.inputs]
+        splits = compute.sample_splits(shards, list(task.keys),
+                                       task.num_partitions)
+        splits = self.result_cache.put(task.cache_key, splits)
+        client.emit(Event("sample", task.task_id, self.worker_id,
+                          {"splits": splits.num_rows,
+                           "shards": len(shards)}))
+        return splits
+
+    def _run_partition(self, plan: PhysicalPlan, task: PartitionTask,
+                       handles, client: Client,
+                       project: Optional["Project"]) -> ColumnTable:
+        """Run the exchange contract's operator over partition j: fetch
+        parts[j] from every writer of each exchanged param (writer order ==
+        shard order, preserving original relative row order), broadcast the
+        rest whole. A skew sub-task additionally takes its contiguous
+        row-range slice of the split input. A lost partition maps back to
+        exactly its producing shuffle write."""
+        cached = self.result_cache.get(task.cache_key)
+        if cached is not None:
+            client.emit(Event("cache_hit", task.task_id, self.worker_id,
+                              {"cache_key": task.cache_key}))
+            return cached
+        from repro.api import default_project
+        project = project or default_project()
+        spec = project.functions[task.name]
+        if spec.exchange is None:
+            raise TaskError(f"{task.name}: plan expects a partition exchange "
+                            f"but the project declares none "
+                            f"(stale plan or project drift)")
+        writer_edges: Dict[str, List] = {}
+        bcast_edges = []
+        for e in task.inputs:
+            if "#" in e.param:
+                p, k = e.param.rsplit("#", 1)
+                writer_edges.setdefault(p, []).append((int(k), e))
+            else:
+                bcast_edges.append(e)
+        kwargs: Dict[str, ColumnTable] = {}
+        n_parts = n_local = 0
+        for p, kes in writer_edges.items():
+            kes.sort(key=lambda ke: ke[0])
+            whandles = []
+            for _, e in kes:
+                h = handles.get(e.parent_task)
+                if h is None:
+                    raise HandleUnavailable(e.parent_task)
+                whandles.append((e.parent_task, h))
+            try:
+                slices = self.transport.get_partition(
+                    [h for _, h in whandles], task.partition_index)
+            except ShardUnavailable as exc:
+                lost = next((tid for tid, h in whandles
+                             if exc.key.startswith(f"{h.key}/p")),
+                            whandles[0][0])
+                raise HandleUnavailable(lost) from exc
+            n_parts += len(slices)
+            n_local += sum(
+                self.transport.has_local(h.parts[task.partition_index].key)
+                for _, h in whandles)
+            table = compute.concat_tables(slices)
+            sort_keys = task.param_sort.get(p)
+            if sort_keys:
+                # chained "keys" partitions: restore the unsharded row order
+                # (stable sort on the upstream group keys, unique per row)
+                # so float accumulations stay byte-identical
+                table = table.take(
+                    compute._sort_indices(table, list(sort_keys)))
+            if p == task.split_param and task.num_subs > 1:
+                lo = table.num_rows * task.sub_index // task.num_subs
+                hi = table.num_rows * (task.sub_index + 1) // task.num_subs
+                table = table.slice(lo, hi - lo)
+            kwargs[p] = table
+        for e in bcast_edges:
+            kwargs[e.param] = self._deliver_edge(e, handles)
+        client.emit(Event("partition", task.task_id, self.worker_id,
+                          {"partition": task.partition_index,
+                           "parts": n_parts, "local": n_local,
+                           "remote": n_parts - n_local,
+                           "sub": task.sub_index, "subs": task.num_subs}))
+        return self._invoke_user_code(
+            plan, task, spec, lambda: spec.exchange.partition(**kwargs),
+            client, label=f"{task.name} (partition {task.partition_index})")
+
+    def _run_shuffle_merge(self, plan: PhysicalPlan, task: ShuffleMergeTask,
+                           handles, client: Client) -> ColumnTable:
+        """Reassemble partition outputs byte-identically to the unsharded
+        run (columnar.compute.merge_partitions). System code — no user
+        environment; a lost part maps back to exactly its partition task."""
+        cached = self.result_cache.get(task.cache_key)
+        if cached is not None:
+            client.emit(Event("cache_hit", task.task_id, self.worker_id,
+                              {"cache_key": task.cache_key}))
+            return cached
+        parts, n_parts, n_local = self._fetch_parts(plan, task, handles,
+                                                    as_parts=True)
+        table = compute.merge_partitions(parts, task.merge,
+                                         keys=list(task.keys))
+        table = self.result_cache.put(task.cache_key, table)
+        if task.materialize:
+            snap = self.catalog.write_table(task.name, table,
+                                            branch=plan.branch,
+                                            message=f"run {plan.run_id}")
+            client.emit(Event("materialized", task.task_id, self.worker_id,
+                              {"snapshot": snap.snapshot_id}))
+        client.emit(Event("shuffle_merge", task.task_id, self.worker_id,
+                          {"parts": n_parts, "local": n_local,
+                           "remote": n_parts - n_local,
+                           "merge": task.merge}))
+        return table
+
     def _invoke_user_code(self, plan: PhysicalPlan, task, spec,
                           call, client: Client, label: str) -> ColumnTable:
         """The shared tail of every user-code task — build the declared
@@ -349,26 +565,9 @@ class Worker:
         # 1. inputs via the planned channels (paper §4.3)
         kwargs = {}
         for edge in task.inputs:
-            handle = handles.get(edge.parent_task)
-            if handle is None:
-                raise HandleUnavailable(edge.parent_task)
-            pred = edge.ref.predicate()
-            need = None
-            if edge.ref.columns is not None:
-                need = list(edge.ref.columns)
-                for c in (pred.referenced_columns() if pred else []):
-                    if c not in need:
-                        need.append(c)
-            via = edge_channels.get(edge.parent_task) or edge.channel or "zerocopy"
-            try:
-                table = self.transport.get(handle, columns=need, via=via)
-            except (OSError, ConnectionError, KeyError) as e:
-                raise HandleUnavailable(edge.parent_task) from e
-            if pred is not None:
-                table = compute.filter_table(table, pred)
-            if edge.ref.columns is not None:
-                table = table.project(list(edge.ref.columns))
-            kwargs[edge.param] = table
+            via = (edge_channels.get(edge.parent_task) or edge.channel
+                   or "zerocopy")
+            kwargs[edge.param] = self._deliver_edge(edge, handles, via=via)
         # 2. run business logic under the declared ephemeral environment
         # (paper §4.2) with real-time log streaming; a materializing task
         # writes back to the lakehouse (paper Listing 1). Partial phase of a
@@ -407,12 +606,16 @@ class LocalCluster:
     def __init__(self, catalog: Catalog, object_store: ObjectStore,
                  scratch_root: str, n_workers: int = 2,
                  memory_gb: float = 4.0,
-                 package_store: Optional[PackageStore] = None):
+                 package_store: Optional[PackageStore] = None,
+                 engine_opts: Optional[Dict] = None):
         self.catalog = catalog
         self.object_store = object_store
         self.scratch_root = scratch_root
         self.package_store = package_store or PackageStore(
             f"{scratch_root}/pkgstore")
+        # forwarded to the lazily-created ExecutionEngine (mmap_spill_bytes,
+        # skew_factor, ... — benchmarks tune these per scenario)
+        self.engine_opts = dict(engine_opts or {})
         self.workers: Dict[str, Worker] = {}
         self._lock = threading.Lock()     # provision() races with dispatch
         self._engine = None
@@ -439,7 +642,7 @@ class LocalCluster:
 
         with self._lock:
             if self._engine is None:
-                self._engine = ExecutionEngine(self)
+                self._engine = ExecutionEngine(self, **self.engine_opts)
             return self._engine
 
     def profiles(self) -> List[WorkerProfile]:
@@ -491,14 +694,18 @@ def submit_run(project: "Project", cluster,
                journal_path: Optional[str] = None,
                shard_threshold_bytes: Optional[int] = None,
                max_shards: Optional[int] = None,
-               priority: int = 0):
+               priority: int = 0,
+               **engine_kw):
     """Plan + submit a run to the cluster's shared engine; returns a
     RunHandle immediately so N invocations can execute concurrently.
     `cluster` is anything ClusterLike (LocalCluster, remote.RemoteCluster).
     Tables over `shard_threshold_bytes` are scanned as up to `max_shards`
     (default: fleet size) parallel shard tasks. `priority` orders this
     run's tasks on the engine's shared ready heap: higher wins contended
-    worker slots first; equal priorities stay FIFO."""
+    worker slots first; equal priorities stay FIFO. Extra keyword args
+    (`max_retries`, `speculation_factor`, `speculation_min_s`) forward to
+    ``ExecutionEngine.submit`` — benchmarks disable straggler speculation
+    this way so 1-CPU timing noise doesn't double-run multi-second tasks."""
     logical = build_logical_plan(project, targets)
     planner_kw = {}
     if shard_threshold_bytes is not None:
@@ -510,7 +717,7 @@ def submit_run(project: "Project", cluster,
     plan = planner.plan(logical, branch=branch, run_id=run_id)
     return cluster.engine().submit(plan, project, client=client,
                                    journal_path=journal_path,
-                                   priority=priority)
+                                   priority=priority, **engine_kw)
 
 
 def execute_run(project: "Project", catalog: Catalog = None, cluster=None,
@@ -519,7 +726,8 @@ def execute_run(project: "Project", catalog: Catalog = None, cluster=None,
                 force_channel: Optional[str] = None,
                 journal_path: Optional[str] = None,
                 shard_threshold_bytes: Optional[int] = None,
-                max_shards: Optional[int] = None):
+                max_shards: Optional[int] = None,
+                **engine_kw):
     import tempfile
 
     owns_cluster = cluster is None
@@ -534,7 +742,7 @@ def execute_run(project: "Project", catalog: Catalog = None, cluster=None,
                             force_channel=force_channel,
                             journal_path=journal_path,
                             shard_threshold_bytes=shard_threshold_bytes,
-                            max_shards=max_shards)
+                            max_shards=max_shards, **engine_kw)
         return handle.wait()
     finally:
         if owns_cluster:

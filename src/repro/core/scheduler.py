@@ -11,6 +11,7 @@ from __future__ import annotations
 
 from typing import Optional
 
+from repro.core import defaults
 from repro.core.engine import ExecutionEngine, HandleMap, RunHandle, RunResult
 from repro.core.physical import PhysicalPlan
 from repro.core.runtime import Client, LocalCluster
@@ -21,9 +22,10 @@ __all__ = ["Scheduler", "RunResult", "RunHandle", "HandleMap",
 
 class Scheduler:
     def __init__(self, cluster: LocalCluster, client: Client,
-                 max_retries: int = 2, journal_path: Optional[str] = None,
-                 speculation_factor: float = 4.0,
-                 speculation_min_s: float = 0.5):
+                 max_retries: int = defaults.MAX_RETRIES,
+                 journal_path: Optional[str] = None,
+                 speculation_factor: float = defaults.SPECULATION_FACTOR,
+                 speculation_min_s: float = defaults.SPECULATION_MIN_S):
         self.cluster = cluster
         self.client = client
         self.max_retries = max_retries

@@ -175,6 +175,77 @@ class CombineContract:
 
 
 # ---------------------------------------------------------------------------
+# partition exchange (shuffle) contracts
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ExchangeContract:
+    """User contract that a keyed operator distributes over a hash/range
+    partitioning of its inputs on `keys`:
+
+        fn(inputs) == merge([partition(slice_j(inputs)) for j in 0..P))
+
+    where `slice_j` is the j-th partition of every `shard_params` input
+    (same keys land in the same j) and `merge` is one of the built-in
+    order-normalizing merges. The planner uses this to rewrite
+    `sharded producer -> keyed consumer` into per-shard ShuffleWriteTasks
+    plus per-partition consumer tasks, so the operator runs shard-local
+    end to end and raw rows only ever move once, partition-addressed.
+
+    ``partition`` has the model function's signature (one kwarg per input;
+    `shard_params` arrive as that param's partition slice, the rest are
+    broadcast whole). ``merge`` names how partition outputs reassemble:
+
+      * "concat" — partitions are contiguous ranges of the output (range
+        partitioning / sort_by);
+      * "keys"   — stable lexicographic sort on `keys` restores group_by's
+        np.unique output order (partitions hold disjoint key sets);
+      * "order"  — stable sort on the hidden ``__xmiss__``/``__xord__``
+        columns restores the unsharded row order (joins), then the hidden
+        columns are dropped.
+
+    ``order_param`` names the input whose original row order must be
+    reconstructable at the merge; its shuffle writers append the hidden
+    ``__xord__`` column before partitioning. ``split_param`` marks an input
+    whose partition slice may be further split by contiguous ROW RANGE
+    (skew-aware repartitioning) — legal only when every other input is
+    consumed whole per partition and the merge is order-normalizing, which
+    in practice means the probe side of a join.
+    """
+
+    kind: str                   # "join" | "sort" | "group_by" | "custom"
+    keys: Tuple[str, ...]       # partition keys (sort: the sort columns)
+    partition: Callable         # per-partition operator (model signature)
+    merge: str = "concat"       # "concat" | "keys" | "order"
+    mode: str = "hash"          # "hash" | "range" (range samples splits)
+    shard_params: Tuple[str, ...] = ()  # exchanged inputs (() = all inputs)
+    order_param: str = ""       # input that carries the __xord__ column
+    split_param: str = ""       # input eligible for row-range skew splits
+    descending: bool = False    # range mode: partition 0 holds the largest
+    fingerprint: str = ""       # parameter identity (keys/on/how/...)
+
+    @property
+    def contract_id(self) -> str:
+        """Folded into every exchange task's cache key: editing the
+        contract must invalidate cached shuffle writes and partitions even
+        when the model body is unchanged."""
+        return _stable_hash("exchange", self.kind, ",".join(self.keys),
+                            self.merge, self.mode,
+                            ",".join(self.shard_params), self.order_param,
+                            self.split_param, str(self.descending),
+                            self.fingerprint or
+                            _code_fingerprint(self.partition))
+
+
+# hidden columns a join exchange threads through its partitions so the
+# merge can restore the unsharded row order; stripped before user code or
+# run results ever see the table
+HIDDEN_ORDER_COLUMN = "__xord__"
+HIDDEN_MISS_COLUMN = "__xmiss__"
+
+
+# ---------------------------------------------------------------------------
 # functions
 # ---------------------------------------------------------------------------
 
@@ -197,6 +268,9 @@ class FunctionSpec:
     # declared distributive/algebraic aggregation: the planner may execute
     # it as per-shard partials + a combine at the gather point
     combinable: Optional[CombineContract] = None
+    # declared keyed operator over a hash/range partitioning: the planner
+    # may execute it as shuffle writes + per-partition tasks + a merge
+    exchange: Optional[ExchangeContract] = None
 
     @property
     def code_hash(self) -> str:

@@ -290,6 +290,77 @@ def test_combine_retries_only_the_lost_partial(cat, tmp_path):
         cluster.close()
 
 
+def test_shuffle_partition_loss_reexecutes_only_that_writer(cat, tmp_path,
+                                                            monkeypatch):
+    """Partition exchange under fault injection: every partition consumer is
+    gated until the worker holding ONE shuffle writer's part files is
+    killed. Each consumer then trips ShardUnavailable on exactly that
+    writer, the engine re-executes only its producer chain (writer + scan
+    shard), sibling writers run exactly once, and the merged result matches
+    the unsharded run byte for byte."""
+    from repro.columnar import compute
+    from repro.core.runtime import Worker, submit_run
+
+    aggs = {"total": ("a", "sum"), "n": ("a", "count")}
+
+    def make(name):
+        proj = bp.Project(name)
+
+        @proj.model(exchange=bp.GroupByExchange(["tag"], aggs))
+        def by_tag(data=bp.Model("src")):
+            return compute.group_by(data, ["tag"], aggs)
+
+        return proj
+
+    cluster = _cluster(cat, tmp_path)
+    killed = threading.Event()
+    orig = Worker._run_partition
+
+    def gated(self, plan, task, handles, client, project):
+        assert killed.wait(30), "chaos kill never happened"
+        return orig(self, plan, task, handles, client, project)
+
+    monkeypatch.setattr(Worker, "_run_partition", gated)
+
+    def shuffle_holder_of(task_id):
+        for wid, w in cluster.workers.items():
+            if any(f":{task_id}/p" in k for k in w.transport._shm):
+                return wid
+        return None
+
+    try:
+        handle = submit_run(make("sf1"), cluster, shard_threshold_bytes=1,
+                            max_shards=4)
+        victim = None
+        for _ in range(1000):
+            victim = shuffle_holder_of("shuffle:by_tag/data#1")
+            if victim is not None:
+                break
+            time.sleep(0.01)
+        assert victim is not None, "writer parts never landed"
+        cluster.kill_worker(victim)
+        killed.set()
+        res = handle.wait(timeout=120)
+        # only the lost writer's chain re-executed
+        assert res.task_attempts["shuffle:by_tag/data#1"] >= 2
+        assert any(res.task_attempts[f"shuffle:by_tag/data#{k}"] == 1
+                   for k in (0, 2, 3))
+        base_cluster = _cluster(cat, tmp_path / "base")
+        try:
+            want = execute_run(make("sf2"), cluster=base_cluster,
+                               shard_threshold_bytes=1 << 60
+                               ).read("by_tag", base_cluster)
+        finally:
+            base_cluster.close()
+        got = res.read("by_tag", cluster)
+        assert got.column_names == want.column_names
+        for c in got.column_names:
+            assert got.column(c).data.tobytes() == \
+                want.column(c).data.tobytes(), c
+    finally:
+        cluster.close()
+
+
 # ---------------------------------------------------------------------------
 # gather: projection pushdown + partitioned handles
 # ---------------------------------------------------------------------------

@@ -340,6 +340,96 @@ def test_sigkill_partial_holder_recovers_combine(cat, tmp_path):
         rcluster.close()
 
 
+SHUFFLE_PROJECT_SRC = '''
+import time
+
+import numpy as np
+
+import repro as bp
+from repro.columnar import compute
+
+AGGS = {"total": ("v", "sum"), "n": ("v", "count")}
+
+
+def build():
+    proj = bp.Project("remote-shuffle")
+
+    def part(data):
+        # hold every partition open long enough for the chaos kill to land
+        # while the writers' part files are still the only copy
+        time.sleep(1.5)
+        return compute.group_by(data, ["k"], AGGS)
+
+    @proj.model(exchange=bp.exchangeable(part, keys=["k"], merge="keys"))
+    def by_k(data=bp.Model("kv", columns=["k", "v"])):
+        return compute.group_by(data, ["k"], AGGS)
+
+    return proj
+'''
+
+
+def test_sigkill_shuffle_writer_holder_recovers(cat, tmp_path):
+    """Partition exchange across worker PROCESSES: SIGKILL the worker whose
+    shuffle writer completed first, while every partition consumer is still
+    sleeping. Its part files die with the process; consumers trip
+    ShardUnavailable, the engine re-executes exactly that writer's chain on
+    the survivor, sibling writers run once, and the merged aggregation
+    matches the single-process unsharded run byte for byte."""
+    rng = np.random.default_rng(17)
+    n = 4000
+    cat.write_table("kv", ColumnTable.from_pydict({
+        "k": rng.integers(0, 13, n).astype(np.float64),
+        "v": rng.integers(0, 1000, n).astype(np.float64)}),
+        rows_per_file=n // 8)
+    spec_path = tmp_path / "remote_shuffle_project.py"
+    spec_path.write_text(SHUFFLE_PROJECT_SRC)
+    spec = f"{spec_path}:build"
+    proj = load_project_spec(spec)
+
+    local = LocalCluster(cat, cat.store, str(tmp_path / "ldp"), n_workers=1)
+    try:
+        base = execute_run(proj, cluster=local, shard_threshold_bytes=1 << 60)
+        want = base.read("by_k", local)
+    finally:
+        local.close()
+
+    rcluster = RemoteCluster(cat, cat.store, str(tmp_path / "rdp"),
+                             n_workers=2, project=spec,
+                             heartbeat_interval_s=0.2)
+    try:
+        client = Client()
+        handle = submit_run(proj, rcluster, client=client,
+                            shard_threshold_bytes=1, max_shards=4)
+        victim = {}
+
+        def first_writer_done():
+            for e in client.of_kind("task_done"):
+                if e.task_id.startswith("shuffle:by_k/data#"):
+                    victim["worker"] = e.worker
+                    victim["task"] = e.task_id
+                    return True
+            return False
+
+        assert _wait_for(first_writer_done), "no shuffle writer completed"
+        rcluster.kill_worker(victim["worker"])          # real SIGKILL
+        res = handle.wait(timeout=180)
+        got = res.read("by_k", rcluster)
+        assert got.column_names == want.column_names
+        for c in got.column_names:
+            assert got.column(c).data.tobytes() == \
+                want.column(c).data.tobytes(), c
+        # the killed writer's chain re-executed on the survivor; at least
+        # one sibling writer (whose parts survived) ran exactly once
+        assert res.task_attempts[victim["task"]] >= 2
+        siblings = [t for t in res.task_attempts
+                    if t.startswith("shuffle:by_k/data#")
+                    and t != victim["task"]]
+        assert siblings and any(res.task_attempts[t] == 1 for t in siblings)
+        assert rcluster.workers[victim["worker"]].proc.poll() is not None
+    finally:
+        rcluster.close()
+
+
 def test_heartbeat_detects_external_process_death(rcluster, cat,
                                                   project_spec):
     wid, proxy = sorted(rcluster.workers.items())[0]

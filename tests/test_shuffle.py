@@ -1,0 +1,418 @@
+"""Partition exchange (shuffle): vectorized join/partition kernels, the
+planner's `sharded producer -> keyed consumer` rewrite, byte-identical
+sharded-vs-unsharded execution for left joins / global sorts / agg-of-agg,
+chained exchanges that never gather raw rows, and skew-aware dynamic
+repartitioning."""
+from typing import Dict, List, Sequence
+
+import numpy as np
+import pytest
+
+import repro as bp
+from repro.columnar import Catalog, ColumnTable, ObjectStore, compute
+from repro.columnar.table import Column, pack_validity, utf8_column
+from repro.core import (Client, GatherTask, LocalCluster, PartitionTask,
+                        ShuffleMergeTask, ShuffleSampleTask, ShuffleWriteTask)
+from repro.core.runtime import execute_run
+
+# ---------------------------------------------------------------------------
+# reference implementation: the per-row dict join this PR vectorized.
+# Kept verbatim (build dict + probe loop) as the parity oracle.
+# ---------------------------------------------------------------------------
+
+
+def _dict_hash_join(left: ColumnTable, right: ColumnTable, on: Sequence[str],
+                    how: str = "inner", suffix: str = "_r") -> ColumnTable:
+    keys_l = [left.column(k).to_numpy() for k in on]
+    keys_r = [right.column(k).to_numpy() for k in on]
+    index: Dict[tuple, List[int]] = {}
+    for i in range(right.num_rows):
+        index.setdefault(tuple(k[i] for k in keys_r), []).append(i)
+    li, ri, lmiss = [], [], []
+    for i in range(left.num_rows):
+        matches = index.get(tuple(k[i] for k in keys_l))
+        if matches:
+            for j in matches:
+                li.append(i)
+                ri.append(j)
+        elif how == "left":
+            lmiss.append(i)
+    li_arr = np.asarray(li + lmiss, dtype=np.int64)
+    ri_arr = np.asarray(ri, dtype=np.int64)
+    out = {n: left.column(n).take(li_arr) for n in left.column_names}
+    n_miss = len(lmiss)
+    for n in right.column_names:
+        if n in on:
+            continue
+        name = n if n not in out else n + suffix
+        c = right.column(n).take(ri_arr)
+        if n_miss:
+            pad_valid = np.concatenate([c.valid_mask(),
+                                        np.zeros(n_miss, bool)])
+            if c.kind == "utf8":
+                vals = list(c.to_numpy()) + [None] * n_miss
+                c = utf8_column(vals)
+            else:
+                data = np.concatenate([c.data,
+                                       np.zeros(n_miss, c.data.dtype)])
+                c = Column(c.kind, data, None, pack_validity(pad_valid))
+        out[name] = c
+    return ColumnTable(out)
+
+
+def _rand_table(rng, n, domain, utf8_nulls=True):
+    """Mixed-type table exercising every join-key edge: duplicate keys,
+    negative ints, NaN and -0.0 floats, utf8 with Nones."""
+    f = rng.normal(size=n)
+    f[rng.integers(0, n, max(1, n // 20))] = np.nan
+    f[rng.integers(0, n, max(1, n // 30))] = -0.0
+    s = [f"s{int(i)}" for i in rng.integers(0, domain, n)]
+    if utf8_nulls:
+        for i in rng.integers(0, n, max(1, n // 15)):
+            s[int(i)] = None
+    return ColumnTable({
+        "k": compute.numeric_column(
+            rng.integers(-domain, domain, n).astype(np.int64)),
+        "f": compute.numeric_column(f),
+        "s": utf8_column(s),
+        "v": compute.numeric_column(rng.normal(size=n)),
+    })
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+@pytest.mark.parametrize("how", ["inner", "left"])
+def test_vectorized_join_matches_dict_reference(seed, how):
+    rng = np.random.default_rng(seed)
+    left = _rand_table(rng, 700, domain=40)
+    right = _rand_table(rng, 300, domain=40)
+    for on in (["k"], ["k", "s"], ["f"], ["k", "f", "s"]):
+        got = compute.hash_join(left, right, on, how=how)
+        want = _dict_hash_join(left, right, on, how=how)
+        assert got.column_names == want.column_names, on
+        assert got.equals(want), f"join on {on} ({how}) diverged"
+
+
+def test_vectorized_join_null_semantics():
+    """The dict reference never matches NaN against NaN (NaN != NaN inside
+    a tuple key) but DOES match None against None; the vectorized path must
+    reproduce both."""
+    left = ColumnTable({"f": compute.numeric_column([np.nan, 1.0]),
+                       "s": utf8_column([None, "a"]),
+                       "x": compute.numeric_column([0.0, 1.0])})
+    right = ColumnTable({"f": compute.numeric_column([np.nan, 1.0]),
+                        "s": utf8_column([None, "a"]),
+                        "y": compute.numeric_column([10.0, 11.0])})
+    for on in (["f"], ["s"], ["f", "s"]):
+        got = compute.hash_join(left, right, on, how="left")
+        want = _dict_hash_join(left, right, on, how="left")
+        assert got.equals(want), on
+
+
+# ---------------------------------------------------------------------------
+# partition kernels
+# ---------------------------------------------------------------------------
+
+
+def test_hash_partition_is_a_stable_disjoint_cover():
+    rng = np.random.default_rng(9)
+    t = _rand_table(rng, 2000, domain=100)
+    t = ColumnTable({**{n: t.column(n) for n in t.column_names},
+                     "rid": compute.numeric_column(np.arange(2000.0))})
+    parts = compute.hash_partition(t, ["k", "s"], 7)
+    assert len(parts) == 7
+    assert sum(p.num_rows for p in parts) == t.num_rows
+    for p in parts:
+        rid = p.column("rid").to_numpy()
+        # stable: rows keep their relative input order inside a partition
+        assert np.all(np.diff(rid) > 0)
+    # deterministic and content-addressed: same rows -> same partition,
+    # regardless of which table slice they arrive in
+    again = compute.hash_partition(t.slice(500, 1500), ["k", "s"], 7)
+    for j in range(7):
+        keys = set(zip(parts[j].column("k").to_numpy().tolist(),
+                       parts[j].column("s").to_numpy().tolist()))
+        keys2 = set(zip(again[j].column("k").to_numpy().tolist(),
+                        again[j].column("s").to_numpy().tolist()))
+        assert keys2 <= keys
+        for jj in range(7):
+            if jj != j:
+                other = set(zip(parts[jj].column("k").to_numpy().tolist(),
+                                parts[jj].column("s").to_numpy().tolist()))
+                assert not keys & other, "key in two partitions"
+
+
+def test_range_partition_keeps_ties_together():
+    rng = np.random.default_rng(11)
+    shards = [ColumnTable({"v": compute.numeric_column(
+        rng.integers(0, 30, 400).astype(np.float64))}) for _ in range(3)]
+    splits = compute.sample_splits(shards, ["v"], 4)
+    parts = [compute.range_partition(s, ["v"], splits) for s in shards]
+    seen: Dict[float, int] = {}
+    for j in range(4):
+        for p in parts:
+            for v in p[j].column("v").to_numpy().tolist():
+                assert seen.setdefault(v, j) == j, \
+                    f"value {v} split across partitions {seen[v]} and {j}"
+    lo = [min(seen[v] for v in seen if v <= s)
+          for s in splits.column("split").to_numpy()]
+    assert lo == sorted(lo), "partition ranges out of order"
+
+
+# ---------------------------------------------------------------------------
+# end-to-end property harness: sharded == unsharded, byte for byte
+# ---------------------------------------------------------------------------
+
+AGGS = {"vs": ("v", "sum"), "n": ("v", "count"), "fm": ("f", "max")}
+AGG2 = {"groups": ("n", "count"), "total": ("vs", "sum")}
+
+
+def _exchange_project(name):
+    p = bp.Project(name)
+
+    @p.model(exchange=bp.JoinExchange(on=["k"], probe="facts", build="dims",
+                                      how="left"))
+    def joined(facts=bp.Model("facts"), dims=bp.Model("dims")):
+        return compute.hash_join(facts, dims, ["k"], how="left")
+
+    @p.model(exchange=bp.SortExchange(by=["v", "k"]))
+    def ordered(facts=bp.Model("facts")):
+        return compute.sort_by(facts, ["v", "k"])
+
+    @p.model(exchange=bp.SortExchange(by=["f", "k"], descending=True))
+    def reversed_(facts=bp.Model("facts")):
+        return compute.sort_by(facts, ["f", "k"], descending=True)
+
+    @p.model(exchange=bp.GroupByExchange(keys=["s"], aggs=AGGS))
+    def agged(facts=bp.Model("facts")):
+        return compute.group_by(facts, ["s"], AGGS)
+
+    # agg-of-agg: a second keyed consumer chained onto the first exchange's
+    # partitions (int count / float-sum re-aggregation)
+    @p.model(exchange=bp.GroupByExchange(keys=["n"], aggs=AGG2))
+    def agg_of_agg(agged=bp.Model("agged")):
+        return compute.group_by(agged, ["n"], AGG2)
+
+    return p
+
+
+def _catalog(tmp_path, seed, tag=""):
+    rng = np.random.default_rng(seed)
+    cat = Catalog(ObjectStore(str(tmp_path / f"s3{tag}")))
+    facts = _rand_table(rng, 6000, domain=200)
+    dims = _rand_table(rng, 900, domain=200)
+    cat.write_table("facts", facts, rows_per_file=6000 // 8)
+    cat.write_table("dims", dims, rows_per_file=900 // 8)
+    return cat
+
+
+MODELS = ("joined", "ordered", "reversed_", "agged", "agg_of_agg")
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+@pytest.mark.parametrize("max_shards", [1, 3, 8])
+def test_sharded_exchange_matches_unsharded(tmp_path, seed, max_shards):
+    cat = _catalog(tmp_path, seed)
+    cluster = LocalCluster(cat, cat.store, str(tmp_path / "dp"), n_workers=4)
+    try:
+        sharded = execute_run(_exchange_project(f"x{seed}a"), cluster=cluster,
+                              shard_threshold_bytes=1, max_shards=max_shards)
+        base = execute_run(_exchange_project(f"x{seed}b"), cluster=cluster,
+                           shard_threshold_bytes=1 << 60)
+        for name in MODELS:
+            a = sharded.read(name, cluster)
+            b = base.read(name, cluster)
+            assert a.column_names == b.column_names, name
+            for c in a.column_names:
+                assert a.column(c).data.tobytes() \
+                    == b.column(c).data.tobytes(), (name, c)
+        if max_shards > 1:
+            kinds = {type(sharded.plan.tasks[t]).__name__
+                     for t in sharded.plan.order}
+            assert "ShuffleWriteTask" in kinds
+            assert "PartitionTask" in kinds
+    finally:
+        cluster.close()
+
+
+def test_plan_shape_and_chained_exchange(tmp_path):
+    """The rewrite's contract, visible in the plan: per-shard writers, one
+    partition task per partition, merge nodes only where an order-sensitive
+    or terminal consumer needs one — and agg-of-agg chains on the first
+    exchange's partitions without EVER gathering raw rows."""
+    cat = _catalog(tmp_path, 3)
+    cluster = LocalCluster(cat, cat.store, str(tmp_path / "dp"), n_workers=4)
+    try:
+        res = execute_run(_exchange_project("shape"), cluster=cluster,
+                          shard_threshold_bytes=1, max_shards=4)
+        plan = res.plan
+        writers = [t for t in plan.order
+                   if isinstance(plan.tasks[t], ShuffleWriteTask)]
+        assert any(t.startswith("shuffle:joined/facts#") for t in writers)
+        assert any(t.startswith("shuffle:joined/dims#") for t in writers)
+        # a range exchange samples splits exactly once per sort
+        samples = [t for t in plan.order
+                   if isinstance(plan.tasks[t], ShuffleSampleTask)]
+        assert len(samples) == 2                      # ordered + reversed_
+        # the join's merge restores row order via hidden order columns, so
+        # it's a ShuffleMergeTask, not a plain gather
+        assert isinstance(plan.tasks["func:joined"], ShuffleMergeTask)
+        # a sort's partitions are contiguous ranges: plain ordered gather
+        assert isinstance(plan.tasks["func:ordered"], GatherTask)
+        # agg-of-agg: the second exchange's writers read the FIRST
+        # exchange's partition tasks directly — no intermediate merge of
+        # "agged" exists anywhere in the plan
+        assert "func:agged" not in plan.tasks
+        w2 = [t for t in writers if t.startswith("shuffle:agg_of_agg/")]
+        assert w2, "second aggregation was not exchanged"
+        for t in w2:
+            for e in plan.tasks[t].inputs:
+                assert e.parent_task.startswith("func:agged@")
+        # ...and reading the un-merged first aggregation still works via
+        # the client-side partition merge fallback
+        assert res.read("agged", cluster).num_rows > 0
+    finally:
+        cluster.close()
+
+
+def test_partition_task_fetches_only_its_partition(tmp_path):
+    """Transport accounting: partition consumers use partition-addressed
+    reads (channels.get_partition), never whole-output gathers of the
+    writers."""
+    cat = _catalog(tmp_path, 4)
+    cluster = LocalCluster(cat, cat.store, str(tmp_path / "dp"), n_workers=4)
+    try:
+        execute_run(_exchange_project("pg"), cluster=cluster,
+                    shard_threshold_bytes=1, max_shards=4)
+        gets = sum(w.transport.stats.get("partition_gets", 0)
+                   for w in cluster.workers.values())
+        assert gets > 0, "no partition-addressed reads happened"
+    finally:
+        cluster.close()
+
+
+# ---------------------------------------------------------------------------
+# skew-aware dynamic repartitioning
+# ---------------------------------------------------------------------------
+
+
+def _skewed_catalog(tmp_path, hot_share=0.9, n=40_000):
+    rng = np.random.default_rng(7)
+    hot = np.full(int(n * hot_share), 3, dtype=np.int64)
+    cold = rng.integers(0, 400, n - hot.size).astype(np.int64)
+    k = np.concatenate([hot, cold])
+    rng.shuffle(k)
+    cat = Catalog(ObjectStore(str(tmp_path / "s3")))
+    cat.write_table("facts", ColumnTable.from_pydict(
+        {"k": k, "v": rng.normal(size=n)}), rows_per_file=n // 8)
+    cat.write_table("dims", ColumnTable.from_pydict(
+        {"k": np.arange(400, dtype=np.int64),
+         "w": rng.normal(size=400)}), rows_per_file=100)
+    return cat
+
+
+def _join_project(name):
+    p = bp.Project(name)
+
+    @p.model(exchange=bp.JoinExchange(on=["k"], probe="facts", build="dims",
+                                      how="left"))
+    def joined(facts=bp.Model("facts"), dims=bp.Model("dims")):
+        return compute.hash_join(facts, dims, ["k"], how="left")
+
+    return p
+
+
+def test_skewed_partition_is_resplit_and_byte_identical(tmp_path):
+    cat = _skewed_catalog(tmp_path)
+    cluster = LocalCluster(cat, cat.store, str(tmp_path / "dp"), n_workers=4,
+                           engine_opts={"skew_min_bytes": 1024})
+    static = LocalCluster(cat, cat.store, str(tmp_path / "dp2"), n_workers=4,
+                          engine_opts={"skew_factor": None})
+    try:
+        client = Client()
+        res = execute_run(_join_project("sk1"), cluster=cluster,
+                          client=client, shard_threshold_bytes=1,
+                          max_shards=4)
+        splits = client.of_kind("skew_split")
+        assert len(splits) == 1, "exactly one hot partition expected"
+        payload = splits[0].payload
+        assert payload["bytes"] > payload["median_bytes"] * 2
+        assert 2 <= payload["subs"] <= 8
+        # the hot partition ran as row-range sub-tasks, siblings unsplit
+        subs = sorted(t for t in res.task_attempts if "~" in t)
+        assert len(subs) == payload["subs"]
+        hot = splits[0].task_id
+        assert all(t.startswith(hot + "~") for t in subs)
+        assert hot not in res.task_attempts
+        base = execute_run(_join_project("sk2"), cluster=static,
+                           shard_threshold_bytes=1, max_shards=4)
+        assert not Client().of_kind("skew_split")
+        a = res.read("joined", cluster)
+        b = base.read("joined", static)
+        for c in a.column_names:
+            assert a.column(c).data.tobytes() == b.column(c).data.tobytes()
+    finally:
+        cluster.close()
+        static.close()
+
+
+def test_skew_disabled_and_uniform_data_never_split(tmp_path):
+    cat = _catalog(tmp_path, 6)
+    cluster = LocalCluster(cat, cat.store, str(tmp_path / "dp"), n_workers=4,
+                           engine_opts={"skew_min_bytes": 1024})
+    try:
+        client = Client()
+        execute_run(_join_project("u1"), cluster=cluster, client=client,
+                    shard_threshold_bytes=1, max_shards=4)
+        assert not client.of_kind("skew_split"), \
+            "uniform keys must not trigger a re-split"
+    finally:
+        cluster.close()
+
+
+# ---------------------------------------------------------------------------
+# custom exchangeable contract
+# ---------------------------------------------------------------------------
+
+
+def test_custom_exchangeable_operator(tmp_path):
+    """bp.exchangeable: a user-defined keyed operator (distinct-count per
+    key) runs per hash partition with a key-sorted merge."""
+    cat = _catalog(tmp_path, 8)
+
+    def distinct(facts):
+        return compute.group_by(facts, ["k"], {"nv": ("v", "count")})
+
+    def make(name):
+        p = bp.Project(name)
+
+        @p.model(exchange=bp.exchangeable(distinct, keys=["k"],
+                                          merge="keys"))
+        def per_key(facts=bp.Model("facts")):
+            return distinct(facts)
+
+        return p
+
+    cluster = LocalCluster(cat, cat.store, str(tmp_path / "dp"), n_workers=4)
+    try:
+        a = execute_run(make("c1"), cluster=cluster, shard_threshold_bytes=1,
+                        max_shards=4).read("per_key", cluster)
+        b = execute_run(make("c2"), cluster=cluster,
+                        shard_threshold_bytes=1 << 60).read("per_key",
+                                                            cluster)
+        assert a.equals(b)
+    finally:
+        cluster.close()
+
+
+def test_exchange_and_combinable_are_exclusive():
+    p = bp.Project("excl")
+    with pytest.raises(ValueError, match="not both"):
+        @p.model(combinable=bp.GroupByCombine(["k"], {"n": ("v", "count")}),
+                 exchange=bp.GroupByExchange(["k"], {"n": ("v", "count")}))
+        def bad(facts=bp.Model("facts")):
+            return facts
+
+
+def test_exchangeable_rejects_unknown_merge():
+    with pytest.raises(ValueError, match="unknown merge"):
+        bp.exchangeable(lambda t: t, keys=["k"], merge="zip")
