@@ -2,7 +2,7 @@ PYTHON ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
 .PHONY: test test-fast bench-smoke bench-sharding bench-combine \
-	bench-multihost bench-shuffle serve-smoke lint
+	bench-multihost bench-shuffle serve-smoke lint check
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -33,3 +33,13 @@ serve-smoke:
 
 lint:
 	$(PYTHON) -m compileall -q src tests benchmarks examples
+	@if command -v ruff >/dev/null 2>&1; then ruff check src/repro; \
+	else echo "ruff not installed; skipping (CI lint job runs it pinned)"; fi
+	@if command -v mypy >/dev/null 2>&1; then mypy; \
+	else echo "mypy not installed; skipping (CI lint job runs it pinned)"; fi
+
+# plan-time static analysis: repo-internal lock lint + AST lint of the
+# example pipelines (pure AST — nothing is imported or executed)
+check:
+	$(PYTHON) -m repro.analysis --internal
+	$(PYTHON) -m repro.analysis examples

@@ -20,6 +20,13 @@ Measures the same group_by pipeline three ways on a 4-worker LocalCluster:
 Verifies the combined output is byte-identical to the unsharded run and
 (with --json) writes the numbers for CI to archive.
 
+Also measures the analyzer's lineage-driven projection pushdown: a sharded
+map emits a narrow numeric column plus an 8x-wide memo column, and its
+consumer declares NO ``columns=`` hint. With ``lineage_pushdown`` on, the
+static analyzer proves the consumer's body reads only the narrow column,
+so the memo bytes never cross a worker; off, the undeclared edge falls
+back to fetching everything.
+
     PYTHONPATH=src python -m benchmarks.shard_combine [--smoke] [--json PATH]
 """
 from __future__ import annotations
@@ -52,6 +59,22 @@ def _make_project(name: str, combinable: bool) -> bp.Project:
     @proj.model(combinable=contract)
     def by_country(data=bp.Model("txns", columns=COLS)):
         return compute.group_by(data, KEYS, AGGS)
+
+    return proj
+
+
+def _lineage_project(name: str) -> bp.Project:
+    proj = bp.Project(name)
+
+    @proj.model(rowwise=True)
+    def enriched(data=bp.Model("txns", columns=["usd", "qty"])):
+        usd = np.asarray(data.column("usd").to_numpy())
+        return {"usd2": usd * 2.0, "memo": ["x" * 64] * len(usd)}
+
+    @proj.model()     # NO columns= hint: the analyzer must prove {usd2}
+    def total(data=bp.Model("enriched")):
+        return {"sum": [float(np.asarray(
+            data.column("usd2").to_numpy()).sum())]}
 
     return proj
 
@@ -112,12 +135,36 @@ def run(n_rows: int = 4_000_000, n_workers: int = 4, n_files: int = 8,
                                                               out_base)
     speedup = t_gather / max(t_comb, 1e-9)
 
+    def _measure_lineage(tag: str, lineage: bool):
+        cluster = LocalCluster(catalog, store, f"{tmp}/dp-{tag}",
+                               n_workers=n_workers)
+        try:
+            res = execute_run(_lineage_project(f"bench-{tag}"),
+                              cluster=cluster, shard_threshold_bytes=1,
+                              max_shards=n_workers,
+                              lineage_pushdown=lineage)
+            out = res.read("total", cluster)
+            remote = sum(w.transport.stats["remote_part_bytes"]
+                         for w in cluster.workers.values())
+            return float(out.column("sum").to_numpy()[0]), remote
+        finally:
+            cluster.close()
+
+    sum_on, bytes_on = _measure_lineage("lineage-on", lineage=True)
+    sum_off, bytes_off = _measure_lineage("lineage-off", lineage=False)
+    lineage_identical = sum_on == sum_off
+    lineage_ratio = bytes_on / max(bytes_off, 1)
+
     report("combine/unsharded_agg", t_base, f"{n_rows} rows, 1 worker")
     report("combine/gather_then_agg", t_gather,
            f"{n_workers} scan shards, raw-row gather + 1-worker group_by")
     report("combine/sharded_combine", t_comb,
            f"{n_workers} partials + combine, x{speedup:.2f} vs gather, "
            f"identical={identical}")
+    report("combine/lineage_pushdown",
+           0.0, f"remote part bytes {bytes_on} (proven read set) vs "
+           f"{bytes_off} (no hint, no lineage) = x{lineage_ratio:.2f}, "
+           f"identical={lineage_identical}")
 
     result = {"n_rows": n_rows, "n_workers": n_workers, "n_files": n_files,
               "n_groups": n_groups,
@@ -125,12 +172,20 @@ def run(n_rows: int = 4_000_000, n_workers: int = 4, n_files: int = 8,
               "gather_then_agg_s": round(t_gather, 4),
               "sharded_combine_s": round(t_comb, 4),
               "speedup_vs_gather": round(speedup, 3),
-              "identical": bool(identical)}
+              "identical": bool(identical),
+              "lineage_on_remote_bytes": int(bytes_on),
+              "lineage_off_remote_bytes": int(bytes_off),
+              "lineage_bytes_ratio": round(lineage_ratio, 4),
+              "lineage_identical": bool(lineage_identical)}
     if json_path:
         with open(json_path, "w") as f:
             json.dump(result, f, indent=2)
     if not identical:
         raise SystemExit("combined output differs from unsharded group_by")
+    if not lineage_identical:
+        raise SystemExit("lineage pushdown changed the consumer's result")
+    if bytes_off and bytes_on >= bytes_off:
+        raise SystemExit("lineage pushdown did not reduce remote part bytes")
     return result
 
 

@@ -18,8 +18,10 @@ The public SDK mirrors the paper's programming model:
 """
 from repro.api import (GroupByCombine, GroupByExchange, JoinCombine,
                        JoinExchange, Model, Project, SortExchange,
-                       StatsCombine, combinable, default_project,
+                       StatsCombine, check, combinable, default_project,
                        exchangeable, model, python, resources, run, submit)
+from repro.core.errors import (BauplanError, ContractError, LintError,
+                               PlanError)
 from repro.core.spec import (CombineContract, EnvSpec, ExchangeContract,
                              ModelRef, ResourceHint)
 
@@ -27,9 +29,10 @@ __version__ = "1.0.0"
 
 __all__ = [
     "Model", "Project", "default_project", "model", "python", "resources",
-    "run", "submit", "EnvSpec", "ModelRef", "ResourceHint",
+    "run", "submit", "check", "EnvSpec", "ModelRef", "ResourceHint",
     "CombineContract", "GroupByCombine", "JoinCombine", "StatsCombine",
     "combinable",
     "ExchangeContract", "GroupByExchange", "JoinExchange", "SortExchange",
     "exchangeable",
+    "BauplanError", "PlanError", "ContractError", "LintError",
 ]

@@ -1,0 +1,125 @@
+"""``python -m repro.analysis`` — the `bauplan check` command.
+
+Three modes, combinable:
+
+  * positional paths — lint ``@bp.model``-decorated functions in .py files
+    (or directories, recursively) WITHOUT importing them: pure-AST
+    determinism/cache-safety checks, safe on example scripts whose import
+    would execute a pipeline;
+  * ``--project module:attr`` — import a Project object and run the full
+    three-pass analyzer (schemas, contracts, explain, determinism);
+  * ``--internal`` — run the lock-annotation lint over the runtime's own
+    concurrency-critical modules (engine/runtime/remote).
+
+Exit status is 1 when any error-severity diagnostic was emitted, else 0.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import json
+import os
+import sys
+from typing import List
+
+from repro.analysis import check_project
+from repro.analysis.determinism import lint_source
+from repro.analysis.diagnostics import Diagnostic, RULES, Report
+from repro.analysis.locklint import lint_files
+
+_INTERNAL_MODULES = ("engine.py", "runtime.py", "remote.py")
+
+
+def _iter_py_files(paths) -> List[str]:
+    out: List[str] = []
+    for p in paths:
+        if os.path.isdir(p):
+            for root, _, names in os.walk(p):
+                out.extend(os.path.join(root, n) for n in sorted(names)
+                           if n.endswith(".py"))
+        else:
+            out.append(p)
+    return out
+
+
+def _load_project(spec: str):
+    mod_name, _, attr = spec.partition(":")
+    mod = importlib.import_module(mod_name)
+    if attr:
+        return getattr(mod, attr)
+    for name in ("project", "PROJECT"):
+        if hasattr(mod, name):
+            return getattr(mod, name)
+    from repro.api import Project
+
+    cands = [v for v in vars(mod).values() if isinstance(v, Project)]
+    if len(cands) == 1:
+        return cands[0]
+    raise SystemExit(f"error: no unambiguous Project in {mod_name}; "
+                     "name one with MODULE:ATTR")
+
+
+def _print_rules() -> None:
+    for rule in RULES.values():
+        print(f"{rule.code}  {rule.severity:<7}  {rule.title}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Plan-time static analysis for Bauplan pipelines.")
+    ap.add_argument("paths", nargs="*",
+                    help=".py files or directories to lint (AST only, "
+                         "never imported)")
+    ap.add_argument("--project", metavar="MODULE:ATTR",
+                    help="import a Project and run the full analyzer")
+    ap.add_argument("--internal", action="store_true",
+                    help="lock-annotation lint over the runtime modules")
+    ap.add_argument("--rules", action="store_true",
+                    help="list all BPL### rules and exit")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="emit diagnostics as JSON")
+    args = ap.parse_args(argv)
+
+    if args.rules:
+        _print_rules()
+        return 0
+
+    diags: List[Diagnostic] = []
+    if args.paths:
+        for path in _iter_py_files(args.paths):
+            try:
+                with open(path, "r", encoding="utf-8") as fh:
+                    src = fh.read()
+            except OSError as exc:
+                print(f"error: cannot read {path}: {exc}", file=sys.stderr)
+                return 2
+            diags.extend(lint_source(src, path))
+    if args.project:
+        report = check_project(_load_project(args.project))
+        diags.extend(report.diagnostics)
+    if args.internal:
+        core = os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "core")
+        diags.extend(lint_files(os.path.join(core, m)
+                                for m in _INTERNAL_MODULES))
+    if not (args.paths or args.project or args.internal):
+        ap.error("nothing to check: give paths, --project or --internal")
+
+    report = Report(diagnostics=diags)
+    if args.as_json:
+        print(json.dumps([{
+            "code": d.code, "severity": d.severity, "message": d.message,
+            "model": d.model, "column": d.column, "param": d.param,
+            "file": d.file, "line": d.line} for d in diags], indent=2))
+    else:
+        print(report.render())
+    return 1 if report.errors else 0
+
+
+if __name__ == "__main__":
+    try:
+        sys.exit(main())
+    except BrokenPipeError:  # e.g. `... --rules | head`
+        os.dup2(os.open(os.devnull, os.O_WRONLY), sys.stdout.fileno())
+        sys.exit(0)

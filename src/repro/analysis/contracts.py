@@ -1,0 +1,158 @@
+"""Pass 2 — contract conformance and rewrite-guard "explain" mode.
+
+Decoration already rejects statically-dead contracts (BPL200-206 raise as
+`ContractError` the moment the model is defined). This pass re-derives
+those checks for projects built before the constructors hardened, then
+answers the harder question the planner never does: for each model that
+DECLARED a rewrite contract, would the rewrite actually fire — and if not,
+which guard blocks it? The guards consulted are the planner's own
+(`physical.combinable_guard` / `physical.exchange_guard`), so explain mode
+can't drift from what plan time really decides.
+
+Sharding is hypothetical here: absent an explicit `sharded=` set we assume
+each contract's own exchanged/shard-side parents arrive sharded — the
+most favorable world for the rewrite — so any remaining decline is
+structural, not a data-size accident.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.diagnostics import Diagnostic
+from repro.columnar.compute import AGG_FUNCS
+from repro.core.logical import build_logical_plan
+from repro.core.physical import combinable_guard, exchange_guard
+
+_GUARD_HINTS = {
+    "BPL251": "name the sharded side with shard_param= or reduce to one "
+              "input",
+    "BPL252": "a join contract pairs exactly one probe with one build "
+              "input",
+    "BPL253": "the rewrite needs exactly one sharded input; gather the "
+              "others or shard exactly one",
+    "BPL254": "the sharded input is not the declared shard_param side",
+    "BPL255": "every shard_params entry must name an input parameter",
+    "BPL256": "range partitioning is single-input; use mode='hash' to "
+              "co-partition several",
+    "BPL257": "split_param/order_param must be inside the exchanged set",
+    "BPL258": "no exchanged input is sharded, so there is nothing to "
+              "repartition",
+    "BPL259": "re-declare columns= to keep the upstream partition keys "
+              "visible",
+}
+
+
+def _spec_level(spec) -> List[Diagnostic]:
+    """Re-derive the decoration-time checks on an already-built spec."""
+    diags: List[Diagnostic] = []
+    name = spec.name
+    params = {p for p, _ in spec.inputs}
+
+    def bad(code: str, msg: str, **kw) -> None:
+        diags.append(Diagnostic(code, f"model {name!r}: {msg}",
+                                model=name, **kw))
+
+    c = getattr(spec, "combinable", None)
+    x = getattr(spec, "exchange", None)
+    if c is not None and x is not None:
+        bad("BPL200", "declares both combinable= and exchange=; a model "
+            "gets one rewrite strategy, not both")
+    for contract, label in ((c, "combinable"), (x, "exchange")):
+        if contract is None:
+            continue
+        for attr in ("shard_param", "order_param", "split_param"):
+            p = getattr(contract, attr, "")
+            if p and p not in params:
+                bad("BPL201", f"{label}.{attr}={p!r} does not name an "
+                    f"input parameter (has {sorted(params)})", param=p)
+        for p in getattr(contract, "shard_params", ()):
+            if p not in params:
+                bad("BPL201", f"{label}.shard_params entry {p!r} does not "
+                    f"name an input parameter (has {sorted(params)})",
+                    param=p)
+        for _, (src, fn) in getattr(contract, "aggs", ()):
+            if fn not in AGG_FUNCS:
+                bad("BPL204", f"aggregation {fn!r} on {src!r} is holistic "
+                    f"(mergeable: {', '.join(AGG_FUNCS)})", column=src)
+    if x is not None:
+        if x.merge not in ("concat", "keys", "order"):
+            bad("BPL203", f"unknown merge {x.merge!r}")
+        if x.mode not in ("hash", "range"):
+            bad("BPL203", f"unknown mode {x.mode!r}")
+        if not x.keys:
+            bad("BPL202", "exchange declares an empty key tuple")
+        if x.split_param and (x.merge != "order" or not x.order_param):
+            bad("BPL206", f"split_param={x.split_param!r} needs "
+                "merge='order' with an order_param to stitch splits back",
+                column=x.split_param)
+    if c is not None and c.kind in ("group_by", "join") and hasattr(c, "keys") \
+            and not c.keys:
+        bad("BPL202", f"{c.kind} combine declares an empty key tuple")
+    return diags
+
+
+def _assumed_sharded(spec) -> Set[str]:
+    """The most favorable hypothetical sharding for this spec's contract:
+    its own shard-side parents arrive sharded, everything else gathered."""
+    by_param = dict(spec.inputs)
+    c = getattr(spec, "combinable", None)
+    if c is not None:
+        if c.shard_param and c.shard_param in by_param:
+            return {by_param[c.shard_param].name}
+        if len(spec.inputs) == 1:
+            return {spec.inputs[0][1].name}
+        return set()
+    x = getattr(spec, "exchange", None)
+    if x is not None:
+        exchanged = (list(x.shard_params) if x.shard_params
+                     else list(by_param))
+        return {by_param[p].name for p in exchanged if p in by_param}
+    return set()
+
+
+def explain(project, targets=None,
+            sharded: Optional[Set[str]] = None,
+            upstream_keys: Optional[Dict[str, Tuple[str, ...]]] = None
+            ) -> List[Diagnostic]:
+    """One diagnostic per contract-bearing model whose rewrite guard
+    declines under the given (or assumed) sharding, naming the guard."""
+    logical = build_logical_plan(project, targets)
+    # statically known partition keys: parents that exchange with a
+    # keys-preserving merge leave their outputs hash-partitioned on keys
+    known_keys: Dict[str, Tuple[str, ...]] = dict(upstream_keys or {})
+    if upstream_keys is None:
+        for node in logical.function_nodes():
+            x = getattr(node.spec, "exchange", None)
+            if x is not None and x.merge == "keys":
+                known_keys[node.name] = tuple(x.keys)
+    diags: List[Diagnostic] = []
+    for node in logical.function_nodes():
+        spec = node.spec
+        diags.extend(_spec_level(spec))
+        has_c = getattr(spec, "combinable", None) is not None
+        has_x = getattr(spec, "exchange", None) is not None
+        if not (has_c or has_x):
+            continue
+        shd = sharded if sharded is not None else _assumed_sharded(spec)
+        if has_c:
+            fired, code = combinable_guard(spec, shd)
+        else:
+            fired, code = exchange_guard(spec, shd, known_keys)
+        if fired is not None or not code or code == "BPL250":
+            continue
+        kind = "shard-combine" if has_c else "exchange"
+        hint = _GUARD_HINTS.get(code, "")
+        diags.append(Diagnostic(
+            code, f"model {spec.name!r}: {kind} rewrite will not fire — "
+            + (hint or "guard declined"), model=spec.name))
+    return diags
+
+
+def contract_diagnostics(project, targets=None,
+                         sharded: Optional[Set[str]] = None
+                         ) -> List[Diagnostic]:
+    """All pass-2 diagnostics: spec-level conformance plus guard explain."""
+    return explain(project, targets, sharded)
+
+
+__all__ = ["contract_diagnostics", "explain"]

@@ -1,0 +1,188 @@
+"""Pass 3a — determinism & cache-safety lint for model bodies.
+
+The engine caches model outputs keyed by (code_hash, env_id, inputs,
+contract_id). That key is only sound if the body is a pure function of its
+inputs: a body that reads the clock, draws unseeded randomness, or bakes a
+memory address into its output will happily serve a stale cache hit — or
+produce shard-dependent results under the combine/exchange rewrites.
+
+All checks are AST-level and advisory (warnings): we flag the well-known
+impurity sources rather than attempt a soundness proof of arbitrary code.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional
+
+from repro.analysis.diagnostics import Diagnostic
+from repro.analysis.schema import _dotted, _fn_def as _live_fn_def
+from repro.core.logical import build_logical_plan
+
+# dotted-call patterns that read ambient nondeterministic state (BPL301)
+_NONDET_CALLS = {
+    "time.time", "time.time_ns", "time.monotonic", "time.perf_counter",
+    "datetime.now", "datetime.utcnow", "datetime.today", "date.today",
+    "datetime.datetime.now", "datetime.datetime.utcnow",
+    "random.random", "random.randint", "random.randrange", "random.choice",
+    "random.shuffle", "random.sample", "random.uniform", "random.gauss",
+    "uuid.uuid1", "uuid.uuid4",
+    "np.random.rand", "np.random.randn", "np.random.randint",
+    "np.random.random", "np.random.choice", "np.random.shuffle",
+    "np.random.permutation", "np.random.normal", "np.random.uniform",
+    "numpy.random.rand", "numpy.random.randn", "numpy.random.randint",
+    "numpy.random.random", "numpy.random.choice", "numpy.random.shuffle",
+    "numpy.random.permutation", "numpy.random.normal",
+    "numpy.random.uniform",
+}
+
+# environment reads (BPL304): same hazard, distinct fix (pin via env=)
+_ENV_CALLS = {"os.getenv", "os.environ.get", "getenv"}
+
+
+def _is_env_subscript(node: ast.AST) -> bool:
+    return (isinstance(node, ast.Subscript)
+            and _dotted(node.value) in ("os.environ", "environ"))
+
+
+def _is_id_call(node: ast.AST) -> bool:
+    return (isinstance(node, ast.Call) and _dotted(node.func) == "id"
+            and len(node.args) == 1)
+
+
+class _AstShim:
+    """Duck-types enough of a function object that lint_fn can run on an
+    already-parsed FunctionDef (CLI file mode — no import, no closure)."""
+
+    def __init__(self, fdef):
+        self.parsed = fdef
+        self.__name__ = fdef.name
+
+
+def _fn_def(fn) -> Optional[ast.FunctionDef]:
+    if isinstance(fn, _AstShim):
+        return fn.parsed
+    return _live_fn_def(fn)
+
+
+def lint_fn(fn, model: str = "") -> List[Diagnostic]:
+    """BPL301-305 findings for one model function."""
+    fdef = _fn_def(fn)
+    if fdef is None:
+        return []
+    model = model or getattr(fn, "__name__", "")
+    diags: List[Diagnostic] = []
+
+    def flag(code: str, node: ast.AST, msg: str, **kw) -> None:
+        diags.append(Diagnostic(code, f"model {model!r}: {msg}",
+                                model=model, line=getattr(node, "lineno", 0),
+                                **kw))
+
+    # BPL302 — mutable default arguments survive across invocations, so a
+    # body appending to one returns different tables for identical inputs
+    args = fdef.args
+    defaults = list(args.defaults) + list(args.kw_defaults)
+    for d in defaults:
+        if isinstance(d, (ast.List, ast.Dict, ast.Set)):
+            flag("BPL302", d, "mutable default argument; defaults are "
+                 "shared across calls and across shard retries")
+        elif isinstance(d, ast.Call) and _dotted(d.func) in (
+                "list", "dict", "set"):
+            flag("BPL302", d, "mutable default argument (constructed "
+                 "container); defaults are shared across calls")
+
+    for node in ast.walk(fdef):
+        if isinstance(node, ast.Call):
+            name = _dotted(node.func)
+            if name in _NONDET_CALLS:
+                flag("BPL301", node, f"{name}() is nondeterministic; its "
+                     "result poisons the output cache key", column="")
+            elif name in _ENV_CALLS:
+                flag("BPL304", node, f"{name}(...) reads the environment; "
+                     "pin it through env= so it enters the cache key")
+            elif _is_id_call(node):
+                flag("BPL303", node, "id(...) bakes a memory address into "
+                     "the output; addresses differ across processes")
+        elif _is_env_subscript(node):
+            flag("BPL304", node, "os.environ[...] reads the environment; "
+                 "pin it through env= so it enters the cache key")
+        elif (isinstance(node, ast.Attribute)
+              and node.attr in ("__hash__",)
+              and isinstance(node.ctx, ast.Load)):
+            flag("BPL303", node, "object identity hash is "
+                 "process-dependent")
+    return diags
+
+
+def lint_closure(fn, model: str = "") -> List[Diagnostic]:
+    """BPL305 — mutable values captured by the model's closure. These
+    bypass code_hash entirely: the bytecode is identical while the
+    captured list/dict/set drifts between runs."""
+    model = model or getattr(fn, "__name__", "")
+    code = getattr(fn, "__code__", None)
+    closure = getattr(fn, "__closure__", None)
+    if code is None or not closure:
+        return []
+    diags: List[Diagnostic] = []
+    for name, cell in zip(code.co_freevars, closure):
+        try:
+            val = cell.cell_contents
+        except ValueError:
+            continue
+        if isinstance(val, (list, dict, set, bytearray)):
+            diags.append(Diagnostic(
+                "BPL305", f"model {model!r}: closure captures mutable "
+                f"{type(val).__name__} {name!r}; its contents are not part "
+                "of the cache key", model=model, column=name))
+    return diags
+
+
+def analyze_determinism(project, targets=None) -> List[Diagnostic]:
+    """Pass-3a findings for every function node in the project DAG."""
+    logical = build_logical_plan(project, targets)
+    diags: List[Diagnostic] = []
+    for node in logical.function_nodes():
+        diags.extend(lint_fn(node.spec.fn, node.name))
+        diags.extend(lint_closure(node.spec.fn, node.name))
+    return diags
+
+
+def lint_source(source: str, filename: str = "<string>",
+                decorated_only: bool = True) -> List[Diagnostic]:
+    """File-mode lint: parse `source` and run the body checks over each
+    function decorated with `@*.model(...)` (or every function when
+    `decorated_only` is False). Used by the CLI so example files are
+    checked without importing them."""
+    try:
+        tree = ast.parse(source, filename)
+    except SyntaxError as exc:
+        return [Diagnostic("BPL000", f"syntax error: {exc.msg}",
+                           severity="error", file=filename,
+                           line=exc.lineno or 0)]
+    diags: List[Diagnostic] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if decorated_only and not _is_model_decorated(node):
+            continue
+        diags.extend(_lint_fdef(node, node.name, filename))
+    return diags
+
+
+def _is_model_decorated(fdef: ast.AST) -> bool:
+    for dec in fdef.decorator_list:
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        if _dotted(target).endswith("model"):
+            return True
+    return False
+
+
+def _lint_fdef(fdef, model: str, filename: str) -> List[Diagnostic]:
+    """Same body checks as lint_fn, but from a parsed def (no live
+    function object, so no closure inspection)."""
+    diags = lint_fn(_AstShim(fdef), model)
+    for d in diags:
+        object.__setattr__(d, "file", filename)
+    return diags
+
+
+__all__ = ["analyze_determinism", "lint_fn", "lint_closure", "lint_source"]

@@ -1,0 +1,149 @@
+"""Diagnostic types and the BPL### rule registry.
+
+Every defect the static analyzer can prove gets a stable lint code, so CI
+gates, tests, and editors can match on structure instead of message strings:
+
+  * BPL1xx — schema & column lineage (pass 1)
+  * BPL2xx — contract conformance & rewrite-guard explain (pass 2)
+  * BPL3xx — determinism / cache-safety of user functions (pass 3a)
+  * BPL4xx — repo-internal lock-annotation lint (pass 3b)
+
+Severity semantics: "error" diagnostics fail `bp.run(..., validate="strict")`
+and the CLI; "warning" and "info" are reported but never block a run
+(explain-mode guard declines are usually legitimate — an unsharded input is
+not a bug, it's just a rewrite that didn't pay).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+from repro.core.errors import BauplanError, ContractError, LintError, PlanError
+
+ERROR = "error"
+WARNING = "warning"
+INFO = "info"
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    code: str
+    severity: str
+    title: str
+
+
+# The registry IS the documentation: README's lint-code table and the CLI's
+# --rules listing both render from here.
+RULES: Dict[str, Rule] = {r.code: r for r in [
+    # pass 1 — schema & column lineage
+    Rule("BPL101", ERROR, "column not produced by the referenced parent"),
+    Rule("BPL102", ERROR, "join key dtypes disagree between probe and build"),
+    Rule("BPL103", ERROR, "filter references a column the parent lacks"),
+    Rule("BPL104", ERROR, "contract key/agg column missing upstream"),
+    # pass 2 — contract conformance (decoration/spec level)
+    Rule("BPL200", ERROR, "combinable= and exchange= on one model"),
+    Rule("BPL201", ERROR, "contract names a parameter the model lacks"),
+    Rule("BPL202", ERROR, "empty key tuple"),
+    Rule("BPL203", ERROR, "unknown merge/mode/how string"),
+    Rule("BPL204", ERROR, "holistic aggregate under a group-by contract"),
+    Rule("BPL205", ERROR, "non-inner join declared shard-combinable"),
+    Rule("BPL206", ERROR, "split_param without an order-restoring merge"),
+    # pass 2 — rewrite-guard explain (why a rewrite did NOT fire)
+    Rule("BPL250", INFO, "aggregation-shaped model without a contract"),
+    Rule("BPL251", ERROR, "single-input contract on a multi-input model"),
+    Rule("BPL252", ERROR, "join contract needs exactly two inputs"),
+    Rule("BPL253", INFO, "not exactly one sharded input"),
+    Rule("BPL254", INFO, "contract shard side is not the sharded input"),
+    Rule("BPL255", ERROR, "exchange shard_params not in the signature"),
+    Rule("BPL256", ERROR, "range exchange with multiple exchanged inputs"),
+    Rule("BPL257", ERROR, "split/order param outside the exchanged set"),
+    Rule("BPL258", INFO, "no exchanged input is sharded"),
+    Rule("BPL259", WARNING, "projection drops upstream partition keys"),
+    # pass 3a — determinism & cache safety
+    Rule("BPL301", WARNING, "nondeterministic call in model body"),
+    Rule("BPL302", WARNING, "mutable default argument"),
+    Rule("BPL303", WARNING, "memory-address-dependent value in model body"),
+    Rule("BPL304", WARNING, "environment read in model body"),
+    Rule("BPL305", WARNING, "mutable value captured by model closure"),
+    # pass 3b — internal lock-annotation lint
+    Rule("BPL401", ERROR, "lock-guarded field accessed outside its lock"),
+    Rule("BPL402", ERROR, "guard annotation names an unknown lock"),
+]}
+
+
+@dataclasses.dataclass(frozen=True)
+class Diagnostic:
+    code: str
+    message: str
+    severity: str = ""          # defaults to the rule's severity
+    model: str = ""             # offending model (or Class.method for 4xx)
+    column: str = ""            # offending column, when one exists
+    param: str = ""             # offending input parameter, when one exists
+    file: str = ""              # source file (CLI file mode / lock lint)
+    line: int = 0               # 1-based source line, when known
+
+    def __post_init__(self):
+        if not self.severity:
+            rule = RULES.get(self.code)
+            object.__setattr__(self, "severity",
+                               rule.severity if rule else ERROR)
+
+    def render(self) -> str:
+        where = self.model or (f"{self.file}:{self.line}" if self.file else "")
+        loc = f" [{where}]" if where else ""
+        return f"{self.code} {self.severity}{loc}: {self.message}"
+
+    def to_exception(self) -> BauplanError:
+        cls = (PlanError if self.code.startswith("BPL1")
+               else ContractError if self.code.startswith("BPL2")
+               else LintError)
+        return cls(self.message, code=self.code, model=self.model,
+                   column=self.column)
+
+
+@dataclasses.dataclass
+class Report:
+    """The analyzer's output: an ordered list of diagnostics plus the
+    schemas pass 1 inferred (model -> {column: dtype}, None = unknown)."""
+
+    diagnostics: List[Diagnostic] = dataclasses.field(default_factory=list)
+    schemas: Dict[str, Optional[Dict[str, str]]] = dataclasses.field(
+        default_factory=dict)
+
+    @property
+    def errors(self) -> List[Diagnostic]:
+        return [d for d in self.diagnostics if d.severity == ERROR]
+
+    @property
+    def warnings(self) -> List[Diagnostic]:
+        return [d for d in self.diagnostics if d.severity == WARNING]
+
+    @property
+    def ok(self) -> bool:
+        return not self.errors
+
+    def codes(self) -> List[str]:
+        return [d.code for d in self.diagnostics]
+
+    def by_code(self, code: str) -> List[Diagnostic]:
+        return [d for d in self.diagnostics if d.code == code]
+
+    def raise_first(self) -> None:
+        """Raise the first error-severity diagnostic as its typed
+        exception (PlanError / ContractError / LintError)."""
+        errs = self.errors
+        if errs:
+            raise errs[0].to_exception()
+
+    def render(self) -> str:
+        if not self.diagnostics:
+            return "check passed: no diagnostics"
+        lines = [d.render() for d in self.diagnostics]
+        lines.append(f"{len(self.errors)} error(s), "
+                     f"{len(self.warnings)} warning(s), "
+                     f"{len(self.diagnostics)} total")
+        return "\n".join(lines)
+
+
+__all__ = ["Diagnostic", "Report", "Rule", "RULES",
+           "ERROR", "WARNING", "INFO"]

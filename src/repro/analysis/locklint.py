@@ -1,0 +1,206 @@
+"""Pass 3b — repo-internal lock-annotation lint (BPL401/402).
+
+Convention: a field assigned in ``__init__`` with a trailing
+``# guard: <lockattr>`` comment is documented as guarded by
+``self.<lockattr>``. Outside ``__init__``, every read or write of that
+field must happen either
+
+  * lexically inside a ``with self.<lockattr>:`` block, or
+  * in a method whose ``def`` line carries ``# guard-held: <lockattr>``,
+    or whose docstring contains ``(lock held)`` (all class locks held —
+    the caller acquired them).
+
+This is a lexical check, not an escape analysis: it catches the classic
+drift where a new method (or a quick fix in an old one) touches engine
+state without taking ``_lock``, which is exactly how the scheduler races
+of the scale-up runtime are born. BPL402 flags a guard annotation naming
+a lock attribute the class never assigns — a typo that silently disables
+the whole check for that field.
+"""
+from __future__ import annotations
+
+import ast
+import io
+import re
+import tokenize
+from typing import Dict, List, Set
+
+from repro.analysis.diagnostics import Diagnostic
+
+GUARD = "# guard:"
+GUARD_HELD = "# guard-held:"
+LOCK_HELD_DOC = "(lock held)"
+
+
+def _line_comments(source: str) -> Dict[int, str]:
+    out: Dict[int, str] = {}
+    try:
+        for tok in tokenize.generate_tokens(io.StringIO(source).readline):
+            if tok.type == tokenize.COMMENT:
+                out[tok.start[0]] = tok.string
+    except tokenize.TokenError:
+        pass
+    return out
+
+
+_TAG_RE = re.compile(r"\w+(?:\s*,\s*\w+)*")
+
+
+def _tag(comment: str, marker: str) -> str:
+    """'# guard: _lock (notes)' -> '_lock'; '# guard-held: a, b' -> 'a, b'.
+    Empty when the marker is absent. Trailing prose after the lock name(s)
+    is ignored so annotations can carry explanations."""
+    idx = comment.find(marker[1:])          # marker sans leading '#'
+    if not comment.lstrip().startswith("#") or idx < 0:
+        return ""
+    m = _TAG_RE.match(comment[idx + len(marker) - 1:].lstrip())
+    return m.group(0) if m else ""
+
+
+def _self_attr(node: ast.AST) -> str:
+    if (isinstance(node, ast.Attribute)
+            and isinstance(node.value, ast.Name)
+            and node.value.id == "self"):
+        return node.attr
+    return ""
+
+
+def _held_locks(fdef, comments: Dict[int, str],
+                all_locks: Set[str]) -> Set[str]:
+    held: Set[str] = set()
+    for line in range(fdef.lineno, fdef.body[0].lineno):
+        tag = _tag(comments.get(line, ""), GUARD_HELD)
+        if tag:
+            held.update(t.strip() for t in tag.split(","))
+    doc = ast.get_docstring(fdef) or ""
+    if LOCK_HELD_DOC in doc:
+        held.update(all_locks)
+    return held
+
+
+class _MethodChecker(ast.NodeVisitor):
+    """Walks one method body tracking the set of locks lexically held."""
+
+    def __init__(self, cls_name: str, method: str, filename: str,
+                 guarded: Dict[str, str], held: Set[str]):
+        self.cls_name = cls_name
+        self.method = method
+        self.filename = filename
+        self.guarded = guarded          # field -> lock attr
+        self.held = set(held)
+        self.diags: List[Diagnostic] = []
+
+    def visit_With(self, node: ast.With) -> None:
+        acquired = {_self_attr(item.context_expr)
+                    for item in node.items} - {""}
+        before = set(self.held)
+        self.held |= acquired
+        for child in node.body:
+            self.visit(child)
+        self.held = before
+        # context expressions themselves run before the lock is held
+        for item in node.items:
+            if _self_attr(item.context_expr) == "":
+                self.visit(item.context_expr)
+
+    def visit_Attribute(self, node: ast.Attribute) -> None:
+        field = _self_attr(node)
+        lock = self.guarded.get(field, "")
+        if lock and lock not in self.held:
+            self.diags.append(Diagnostic(
+                "BPL401", f"{self.cls_name}.{self.method} touches "
+                f"self.{field} (guarded by self.{lock}) outside "
+                f"`with self.{lock}:`", model=f"{self.cls_name}.{self.method}",
+                column=field, file=self.filename, line=node.lineno))
+        self.generic_visit(node)
+
+    # nested defs/lambdas run later, possibly without the lock — but also
+    # possibly under it (worker callbacks). Skip them: out of lexical scope.
+    def visit_FunctionDef(self, node) -> None:
+        return
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def visit_Lambda(self, node) -> None:
+        return
+
+
+def lint_class(cls_node: ast.ClassDef, comments: Dict[int, str],
+               filename: str) -> List[Diagnostic]:
+    diags: List[Diagnostic] = []
+    methods = [n for n in cls_node.body
+               if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+    init = next((m for m in methods if m.name == "__init__"), None)
+    if init is None:
+        return []
+    # fields self.<attr> assigned anywhere in __init__, for BPL402
+    assigned: Set[str] = set()
+    for node in ast.walk(init):
+        if isinstance(node, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+            targets = (node.targets if isinstance(node, ast.Assign)
+                       else [node.target])
+            for t in targets:
+                a = _self_attr(t)
+                if a:
+                    assigned.add(a)
+    # `# guard: <lock>` annotations on __init__ assignment lines
+    guarded: Dict[str, str] = {}
+    for node in ast.walk(init):
+        if not isinstance(node, (ast.Assign, ast.AnnAssign)):
+            continue
+        tag = _tag(comments.get(node.lineno, ""), GUARD)
+        if not tag:
+            continue
+        targets = (node.targets if isinstance(node, ast.Assign)
+                   else [node.target])
+        for t in targets:
+            field = _self_attr(t)
+            if not field:
+                continue
+            if tag not in assigned:
+                diags.append(Diagnostic(
+                    "BPL402", f"{cls_node.name}.{field} is annotated "
+                    f"`guard: {tag}` but the class never assigns "
+                    f"self.{tag}", model=f"{cls_node.name}.__init__",
+                    column=field, file=filename, line=node.lineno))
+                continue
+            guarded[field] = tag
+    if not guarded:
+        return diags
+    all_locks = set(guarded.values())
+    for m in methods:
+        if m.name == "__init__":
+            continue            # construction is single-threaded
+        held = _held_locks(m, comments, all_locks)
+        checker = _MethodChecker(cls_node.name, m.name, filename,
+                                 guarded, held)
+        for stmt in m.body:
+            checker.visit(stmt)
+        diags.extend(checker.diags)
+    return diags
+
+
+def lint_module_source(source: str, filename: str) -> List[Diagnostic]:
+    try:
+        tree = ast.parse(source, filename)
+    except SyntaxError as exc:
+        return [Diagnostic("BPL000", f"syntax error: {exc.msg}",
+                           severity="error", file=filename,
+                           line=exc.lineno or 0)]
+    comments = _line_comments(source)
+    diags: List[Diagnostic] = []
+    for node in tree.body:
+        if isinstance(node, ast.ClassDef):
+            diags.extend(lint_class(node, comments, filename))
+    return diags
+
+
+def lint_files(paths) -> List[Diagnostic]:
+    diags: List[Diagnostic] = []
+    for path in paths:
+        with open(path, "r", encoding="utf-8") as fh:
+            diags.extend(lint_module_source(fh.read(), str(path)))
+    return diags
+
+
+__all__ = ["lint_class", "lint_files", "lint_module_source"]

@@ -1,0 +1,538 @@
+"""Pass 1 — schema & column-level lineage inference.
+
+Propagates output schemas through the logical DAG from three evidence
+sources, strongest first: catalog snapshots (source tables), contract
+declarations (GroupBy*/Join*/Sort*/Stats* carry their keys and agg maps as
+data), and a conservative AST reading of the model body. Inference NEVER
+guesses: a column set or dtype it can't prove is reported as unknown
+(schema ``None`` / dtype ``"?"``) and every downstream check involving it
+is skipped.
+
+Two products:
+
+  * diagnostics — unknown columns (BPL101), unknown filter columns
+    (BPL103), join-key dtype mismatches (BPL102), contract columns missing
+    upstream (BPL104);
+  * ``edge_read_columns`` — proven read sets for edges whose consumer
+    declared no ``columns=`` hint. The planner folds these into its column
+    union, so projection pushdown no longer collapses to "everything" the
+    moment one consumer omits the hint (lineage-driven pushdown).
+"""
+from __future__ import annotations
+
+import ast
+import inspect
+import textwrap
+from typing import Dict, FrozenSet, List, Optional, Tuple
+
+from repro.analysis.diagnostics import Diagnostic
+from repro.core.logical import build_logical_plan
+
+# dtype string for "column exists, dtype unknown"
+UNKNOWN = "?"
+
+_STATS_SCHEMA = {"column": "utf8", "null_count": "int64",
+                 "min": "float64", "max": "float64"}
+
+
+class _Unprovable(Exception):
+    """Raised internally when an AST value/usage can't be proven; every
+    handler turns it into 'read everything' / 'schema unknown'."""
+
+
+# ---------------------------------------------------------------------------
+# constant resolution: AST literals, plus the function's own globals and
+# closure cells (a model body that calls compute.group_by(t, KEYS, AGGS)
+# with module-level constants is still provable)
+# ---------------------------------------------------------------------------
+
+
+def _plain(v):
+    if v is None or isinstance(v, (str, int, float, bool)):
+        return v
+    if isinstance(v, (list, tuple)):
+        return [_plain(x) for x in v]
+    if isinstance(v, dict):
+        return {_plain(k): _plain(x) for k, x in v.items()}
+    raise _Unprovable
+
+
+def _const(node: ast.AST, fn) -> object:
+    if isinstance(node, ast.Constant):
+        return node.value
+    if isinstance(node, (ast.List, ast.Tuple)):
+        return [_const(e, fn) for e in node.elts]
+    if isinstance(node, ast.Dict):
+        if any(k is None for k in node.keys):    # {**spread}
+            raise _Unprovable
+        return {_const(k, fn): _const(v, fn)
+                for k, v in zip(node.keys, node.values)}
+    if isinstance(node, ast.Name) and fn is not None:
+        code = getattr(fn, "__code__", None)
+        if code is not None and node.id in code.co_freevars and fn.__closure__:
+            cell = fn.__closure__[code.co_freevars.index(node.id)]
+            try:
+                return _plain(cell.cell_contents)
+            except ValueError:
+                raise _Unprovable from None
+        if node.id in getattr(fn, "__globals__", {}):
+            return _plain(fn.__globals__[node.id])
+    raise _Unprovable
+
+
+def _fn_def(fn) -> Optional[ast.FunctionDef]:
+    try:
+        src = textwrap.dedent(inspect.getsource(fn))
+        tree = ast.parse(src)
+    except (OSError, TypeError, SyntaxError, IndentationError):
+        return None
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return node
+    return None
+
+
+def _dotted(node: ast.AST) -> str:
+    """'compute.group_by' for Attribute chains, 'group_by' for Names."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _call_tail(node: ast.Call) -> str:
+    """Last component of the called name: group_by for compute.group_by."""
+    name = _dotted(node.func)
+    return name.rsplit(".", 1)[-1] if name else ""
+
+
+# ---------------------------------------------------------------------------
+# read-set inference: which columns of `param` does the body touch?
+# ---------------------------------------------------------------------------
+
+# table-touching calls whose READ set is bounded regardless of where their
+# result flows: group_by's output contains only keys+aggs
+_REDUCING_CALLS = ("group_by", "partial_group_by")
+# attribute reads that touch no column data
+_SAFE_ATTRS = ("num_rows", "nbytes")
+
+
+def _group_by_read(node: ast.Call, fn) -> FrozenSet[str]:
+    if len(node.args) < 3:
+        raise _Unprovable
+    keys = _const(node.args[1], fn)
+    aggs = _const(node.args[2], fn)
+    if not isinstance(keys, list) or not isinstance(aggs, dict):
+        raise _Unprovable
+    cols = set()
+    for k in keys:
+        if not isinstance(k, str):
+            raise _Unprovable
+        cols.add(k)
+    for spec in aggs.values():
+        if not (isinstance(spec, list) and len(spec) == 2
+                and isinstance(spec[0], str)):
+            raise _Unprovable
+        cols.add(spec[0])
+    return frozenset(cols)
+
+
+def read_columns(fn, param: str) -> Optional[FrozenSet[str]]:
+    """The set of `param`'s columns the body of `fn` can touch, or None
+    when unprovable. Sound by construction: every occurrence of the
+    parameter must match a whitelisted access pattern, else the answer is
+    'everything'."""
+    fdef = _fn_def(fn)
+    if fdef is None:
+        return None
+    parents: Dict[ast.AST, ast.AST] = {}
+    for node in ast.walk(fdef):
+        for child in ast.iter_child_nodes(node):
+            parents[child] = node
+    cols: set = set()
+    try:
+        for node in ast.walk(fdef):
+            if not (isinstance(node, ast.Name) and node.id == param
+                    and isinstance(node.ctx, ast.Load)):
+                continue
+            parent = parents.get(node)
+            # param.column("lit")  /  param.num_rows
+            if isinstance(parent, ast.Attribute):
+                gp = parents.get(parent)
+                if (parent.attr == "column"
+                        and isinstance(gp, ast.Call) and gp.func is parent
+                        and len(gp.args) == 1):
+                    c = _const(gp.args[0], fn)
+                    if not isinstance(c, str):
+                        raise _Unprovable
+                    cols.add(c)
+                    continue
+                if (parent.attr == "project"
+                        and isinstance(gp, ast.Call) and gp.func is parent
+                        and len(gp.args) == 1):
+                    sel = _const(gp.args[0], fn)
+                    if not (isinstance(sel, list)
+                            and all(isinstance(c, str) for c in sel)):
+                        raise _Unprovable
+                    cols.update(sel)
+                    continue
+                if parent.attr in _SAFE_ATTRS:
+                    continue
+                raise _Unprovable
+            # param["lit"]
+            if (isinstance(parent, ast.Subscript)
+                    and parent.value is node):
+                c = _const(parent.slice, fn)
+                if not isinstance(c, str):
+                    raise _Unprovable
+                cols.add(c)
+                continue
+            # compute.group_by(param, keys, aggs): result holds only
+            # keys+aggs, so the read set is bounded wherever it flows
+            if (isinstance(parent, ast.Call) and node in parent.args
+                    and parent.args[0] is node
+                    and _call_tail(parent) in _REDUCING_CALLS):
+                cols |= _group_by_read(parent, fn)
+                continue
+            raise _Unprovable
+    except _Unprovable:
+        return None
+    return frozenset(cols)
+
+
+def _contract_read_set(spec, param: str) -> Optional[FrozenSet[str]]:
+    """Read set implied by a group-by contract on `param`: keys + agg
+    sources. The contract already asserts the body IS that aggregation —
+    the same trust the planner's rewrite rests on."""
+    c = getattr(spec, "combinable", None)
+    if c is not None and c.kind == "group_by" and c.keys and c.aggs:
+        target = c.shard_param or (spec.inputs[0][0]
+                                   if len(spec.inputs) == 1 else "")
+        if param == target:
+            return frozenset(c.keys) | {src for _, (src, _) in c.aggs}
+    x = getattr(spec, "exchange", None)
+    if x is not None and x.kind == "group_by" and x.keys and x.aggs:
+        if len(spec.inputs) == 1 and param == spec.inputs[0][0]:
+            return frozenset(x.keys) | {src for _, (src, _) in x.aggs}
+    return None
+
+
+def edge_read_columns(project, targets=None
+                      ) -> Dict[Tuple[str, str], Tuple[str, ...]]:
+    """Proven read sets for every (consumer, ref_id) edge whose consumer
+    declared no columns= hint. Sorted tuples keep scan cache keys
+    deterministic across runs."""
+    logical = build_logical_plan(project, targets)
+    out: Dict[Tuple[str, str], Tuple[str, ...]] = {}
+    for node in logical.function_nodes():
+        spec = node.spec
+        for param, ref in spec.inputs:
+            if ref.columns is not None:
+                continue
+            cols = read_columns(spec.fn, param)
+            if cols is None:
+                cols = _contract_read_set(spec, param)
+            # an empty proven set stays un-pushed: a zero-column projection
+            # would also drop the row count a body may read via num_rows
+            if cols:
+                out[(spec.name, ref.ref_id)] = tuple(sorted(cols))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# output-schema inference
+# ---------------------------------------------------------------------------
+
+
+def _agg_dtype(src_dtype: Optional[str], fn: str) -> str:
+    if fn == "count":
+        return "int64"
+    if fn == "mean":
+        return "float64"
+    if src_dtype in (None, UNKNOWN):
+        return UNKNOWN
+    return src_dtype     # sum/min/max preserve the input dtype
+
+
+def _group_by_schema(keys, aggs, in_schema: Optional[Dict[str, str]]
+                     ) -> Dict[str, str]:
+    out = {k: (in_schema or {}).get(k, UNKNOWN) for k in keys}
+    for out_name, (src, fn) in aggs:
+        out[out_name] = _agg_dtype((in_schema or {}).get(src), fn)
+    return out
+
+
+def _join_schema(probe: Optional[Dict[str, str]],
+                 build: Optional[Dict[str, str]],
+                 on, suffix: str) -> Optional[Dict[str, str]]:
+    if probe is None or build is None:
+        return None
+    out = dict(probe)       # mirrors compute._assemble_join column naming
+    for n, dt in build.items():
+        if n in on:
+            continue
+        out[n if n not in out else n + suffix] = dt
+    return out
+
+
+def _fingerprint_field(contract, index: int, default):
+    """Contracts fold their construction args into a literal-evaluable
+    fingerprint repr; field `index` recovers one (e.g. a join suffix)."""
+    try:
+        t = ast.literal_eval(contract.fingerprint)
+        return t[index]
+    except Exception:
+        return default
+
+
+def _contract_schema(spec, in_schemas: Dict[str, Optional[Dict[str, str]]]
+                     ) -> Optional[Dict[str, str]]:
+    c = getattr(spec, "combinable", None)
+    if c is not None:
+        if c.kind == "group_by" and c.keys:
+            target = c.shard_param or spec.inputs[0][0]
+            return _group_by_schema(c.keys, c.aggs, in_schemas.get(target))
+        if c.kind == "column_stats":
+            return dict(_STATS_SCHEMA)
+        if c.kind == "join" and len(spec.inputs) == 2 and c.keys:
+            probe_p = c.shard_param
+            build_p = next((p for p, _ in spec.inputs if p != probe_p), "")
+            return _join_schema(in_schemas.get(probe_p),
+                               in_schemas.get(build_p), c.keys,
+                               _fingerprint_field(c, 3, "_r"))
+    x = getattr(spec, "exchange", None)
+    if x is not None:
+        if x.kind == "sort" and len(spec.inputs) == 1:
+            return in_schemas.get(spec.inputs[0][0])
+        if x.kind == "group_by" and len(spec.inputs) == 1 and x.keys:
+            return _group_by_schema(x.keys, x.aggs,
+                                    in_schemas.get(spec.inputs[0][0]))
+        if x.kind == "join" and len(x.shard_params) == 2:
+            probe_p = x.order_param
+            build_p = next((p for p in x.shard_params if p != probe_p), "")
+            return _join_schema(in_schemas.get(probe_p),
+                               in_schemas.get(build_p), x.keys,
+                               _fingerprint_field(x, 4, "_r"))
+    return None
+
+
+# body calls that return their table argument's schema unchanged
+_PASSTHROUGH_CALLS = ("filter_table", "sort_by")
+
+
+def _return_schema(node: ast.AST, fn, params,
+                   in_schemas: Dict[str, Optional[Dict[str, str]]]
+                   ) -> Optional[Dict[str, str]]:
+    # return {"a": ..., "b": ...}
+    if isinstance(node, ast.Dict):
+        try:
+            out = {}
+            for k in node.keys:
+                if not (isinstance(k, ast.Constant)
+                        and isinstance(k.value, str)):
+                    raise _Unprovable
+                out[k.value] = UNKNOWN
+            return out
+        except _Unprovable:
+            return None
+    # return data
+    if isinstance(node, ast.Name) and node.id in params:
+        return in_schemas.get(node.id)
+    if isinstance(node, ast.Call):
+        tail = _call_tail(node)
+        args = node.args
+        first_param = (args[0].id if args
+                       and isinstance(args[0], ast.Name)
+                       and args[0].id in params else None)
+        if tail in _PASSTHROUGH_CALLS and first_param:
+            return in_schemas.get(first_param)
+        if tail in _REDUCING_CALLS and first_param:
+            try:
+                keys = _const(args[1], fn)
+                aggs = _const(args[2], fn)
+                return _group_by_schema(
+                    keys, [(o, tuple(s)) for o, s in aggs.items()],
+                    in_schemas.get(first_param))
+            except (_Unprovable, IndexError, TypeError, ValueError):
+                return None
+        if tail == "stats_table" and first_param:
+            return dict(_STATS_SCHEMA)
+        if tail == "hash_join" and len(args) >= 3:
+            lp = (args[0].id if isinstance(args[0], ast.Name)
+                  and args[0].id in params else None)
+            rp = (args[1].id if isinstance(args[1], ast.Name)
+                  and args[1].id in params else None)
+            if lp and rp:
+                try:
+                    on = _const(args[2], fn)
+                except _Unprovable:
+                    return None
+                return _join_schema(in_schemas.get(lp), in_schemas.get(rp),
+                                    on, "_r")
+        # param.project([...])
+        if (isinstance(node.func, ast.Attribute)
+                and node.func.attr == "project"
+                and isinstance(node.func.value, ast.Name)
+                and node.func.value.id in params and len(args) == 1):
+            src = in_schemas.get(node.func.value.id)
+            try:
+                sel = _const(args[0], fn)
+            except _Unprovable:
+                return None
+            if src is None or not isinstance(sel, list):
+                return None
+            return {c: src.get(c, UNKNOWN) for c in sel}
+    return None
+
+
+def infer_output_schema(spec,
+                        in_schemas: Dict[str, Optional[Dict[str, str]]]
+                        ) -> Optional[Dict[str, str]]:
+    """The model's output schema, or None when unprovable. Contract
+    declarations win (they're what the planner rewrites on); otherwise a
+    single-return body in a recognized shape is read off the AST."""
+    sch = _contract_schema(spec, in_schemas)
+    if sch is not None:
+        return sch
+    fdef = _fn_def(spec.fn)
+    if fdef is None:
+        return None
+    returns = [n for n in ast.walk(fdef) if isinstance(n, ast.Return)]
+    if len(returns) != 1 or returns[0].value is None:
+        return None
+    params = {p for p, _ in spec.inputs}
+    return _return_schema(returns[0].value, spec.fn, params, in_schemas)
+
+
+# ---------------------------------------------------------------------------
+# pass driver
+# ---------------------------------------------------------------------------
+
+
+def _dtype_family(dt: str) -> str:
+    return "utf8" if dt == "utf8" else "numeric"
+
+
+def _contract_column_checks(spec, in_schemas
+                            ) -> List[Diagnostic]:
+    diags: List[Diagnostic] = []
+    name = spec.name
+
+    def need(param: str, col: str, what: str) -> None:
+        sch = in_schemas.get(param)
+        if sch is not None and col not in sch:
+            diags.append(Diagnostic(
+                "BPL104", f"model {name!r}: contract {what} column {col!r} "
+                f"is not produced upstream of input {param!r} "
+                f"(has {sorted(sch)})", model=name, column=col, param=param))
+
+    def join_checks(on, probe_p: str, build_p: str) -> None:
+        for k in on:
+            need(probe_p, k, "join key")
+            need(build_p, k, "join key")
+            ps, bs = in_schemas.get(probe_p), in_schemas.get(build_p)
+            if ps is None or bs is None:
+                continue
+            pd, bd = ps.get(k), bs.get(k)
+            if not pd or not bd or UNKNOWN in (pd, bd):
+                continue
+            if pd != bd:
+                severe = _dtype_family(pd) != _dtype_family(bd)
+                diags.append(Diagnostic(
+                    "BPL102", f"model {name!r}: join key {k!r} is {pd} on "
+                    f"{probe_p!r} but {bd} on {build_p!r}"
+                    + ("" if severe else " (numeric widths differ)"),
+                    severity="error" if severe else "warning",
+                    model=name, column=k))
+
+    c = getattr(spec, "combinable", None)
+    if c is not None and c.kind == "group_by" and c.keys:
+        target = c.shard_param or (spec.inputs[0][0] if spec.inputs else "")
+        for k in c.keys:
+            need(target, k, "group key")
+        for _, (src, _) in c.aggs:
+            need(target, src, "agg source")
+    if c is not None and c.kind == "join" and len(spec.inputs) == 2 \
+            and c.keys:
+        probe_p = c.shard_param
+        build_p = next((p for p, _ in spec.inputs if p != probe_p), "")
+        join_checks(c.keys, probe_p, build_p)
+    x = getattr(spec, "exchange", None)
+    if x is not None and x.kind == "join" and len(x.shard_params) == 2:
+        probe_p = x.order_param
+        build_p = next((p for p in x.shard_params if p != probe_p), "")
+        join_checks(x.keys, probe_p, build_p)
+    elif x is not None and x.keys:
+        # group_by/sort/custom exchanges hash- or range-partition every
+        # exchanged input on x.keys — the keys must exist there
+        exchanged = (list(x.shard_params) if x.shard_params
+                     else [p for p, _ in spec.inputs])
+        what = "sort" if x.kind == "sort" else "partition"
+        for p in exchanged:
+            if p not in in_schemas:
+                continue
+            for k in x.keys:
+                need(p, k, f"{what} key")
+        for _, (src, _) in getattr(x, "aggs", ()):
+            if len(spec.inputs) == 1:
+                need(spec.inputs[0][0], src, "agg source")
+    return diags
+
+
+def analyze_schemas(project, targets=None,
+                    source_schemas: Optional[Dict[str, Dict[str, str]]] = None
+                    ) -> Tuple[Dict[str, Optional[Dict[str, str]]],
+                               List[Diagnostic]]:
+    """Walk the logical DAG inferring every model's output schema and
+    collecting pass-1 diagnostics. `source_schemas` maps source-table name
+    -> {column: dtype} (from catalog snapshots); unknown sources simply
+    disable the checks that would need them."""
+    logical = build_logical_plan(project, targets)
+    schemas: Dict[str, Optional[Dict[str, str]]] = {}
+    diags: List[Diagnostic] = []
+    for name in logical.order:
+        node = logical.nodes[name]
+        if node.kind == "source":
+            schemas[name] = (source_schemas or {}).get(name)
+            continue
+        spec = node.spec
+        in_schemas: Dict[str, Optional[Dict[str, str]]] = {}
+        for param, ref in spec.inputs:
+            parent = schemas.get(ref.name)
+            if parent is None:
+                in_schemas[param] = None
+                continue
+            if ref.columns is not None:
+                for c in ref.columns:
+                    if c not in parent:
+                        diags.append(Diagnostic(
+                            "BPL101", f"model {name!r} selects column {c!r} "
+                            f"of {ref.name!r}, which only produces "
+                            f"{sorted(parent)}", model=name, column=c,
+                            param=param))
+                eff = {c: parent[c] for c in ref.columns if c in parent}
+            else:
+                eff = dict(parent)
+            try:
+                pred = ref.predicate()
+            except ValueError:
+                pred = None
+            if pred is not None:
+                for c in pred.referenced_columns():
+                    if c not in parent:
+                        diags.append(Diagnostic(
+                            "BPL103", f"model {name!r} filters {ref.name!r} "
+                            f"on unknown column {c!r} (has {sorted(parent)})",
+                            model=name, column=c, param=param))
+            in_schemas[param] = eff
+        diags.extend(_contract_column_checks(spec, in_schemas))
+        schemas[name] = infer_output_schema(spec, in_schemas)
+    return schemas, diags
+
+
+__all__ = ["analyze_schemas", "edge_read_columns", "infer_output_schema",
+           "read_columns", "UNKNOWN"]

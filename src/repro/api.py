@@ -25,14 +25,46 @@
 from __future__ import annotations
 
 import threading
-from typing import Callable, Dict, List, Optional, Sequence, Union
+from typing import Callable, Dict, List, Optional, Sequence
 
+from repro.core.errors import ContractError
 from repro.core.spec import (CombineContract, EnvSpec, ExchangeContract,
                              FunctionSpec, ModelRef, ResourceHint,
                              extract_inputs)
 
 _ENV_ATTR = "__repro_env__"
 _RES_ATTR = "__repro_resources__"
+
+
+def _check_keys(keys, what: str) -> tuple:
+    keys = tuple(keys)
+    if not keys:
+        raise ContractError(f"{what} requires at least one key column "
+                            "(empty key tuple)", code="BPL202")
+    return keys
+
+
+def _check_aggs(aggs: Dict[str, tuple], what: str) -> dict:
+    """Aggs must be {out: (src, fn)} with fn two-phase combinable: anything
+    outside compute.AGG_FUNCS (a median, a mode, ...) is holistic — its
+    per-shard states don't merge, so declaring it would produce silently
+    wrong results (or crash) mid-run."""
+    from repro.columnar.compute import AGG_FUNCS
+
+    aggs = dict(aggs)
+    for out, spec in aggs.items():
+        if not (isinstance(spec, tuple) and len(spec) == 2):
+            raise ContractError(
+                f"{what} agg {out!r} must be a (source_column, fn) pair, "
+                f"got {spec!r}", code="BPL204", column=out)
+        src, fn = spec
+        if fn not in AGG_FUNCS:
+            raise ContractError(
+                f"{what} agg {out!r} uses {fn!r}, which is not a "
+                f"distributive/algebraic aggregate {AGG_FUNCS} — holistic "
+                "aggregations (median, mode, ...) have no mergeable "
+                "per-shard state", code="BPL204", column=out)
+    return aggs
 
 
 # ---------------------------------------------------------------------------
@@ -60,7 +92,8 @@ def GroupByCombine(keys: Sequence[str], aggs: Dict[str, tuple],
     carry the kernels' float32 profile rather than exact numpy bytes."""
     from repro.columnar import compute
 
-    keys, aggs = list(keys), dict(aggs)
+    keys = list(_check_keys(keys, "GroupByCombine"))
+    aggs = _check_aggs(aggs, "GroupByCombine")
 
     def partial(**kw):
         (table,) = kw.values()
@@ -71,7 +104,9 @@ def GroupByCombine(keys: Sequence[str], aggs: Dict[str, tuple],
 
     return CombineContract("group_by", partial, combine,
                            fingerprint=repr((keys, sorted(aggs.items()),
-                                             backend)))
+                                             backend)),
+                           keys=tuple(keys),
+                           aggs=tuple(sorted(aggs.items())))
 
 
 def JoinCombine(on: Sequence[str], probe: str, how: str = "inner",
@@ -82,9 +117,14 @@ def JoinCombine(on: Sequence[str], probe: str, how: str = "inner",
     shard probes locally; the combine is an ordered concat (inner only)."""
     from repro.columnar import compute
 
-    on = list(on)
+    on = list(_check_keys(on, "JoinCombine"))
     if how != "inner":
-        raise ValueError("only inner joins are shard-combinable")
+        # the combine is an ordered concat of shard-local probe results; a
+        # left join can't tell a local miss from a hit in another shard's
+        # build rows, so the concat would fabricate null-padded rows
+        raise ContractError("only inner joins are shard-combinable "
+                            f"(got how={how!r}); declare bp.JoinExchange "
+                            "for left joins", code="BPL205")
 
     def partial(**kw):
         probe_t = kw.pop(probe)
@@ -97,7 +137,8 @@ def JoinCombine(on: Sequence[str], probe: str, how: str = "inner",
 
     return CombineContract("join", partial, compute.combine_join,
                            shard_param=probe,
-                           fingerprint=repr((on, probe, how, suffix)))
+                           fingerprint=repr((on, probe, how, suffix)),
+                           keys=tuple(on))
 
 
 def StatsCombine() -> CombineContract:
@@ -130,8 +171,23 @@ def exchangeable(partition: Callable, keys: Sequence[str],
     whole), and the built-in `merge` reassembles the partition outputs.
     The contract is ``fn(inputs) == merge([partition(slice_j(inputs))])``."""
     if merge not in ("concat", "keys", "order"):
-        raise ValueError(f"unknown merge {merge!r}")
-    return ExchangeContract("custom", tuple(keys), partition, merge=merge,
+        raise ContractError(f"unknown merge {merge!r} (expected 'concat', "
+                            "'keys' or 'order')", code="BPL203")
+    if mode not in ("hash", "range"):
+        raise ContractError(f"unknown mode {mode!r} (expected 'hash' or "
+                            "'range')", code="BPL203")
+    keys = _check_keys(keys, "exchangeable")
+    if split_param and (merge != "order" or not order_param):
+        # a row-range sub-split reorders the partition's output relative to
+        # an unsplit run; only the "order" merge (hidden __xord__ sort) can
+        # restore the exact unsharded row order afterwards. "keys"/"concat"
+        # merges over sub-split partials would emit partial groups / broken
+        # ranges.
+        raise ContractError(
+            f"split_param={split_param!r} requires merge='order' with an "
+            "order_param (skew re-splits are only order-restorable through "
+            "the hidden order column)", code="BPL206", column=split_param)
+    return ExchangeContract("custom", keys, partition, merge=merge,
                             mode=mode, shard_params=tuple(shard_params),
                             order_param=order_param, split_param=split_param,
                             descending=descending)
@@ -150,9 +206,10 @@ def JoinExchange(on: Sequence[str], probe: str, build: str,
     row-range re-splits (the build partition is consumed whole per sub)."""
     from repro.columnar import compute
 
-    on = list(on)
+    on = list(_check_keys(on, "JoinExchange"))
     if how not in ("inner", "left"):
-        raise ValueError(f"unsupported join {how!r}")
+        raise ContractError(f"unsupported join {how!r} (expected 'inner' or "
+                            "'left')", code="BPL203")
 
     def partition(**kw):
         probe_t = kw.pop(probe)
@@ -177,7 +234,7 @@ def SortExchange(by: Sequence[str],
     global sort, byte-identical to sorting the gathered table."""
     from repro.columnar import compute
 
-    by = list(by)
+    by = list(_check_keys(by, "SortExchange"))
 
     def partition(**kw):
         (table,) = kw.values()
@@ -198,7 +255,8 @@ def GroupByExchange(keys: Sequence[str],
     the partitions without ever gathering raw rows."""
     from repro.columnar import compute
 
-    keys, aggs = list(keys), dict(aggs)
+    keys = list(_check_keys(keys, "GroupByExchange"))
+    aggs = _check_aggs(aggs, "GroupByExchange")
 
     def partition(**kw):
         (table,) = kw.values()
@@ -206,13 +264,43 @@ def GroupByExchange(keys: Sequence[str],
 
     return ExchangeContract("group_by", tuple(keys), partition, merge="keys",
                             mode="hash",
-                            fingerprint=repr((keys, sorted(aggs.items()))))
+                            fingerprint=repr((keys, sorted(aggs.items()))),
+                            aggs=tuple(sorted(aggs.items())))
 
 
 def Model(name: str, columns: Optional[Sequence[str]] = None,
           filter: Optional[str] = None) -> ModelRef:
     """Reference a parent dataframe by name, with optional pushdown hints."""
     return ModelRef.create(name, columns, filter)
+
+
+def _validate_contract_params(spec: FunctionSpec) -> None:
+    """Decoration-time check that every input param a contract names exists
+    in the model's signature. A contract probing a param the function
+    doesn't have is statically DEAD — the planner guard would decline it on
+    every run and the model would silently gather forever — so it's an
+    error at the `@bp.model` site, named after the offending model.
+
+    Signature-count mismatches (a join contract on a three-input model, an
+    unnamed contract on a multi-input model) stay plan-time guard declines:
+    `repro.analysis` explain mode reports them as BPL251/BPL252."""
+    params = {p for p, _ in spec.inputs}
+
+    def _need(pname: str, what: str) -> None:
+        if pname and pname not in params:
+            raise ContractError(
+                f"model {spec.name!r}: {what}={pname!r} does not name an "
+                f"input parameter (has {sorted(params)})",
+                code="BPL201", model=spec.name)
+
+    if spec.combinable is not None:
+        _need(spec.combinable.shard_param, "shard_param")
+    if spec.exchange is not None:
+        xc = spec.exchange
+        for p in xc.shard_params:
+            _need(p, "shard_params entry")
+        _need(xc.order_param, "order_param")
+        _need(xc.split_param, "split_param")
 
 
 class Project:
@@ -245,8 +333,9 @@ class Project:
         partitions and the operator runs once per partition, shard-local end
         to end — raw rows cross workers once, partition-addressed."""
         if combinable is not None and exchange is not None:
-            raise ValueError("a model declares combinable= or exchange=, "
-                             "not both (the rewrites are exclusive)")
+            raise ContractError("a model declares combinable= or exchange=, "
+                                "not both (the rewrites are exclusive)",
+                                code="BPL200")
 
         def deco(fn: Callable) -> Callable:
             spec = FunctionSpec(
@@ -260,6 +349,7 @@ class Project:
                 combinable=combinable,
                 exchange=exchange,
             )
+            _validate_contract_params(spec)
             with self._lock:
                 if spec.name in self.functions:
                     raise ValueError(f"duplicate model {spec.name!r} in project "
@@ -323,19 +413,43 @@ def resources(*args, **kwargs):
     return _default_project.resources(*args, **kwargs)
 
 
+def check(project: Optional[Project] = None, *, catalog=None,
+          branch: str = "main", targets: Optional[Sequence[str]] = None,
+          sharded: Optional[Sequence[str]] = None):
+    """Statically analyze a project without executing it: schema & column
+    lineage (pass 1), contract conformance + rewrite-guard explain (pass 2),
+    determinism / cache-safety lint (pass 3). Returns a
+    ``repro.analysis.Report``; pass a catalog to validate against real
+    source-table schemas."""
+    from repro.analysis import check_project
+
+    return check_project(project or _default_project, catalog=catalog,
+                         branch=branch, targets=targets, sharded=sharded)
+
+
 def run(project: Optional[Project] = None, *, catalog=None, cluster=None,
         branch: str = "main", targets: Optional[Sequence[str]] = None,
         client=None, run_id: Optional[str] = None,
         shard_threshold_bytes: Optional[int] = None,
-        max_shards: Optional[int] = None):
-    """Plan + execute a project. Thin wrapper over core.runtime.execute_run."""
+        max_shards: Optional[int] = None,
+        validate: str = "off",
+        lineage_pushdown: bool = True):
+    """Plan + execute a project. Thin wrapper over core.runtime.execute_run.
+
+    ``validate="strict"`` runs the static analyzer first and raises the
+    first error-severity diagnostic (PlanError/ContractError/LintError);
+    ``"warn"`` reports diagnostics through the client event stream and
+    continues; ``"off"`` (default) skips analysis. ``lineage_pushdown``
+    lets the analyzer's proven column read sets narrow scans and gathers
+    for consumers that declared no ``columns=`` hint."""
     from repro.core.runtime import execute_run
 
     return execute_run(project or _default_project, catalog=catalog,
                        cluster=cluster, branch=branch, targets=targets,
                        client=client, run_id=run_id,
                        shard_threshold_bytes=shard_threshold_bytes,
-                       max_shards=max_shards)
+                       max_shards=max_shards, validate=validate,
+                       lineage_pushdown=lineage_pushdown)
 
 
 def submit(project: Optional[Project] = None, *, cluster,
@@ -343,17 +457,21 @@ def submit(project: Optional[Project] = None, *, cluster,
            client=None, run_id: Optional[str] = None,
            shard_threshold_bytes: Optional[int] = None,
            max_shards: Optional[int] = None,
-           priority: int = 0):
+           priority: int = 0,
+           validate: str = "off",
+           lineage_pushdown: bool = True):
     """Submit a run without blocking: returns a RunHandle whose `.wait()`
     yields the RunResult. Concurrent submissions share the cluster's worker
     fleet and caches through one event-driven engine (`cluster` may be a
     LocalCluster or a process-isolated remote.RemoteCluster). Scans/row-wise
     functions over `shard_threshold_bytes` split into up to `max_shards`
     shard tasks spread across the fleet. A higher `priority` wins contended
-    worker slots over lower-priority concurrent runs (FIFO on ties)."""
+    worker slots over lower-priority concurrent runs (FIFO on ties).
+    `validate`/`lineage_pushdown` are as in ``bp.run``."""
     from repro.core.runtime import submit_run
 
     return submit_run(project or _default_project, cluster, branch=branch,
                       targets=targets, client=client, run_id=run_id,
                       shard_threshold_bytes=shard_threshold_bytes,
-                      max_shards=max_shards, priority=priority)
+                      max_shards=max_shards, priority=priority,
+                      validate=validate, lineage_pushdown=lineage_pushdown)

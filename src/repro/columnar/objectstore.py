@@ -15,7 +15,6 @@ default is no simulation (pure local I/O) — benchmark tables report both.
 """
 from __future__ import annotations
 
-import io
 import os
 import time
 import uuid

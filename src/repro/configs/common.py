@@ -9,7 +9,7 @@ scans over groups — compile time stays O(pattern), not O(n_layers).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Tuple
 
 # mixer kinds: attn | attn_local | mamba | mlstm | slstm
 # ffn kinds:   dense | moe | none

@@ -4,7 +4,9 @@
 # fault-tolerant scheduling).
 from repro.core.spec import (CombineContract, EnvSpec, ExchangeContract,
                              FunctionSpec, ModelRef, ResourceHint)
-from repro.core.logical import LogicalPlan, PlanError, build_logical_plan
+from repro.core.errors import (BauplanError, ContractError, LintError,
+                               PlanError)
+from repro.core.logical import LogicalPlan, build_logical_plan
 from repro.core.physical import (CombineTask, FunctionTask, GatherTask,
                                  PartitionTask, PhysicalPlan, PlacementHint,
                                  Planner, ScanTask, ShuffleMergeTask,
@@ -22,7 +24,8 @@ from repro.core.scheduler import Scheduler
 __all__ = [
     "CombineContract", "EnvSpec", "ExchangeContract", "FunctionSpec",
     "ModelRef", "ResourceHint",
-    "LogicalPlan", "PlanError", "build_logical_plan",
+    "BauplanError", "ContractError", "LintError", "PlanError",
+    "LogicalPlan", "build_logical_plan",
     "CombineTask", "FunctionTask", "GatherTask", "PartitionTask",
     "PhysicalPlan", "PlacementHint", "Planner", "ScanTask",
     "ShuffleMergeTask", "ShuffleSampleTask", "ShuffleWriteTask",

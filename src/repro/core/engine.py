@@ -34,13 +34,13 @@ import itertools
 import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
-from typing import Dict, List, Optional, Sequence, Set, Tuple, TYPE_CHECKING
+from typing import Dict, List, Optional, Set, Tuple, TYPE_CHECKING
 
 from repro.core import defaults
 from repro.core.channels import TableHandle
 from repro.core.journal import RunJournal
 from repro.core.physical import (FunctionTask, InputEdge, PartitionTask,
-                                 PhysicalPlan, PlacementHint, ScanTask,
+                                 PhysicalPlan, PlacementHint,
                                  ShuffleWriteTask, WorkerProfile, _key_hash)
 from repro.core.runtime import (Client, Event, HandleUnavailable, TaskError,
                                 Worker, WorkerFailure)
@@ -61,7 +61,7 @@ class HandleMap:
     inside `Worker.execute` while completion callbacks mutate it."""
 
     def __init__(self):
-        self._handles: Dict[str, TableHandle] = {}
+        self._handles: Dict[str, TableHandle] = {}    # guard: _lock
         self._lock = threading.Lock()
 
     def get(self, task_id: str) -> Optional[TableHandle]:
@@ -252,18 +252,18 @@ class ExecutionEngine:
         self.skew_factor = skew_factor
         self.skew_min_bytes = skew_min_bytes
         self._lock = threading.RLock()
-        self._runs: List[_RunState] = []
-        self._load: Dict[str, int] = {}          # worker_id -> inflight tasks
-        self._mem: Dict[str, int] = {}           # worker_id -> inflight bytes
+        self._runs: List[_RunState] = []         # guard: _lock
+        self._load: Dict[str, int] = {}          # guard: _lock (inflight tasks)
+        self._mem: Dict[str, int] = {}           # guard: _lock (inflight bytes)
         # one ready heap across all runs: (-priority, seq, tid, state); seq
         # is engine-global and unique, so equal-priority entries pop FIFO
         # and the comparison never reaches the unorderable state object
-        self._ready: List[Tuple[int, int, str, _RunState]] = []
-        self._seq = itertools.count()
+        self._ready: List[Tuple[int, int, str, _RunState]] = []  # guard: _lock
+        self._seq = itertools.count()            # guard: _lock
         self._pool = ThreadPoolExecutor(
             max_workers=self._pool_size(len(cluster.workers)),
             thread_name_prefix="engine")
-        self._closed = False
+        self._closed = False                     # guard: _lock
 
     def _pool_size(self, n_workers: int) -> int:
         return max(16, self.worker_queue_depth * (n_workers + 2))
@@ -380,7 +380,8 @@ class ExecutionEngine:
 
     # -- placement: late binding -------------------------------------------
     def _select_worker(self, state: _RunState, task, exclude: Set[str],
-                       allow_provision: bool = True) -> Optional[Worker]:
+                       allow_provision: bool = True  # guard-held: _lock
+                       ) -> Optional[Worker]:
         """Bind a worker now, from actual load/liveness: group-pinned if
         possible, else least-loaded whose memory fits; provision on-demand
         when nothing fits (unless the caller forbids it — speculation must
@@ -477,7 +478,7 @@ class ExecutionEngine:
             heapq.heappush(self._ready, entry)
 
     def _launch(self, state: _RunState, tid: str, worker: Worker,
-                speculative: bool = False) -> None:
+                speculative: bool = False) -> None:  # guard-held: _lock
         task = state.plan.tasks[tid]
         state.attempts[tid] += 1
         info = state.inflight.setdefault(

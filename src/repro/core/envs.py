@@ -30,7 +30,7 @@ import tarfile
 import threading
 import time
 import uuid
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Tuple
 
 from repro.core.spec import EnvSpec
 

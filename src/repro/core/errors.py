@@ -1,0 +1,64 @@
+"""Unified exception taxonomy for plan-time failures.
+
+Every defect the static analyzer (``repro.analysis``) or the planner can
+prove before execution is raised through one of these types, each carrying
+the stable ``BPL###`` lint code, the offending model, and (when relevant)
+the offending column — so callers and CI can match on structure instead of
+message strings.
+
+All types subclass ``ValueError`` so pre-existing ``except ValueError``
+call sites and tests keep working.
+"""
+from __future__ import annotations
+
+
+class BauplanError(ValueError):
+    """Base for all plan-time diagnostics raised as exceptions.
+
+    Attributes:
+        code:   stable lint code ("BPL203"), or "" when no rule applies.
+        model:  name of the model the defect was found on, or "".
+        column: offending column name, or "".
+    """
+
+    def __init__(self, message: str, *, code: str = "",
+                 model: str = "", column: str = "") -> None:
+        super().__init__(message)
+        self.code = code
+        self.model = model
+        self.column = column
+
+    def __str__(self) -> str:  # "BPL203 [model]: message"
+        msg = super().__str__()
+        prefix = ""
+        if self.code:
+            prefix += self.code + " "
+        if self.model:
+            prefix += f"[{self.model}] "
+        if prefix and not msg.startswith(prefix.rstrip()):
+            return prefix + msg
+        return msg
+
+
+class PlanError(BauplanError):
+    """The declared DAG cannot be planned: unknown targets, cycles, unknown
+    columns, schema conflicts (BPL1xx)."""
+
+
+class ContractError(PlanError):
+    """A ``combinable=``/``exchange=`` contract is malformed or can never
+    fire (BPL2xx)."""
+
+
+class LintError(BauplanError):
+    """A determinism / cache-safety / internal-concurrency lint finding
+    escalated to an error (BPL3xx / BPL4xx)."""
+
+
+def plan_error(message: str, *, code: str = "", model: str = "",
+               column: str = "") -> PlanError:
+    return PlanError(message, code=code, model=model, column=column)
+
+
+__all__ = ["BauplanError", "PlanError", "ContractError", "LintError",
+           "plan_error"]

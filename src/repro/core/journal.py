@@ -15,7 +15,7 @@ import json
 import os
 import threading
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 
 class RunJournal:

@@ -10,14 +10,13 @@ from __future__ import annotations
 import dataclasses
 from typing import TYPE_CHECKING, Dict, List, Optional, Sequence, Set, Tuple
 
+from repro.core.errors import PlanError
 from repro.core.spec import FunctionSpec, ModelRef
 
 if TYPE_CHECKING:  # avoid circular import; Project is only a type here
     from repro.api import Project
 
-
-class PlanError(ValueError):
-    pass
+__all__ = ["PlanError", "LogicalNode", "LogicalPlan", "build_logical_plan"]
 
 
 @dataclasses.dataclass

@@ -18,13 +18,11 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
-import json
 import time
 import uuid
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.columnar.catalog import Catalog
-from repro.columnar.expr import parse_predicate
 from repro.core.logical import LogicalPlan, PlanError
 from repro.core.spec import ModelRef
 
@@ -38,6 +36,81 @@ def _key_hash(*parts: str) -> str:
 
 
 CHANNELS = ("zerocopy", "mmap", "flight", "objectstore")
+
+
+# ---------------------------------------------------------------------------
+# rewrite-rule guards
+#
+# Shared by the planner (to decide whether a combine/exchange rewrite fires)
+# and by `repro.analysis` explain mode (to tell the user WHICH guard blocked
+# it). Each guard returns (classification, "") on success or (None, BPL###)
+# naming the blocking rule — the silent gather fallback becomes a stable,
+# documented lint code.
+# ---------------------------------------------------------------------------
+
+
+def combinable_guard(spec, sharded) -> Tuple[Optional[Tuple[str, ModelRef]], str]:
+    """Returns the (param, ref) that rides the shards when `spec` is a
+    declared-combinable aggregation of exactly one sharded input whose shard
+    side matches the contract, else (None, code) naming the blocking guard.
+    `sharded` is any container of sharded parent NAMES."""
+    contract = getattr(spec, "combinable", None)
+    if contract is None:
+        return None, "BPL250"
+    # a contract that doesn't name its shard side (GroupByCombine,
+    # StatsCombine, single-input custom reducers) implies a single-input
+    # partial; rewriting a multi-input model with it would hand the
+    # partial kwargs it can't take — fall back to the gather instead
+    if not contract.shard_param and len(spec.inputs) != 1:
+        return None, "BPL251"
+    # a join partial probes ONE build side: three or more inputs would
+    # pass classification only to crash every per-shard partial
+    if contract.kind == "join" and len(spec.inputs) != 2:
+        return None, "BPL252"
+    shd = [(p, r) for p, r in spec.inputs if r.name in sharded]
+    if len(shd) != 1:
+        return None, "BPL253"
+    param, ref = shd[0]
+    if contract.shard_param and contract.shard_param != param:
+        return None, "BPL254"
+    return (param, ref), ""
+
+
+def exchange_guard(spec, sharded,
+                   upstream_keys: Optional[Dict[str, Tuple[str, ...]]] = None
+                   ) -> Tuple[Optional[List[str]], str]:
+    """Returns the ordered list of exchanged params when `spec` declares an
+    ExchangeContract that can fire given `sharded` parent names, else
+    (None, code) naming the blocking guard. `upstream_keys` maps parent
+    names produced by a "keys"-merged exchange to that exchange's group
+    keys (the chained-projection guard)."""
+    contract = getattr(spec, "exchange", None)
+    if contract is None:
+        return None, "BPL250"
+    params = {p: r for p, r in spec.inputs}
+    exchanged = (list(contract.shard_params) if contract.shard_params
+                 else [p for p, _ in spec.inputs])
+    if not exchanged or any(p not in params for p in exchanged):
+        return None, "BPL255"
+    if contract.mode == "range" and len(exchanged) != 1:
+        return None, "BPL256"
+    if contract.split_param and contract.split_param not in exchanged:
+        return None, "BPL257"
+    if contract.order_param and contract.order_param not in exchanged:
+        return None, "BPL257"
+    if not any(params[p].name in sharded for p in exchanged):
+        return None, "BPL258"
+    for p in exchanged:
+        keys = (upstream_keys or {}).get(params[p].name)
+        if keys is None:
+            continue
+        # chaining onto permuted "keys" partitions is only byte-exact
+        # when the upstream group keys survive the consumer's projection
+        # (the partition task re-sorts by them to restore row order)
+        cols = params[p].columns
+        if cols is not None and not set(keys) <= set(cols):
+            return None, "BPL259"
+    return exchanged, ""
 
 
 @dataclasses.dataclass
@@ -331,7 +404,9 @@ class Planner:
                  workers: Sequence[WorkerProfile],
                  force_channel: Optional[str] = None,
                  shard_threshold_bytes: int = 64 << 20,
-                 max_shards: Optional[int] = None):
+                 max_shards: Optional[int] = None,
+                 edge_columns: Optional[Dict[Tuple[str, str],
+                                             Optional[Tuple[str, ...]]]] = None):
         self.catalog = catalog
         self.workers = list(workers)
         if force_channel is not None and force_channel not in CHANNELS:
@@ -341,6 +416,11 @@ class Planner:
         # never wider than the fleet (None = one shard per standing worker)
         self.shard_threshold_bytes = shard_threshold_bytes
         self.max_shards = max_shards
+        # column-lineage pushdown (repro.analysis pass 1): proven read sets
+        # for edges whose consumer declared NO columns, keyed by
+        # (consumer model, ref_id). A missing entry or a None value means
+        # "reads everything" — exactly the old declared-union behavior.
+        self.edge_columns = edge_columns or {}
 
     def _shard_count(self, est_bytes: int, n_files: int) -> int:
         cap = (self.max_shards if self.max_shards is not None
@@ -353,69 +433,26 @@ class Planner:
     # -- helpers --------------------------------------------------------------
     def _classify_combinable(self, spec, shard_map: Dict[str, List[str]]
                              ) -> Optional[Tuple[str, ModelRef]]:
-        """The rewrite-rule guard: returns the (param, ref) that rides the
-        shards when `spec` is a declared-combinable aggregation of exactly
-        one sharded input whose shard side matches the contract. Anything
-        else — no contract, an unsharded input, two sharded inputs (no
-        broadcast side), or a contract naming a different probe param —
-        falls back to the plain gather."""
-        contract = getattr(spec, "combinable", None)
-        if contract is None:
-            return None
-        # a contract that doesn't name its shard side (GroupByCombine,
-        # StatsCombine, single-input custom reducers) implies a single-input
-        # partial; rewriting a multi-input model with it would hand the
-        # partial kwargs it can't take — fall back to the gather instead
-        if not contract.shard_param and len(spec.inputs) != 1:
-            return None
-        # a join partial probes ONE build side: three or more inputs would
-        # pass classification only to crash every per-shard partial
-        if contract.kind == "join" and len(spec.inputs) != 2:
-            return None
-        sharded = [(p, r) for p, r in spec.inputs if r.name in shard_map]
-        if len(sharded) != 1:
-            return None
-        param, ref = sharded[0]
-        if contract.shard_param and contract.shard_param != param:
-            return None
-        return param, ref
+        """Planner-side wrapper over `combinable_guard` (the blocking code is
+        surfaced by repro.analysis explain mode, not here)."""
+        return combinable_guard(spec, shard_map)[0]
 
     def _classify_exchange(self, spec, shard_map: Dict[str, List[str]],
                            exchange_meta: Dict[str, Dict]
                            ) -> Optional[List[str]]:
-        """The exchange rewrite-rule guard: returns the ordered list of
-        exchanged params when `spec` declares an ExchangeContract and at
-        least one exchanged input is sharded (the rewrite only pays when it
-        saves a gather). Anything malformed — a shard_param the signature
-        doesn't have, a multi-input range exchange, a split/order param
-        outside the exchanged set — falls back to the plain path."""
-        contract = getattr(spec, "exchange", None)
-        if contract is None:
-            return None
-        params = {p: r for p, r in spec.inputs}
-        exchanged = (list(contract.shard_params) if contract.shard_params
-                     else [p for p, _ in spec.inputs])
-        if not exchanged or any(p not in params for p in exchanged):
-            return None
-        if contract.mode == "range" and len(exchanged) != 1:
-            return None
-        if contract.split_param and contract.split_param not in exchanged:
-            return None
-        if contract.order_param and contract.order_param not in exchanged:
-            return None
-        if not any(params[p].name in shard_map for p in exchanged):
-            return None
-        for p in exchanged:
-            meta = exchange_meta.get(params[p].name)
-            if meta is None or meta["merge"] != "keys":
-                continue
-            # chaining onto permuted "keys" partitions is only byte-exact
-            # when the upstream group keys survive the consumer's projection
-            # (the partition task re-sorts by them to restore row order)
-            cols = params[p].columns
-            if cols is not None and not set(meta["keys"]) <= set(cols):
-                return None
-        return exchanged
+        """Planner-side wrapper over `exchange_guard`."""
+        upstream_keys = {n: m["keys"] for n, m in exchange_meta.items()
+                         if m["merge"] == "keys"}
+        return exchange_guard(spec, shard_map, upstream_keys)[0]
+
+    def _edge_read_columns(self, consumer: str,
+                           ref: ModelRef) -> Optional[Tuple[str, ...]]:
+        """Columns the (consumer, ref) edge reads: the declared pushdown hint
+        when one exists, else the analyzer-proven read set (lineage
+        pushdown), else None = everything."""
+        if ref.columns is not None:
+            return ref.columns
+        return self.edge_columns.get((consumer, ref.ref_id))
 
     def _column_union(self, consumers: List[Tuple[str, ModelRef]],
                       schema: Optional[Dict[str, str]] = None
@@ -425,10 +462,11 @@ class Planner:
         against `schema` when one is known (source tables — function output
         schemas don't exist at plan time)."""
         cols: List[str] = []
-        for _, ref in consumers:
-            if ref.columns is None:
+        for consumer, ref in consumers:
+            read = self._edge_read_columns(consumer, ref)
+            if read is None:
                 return None  # someone wants everything
-            for c in ref.columns:
+            for c in read:
                 if c not in cols:
                     cols.append(c)
             pred = ref.predicate()
@@ -440,7 +478,9 @@ class Planner:
             unknown = [c for c in cols if c not in schema]
             if unknown:
                 raise PlanError(
-                    f"columns {unknown} not in table schema {list(schema)}")
+                    f"columns {unknown} not in table schema {list(schema)}",
+                    code="BPL101",
+                    column=unknown[0])
         return tuple(cols)
 
     # -- planning ---------------------------------------------------------------

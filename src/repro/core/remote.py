@@ -142,9 +142,9 @@ class WorkerDaemon:
                  host: str = "127.0.0.1", port: int = 0):
         self.worker = worker
         self.project = project
-        self._plans: "OrderedDict[str, PhysicalPlan]" = OrderedDict()
-        self._cancelled: Set[Tuple[str, str]] = set()
-        self._inflight = 0
+        self._plans: "OrderedDict[str, PhysicalPlan]" = OrderedDict()  # guard: _lock
+        self._cancelled: Set[Tuple[str, str]] = set()    # guard: _lock
+        self._inflight = 0                               # guard: _lock
         self._lock = threading.Lock()
         self._stop = threading.Event()
         self._srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
@@ -298,19 +298,22 @@ class WorkerDaemon:
             pass            # caller already gone; engine sees WorkerFailure
 
     def _op_heartbeat(self, conn, msg) -> None:
+        with self._lock:
+            inflight = self._inflight
         _send_msg(conn, {"kind": "result", "ok": True, "ts": time.time(),
-                         "inflight": self._inflight,
+                         "inflight": inflight,
                          "alive": self.worker.alive})
 
     def _op_describe(self, conn, msg) -> None:
         t = self.worker.transport
         with self._lock:
             plans = sorted(self._plans)
+            inflight = self._inflight
         _send_msg(conn, {"kind": "result",
                          "worker_id": self.worker.worker_id,
                          "pid": os.getpid(),
                          "alive": self.worker.alive,
-                         "inflight": self._inflight,
+                         "inflight": inflight,
                          "plans": plans,
                          "transport_stats": dict(t.stats),
                          "scan_cache": dict(self.worker.scan_cache.stats),
@@ -411,10 +414,10 @@ class RemoteWorker:
         self.rpc_timeout_s = rpc_timeout_s
         self.transport = _RemoteTransportView(self, resolver)
         self._plan_lock = threading.Lock()
-        self._plans_sent: Set[str] = set()
+        self._plans_sent: Set[str] = set()          # guard: _plan_lock
         self._port_waiter = port_waiter
         self._join_lock = threading.Lock()
-        self._socks: Set[socket.socket] = set()
+        self._socks: Set[socket.socket] = set()     # guard: _socks_lock
         self._socks_lock = threading.Lock()
 
     @property
@@ -716,10 +719,10 @@ class RemoteCluster:
         self.heartbeat_interval_s = heartbeat_interval_s
         self.heartbeat_misses = heartbeat_misses
         self.spawn_timeout_s = spawn_timeout_s
-        self.workers: Dict[str, RemoteWorker] = {}
+        self.workers: Dict[str, RemoteWorker] = {}    # guard: _lock
         self._lock = threading.Lock()
-        self._engine = None
-        self._closed = False
+        self._engine = None                           # guard: _lock
+        self._closed = False                          # guard: _lock
         self._hb_misses: Dict[str, int] = {}
         # location-addressed reads (RunResult.read, degraded fetches) resolve
         # through one client-side transport; its flight server sits idle —
@@ -820,13 +823,13 @@ class RemoteCluster:
     def get(self, worker_id: str) -> RemoteWorker:
         with self._lock:
             w = self.workers.get(worker_id)
+            known = sorted(self.workers)
         if w is not None:
             return w
         if worker_id.startswith("ondemand-"):
             return self.provision(WorkerProfile(worker_id, memory_gb=8.0,
                                                 on_demand=True))
-        raise KeyError(f"unknown worker {worker_id!r}; "
-                       f"have {sorted(self.workers)}")
+        raise KeyError(f"unknown worker {worker_id!r}; have {known}")
 
     def healthy_workers(self) -> List[RemoteWorker]:
         with self._lock:
@@ -834,8 +837,11 @@ class RemoteCluster:
 
     def kill_worker(self, worker_id: str) -> None:
         """Chaos hook: SIGKILL the worker process and tell the engine now
-        (same immediacy as LocalCluster's simulated kill)."""
-        self.workers[worker_id].kill()
+        (same immediacy as LocalCluster's simulated kill). The kill runs
+        off-lock: it triggers engine callbacks that re-enter the cluster."""
+        with self._lock:
+            w = self.workers[worker_id]
+        w.kill()
         self._notify_lost(worker_id)
 
     def close(self) -> None:
@@ -844,11 +850,12 @@ class RemoteCluster:
                 return
             self._closed = True
             engine, self._engine = self._engine, None
+            fleet = list(self.workers.values())
         if getattr(self, "_hb_stop", None) is not None:
             self._hb_stop.set()
         if engine is not None:
             engine.close()
-        for w in list(self.workers.values()):
+        for w in fleet:
             w.close()
         self._resolver.close()
 
@@ -865,7 +872,9 @@ class RemoteCluster:
         triggers proactive engine-side invalidation of its resident
         outputs."""
         while not self._hb_stop.wait(self.heartbeat_interval_s):
-            for wid, proxy in list(self.workers.items()):
+            with self._lock:
+                fleet = list(self.workers.items())
+            for wid, proxy in fleet:
                 if not proxy.alive:
                     continue
                 dead = False

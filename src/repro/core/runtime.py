@@ -19,7 +19,6 @@ import sys
 import threading
 import time
 import traceback
-import uuid
 from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
@@ -80,7 +79,7 @@ class Client:
 
     def __init__(self, verbose: bool = False):
         self.verbose = verbose
-        self.events: List[Event] = []
+        self.events: List[Event] = []     # guard: _lock
         self._lock = threading.Lock()
 
     def emit(self, event: Event) -> None:
@@ -616,9 +615,9 @@ class LocalCluster:
         # forwarded to the lazily-created ExecutionEngine (mmap_spill_bytes,
         # skew_factor, ... — benchmarks tune these per scenario)
         self.engine_opts = dict(engine_opts or {})
-        self.workers: Dict[str, Worker] = {}
+        self.workers: Dict[str, Worker] = {}    # guard: _lock
         self._lock = threading.Lock()     # provision() races with dispatch
-        self._engine = None
+        self._engine = None                     # guard: _lock
         for i in range(n_workers):
             self._add(WorkerProfile(f"worker-{i}", memory_gb=memory_gb))
 
@@ -656,6 +655,7 @@ class LocalCluster:
     def get(self, worker_id: str) -> Worker:
         with self._lock:   # provision() mutates `workers` concurrently
             w = self.workers.get(worker_id)
+            known = sorted(self.workers)
         if w is not None:
             return w
         if worker_id.startswith("ondemand-"):
@@ -663,22 +663,27 @@ class LocalCluster:
             return self.provision(WorkerProfile(worker_id, memory_gb=8.0,
                                                 on_demand=True))
         # fabricating a worker here would mask typos and stale placements
-        raise KeyError(f"unknown worker {worker_id!r}; "
-                       f"have {sorted(self.workers)}")
+        raise KeyError(f"unknown worker {worker_id!r}; have {known}")
 
     def healthy_workers(self) -> List[Worker]:
         with self._lock:
             return [w for w in self.workers.values() if w.alive]
 
     def kill_worker(self, worker_id: str) -> None:
-        self.workers[worker_id].kill()
+        # lookup under the lock (provision() mutates the dict concurrently);
+        # the kill itself runs outside it — it fires engine callbacks that
+        # re-enter cluster methods taking this lock
+        with self._lock:
+            w = self.workers[worker_id]
+        w.kill()
 
     def close(self) -> None:
         with self._lock:
             engine, self._engine = self._engine, None
+            fleet = list(self.workers.values())
         if engine is not None:
             engine.close()
-        for w in list(self.workers.values()):
+        for w in fleet:
             w.transport.close()
 
 
@@ -695,6 +700,8 @@ def submit_run(project: "Project", cluster,
                shard_threshold_bytes: Optional[int] = None,
                max_shards: Optional[int] = None,
                priority: int = 0,
+               validate: str = "off",
+               lineage_pushdown: bool = True,
                **engine_kw):
     """Plan + submit a run to the cluster's shared engine; returns a
     RunHandle immediately so N invocations can execute concurrently.
@@ -706,12 +713,41 @@ def submit_run(project: "Project", cluster,
     (`max_retries`, `speculation_factor`, `speculation_min_s`) forward to
     ``ExecutionEngine.submit`` — benchmarks disable straggler speculation
     this way so 1-CPU timing noise doesn't double-run multi-second tasks."""
+    if validate not in ("off", "warn", "strict"):
+        raise ValueError(f"validate must be 'off', 'warn' or 'strict', "
+                         f"got {validate!r}")
+    if validate != "off":
+        from repro.analysis import check_project
+
+        report = check_project(project, catalog=cluster.catalog,
+                               branch=branch, targets=targets)
+        if client is not None:
+            for d in report.diagnostics:
+                client.emit(Event(kind="diagnostic", task_id="", worker="",
+                                  payload={"line": d.render(),
+                                           "code": d.code,
+                                           "severity": d.severity,
+                                           "model": d.model}))
+        if validate == "strict":
+            report.raise_first()
     logical = build_logical_plan(project, targets)
     planner_kw = {}
     if shard_threshold_bytes is not None:
         planner_kw["shard_threshold_bytes"] = shard_threshold_bytes
     if max_shards is not None:
         planner_kw["max_shards"] = max_shards
+    if lineage_pushdown:
+        # pass-1 column lineage: proven read sets for edges that declared
+        # no columns= hint narrow scans and gathers. Inference is
+        # conservative (unprovable -> read everything), and any analyzer
+        # failure falls back to the declared-union behavior rather than
+        # blocking the run.
+        try:
+            from repro.analysis.schema import edge_read_columns
+
+            planner_kw["edge_columns"] = edge_read_columns(project, targets)
+        except Exception:
+            pass
     planner = Planner(cluster.catalog, cluster.profiles(),
                       force_channel=force_channel, **planner_kw)
     plan = planner.plan(logical, branch=branch, run_id=run_id)
@@ -727,6 +763,8 @@ def execute_run(project: "Project", catalog: Catalog = None, cluster=None,
                 journal_path: Optional[str] = None,
                 shard_threshold_bytes: Optional[int] = None,
                 max_shards: Optional[int] = None,
+                validate: str = "off",
+                lineage_pushdown: bool = True,
                 **engine_kw):
     import tempfile
 
@@ -742,7 +780,8 @@ def execute_run(project: "Project", catalog: Catalog = None, cluster=None,
                             force_channel=force_channel,
                             journal_path=journal_path,
                             shard_threshold_bytes=shard_threshold_bytes,
-                            max_shards=max_shards, **engine_kw)
+                            max_shards=max_shards, validate=validate,
+                            lineage_pushdown=lineage_pushdown, **engine_kw)
         return handle.wait()
     finally:
         if owns_cluster:

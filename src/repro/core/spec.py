@@ -162,6 +162,12 @@ class CombineContract:
     combine: Callable
     shard_param: str = ""       # which input rides the shards ("" = the only one)
     fingerprint: str = ""       # parameter identity (keys/aggs/on/...)
+    # structured parameters for static analysis (repro.analysis): group/join
+    # keys and the agg map as data, so schema inference never has to parse
+    # the fingerprint repr. NOT folded into contract_id — the fingerprint
+    # already carries their identity.
+    keys: Tuple[str, ...] = ()
+    aggs: Tuple[Tuple[str, Tuple[str, str]], ...] = ()
 
     @property
     def contract_id(self) -> str:
@@ -224,6 +230,9 @@ class ExchangeContract:
     split_param: str = ""       # input eligible for row-range skew splits
     descending: bool = False    # range mode: partition 0 holds the largest
     fingerprint: str = ""       # parameter identity (keys/on/how/...)
+    # structured agg map for static analysis (group_by exchanges); not part
+    # of contract_id — the fingerprint already carries its identity
+    aggs: Tuple[Tuple[str, Tuple[str, str]], ...] = ()
 
     @property
     def contract_id(self) -> str:

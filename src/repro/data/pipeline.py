@@ -13,13 +13,13 @@ mid-epoch without replaying data.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional, Tuple
+from typing import Dict, Iterator, Optional
 
 import numpy as np
 
 from repro.api import Model, Project
 from repro.columnar.table import ColumnTable
-from repro.data.tokenizer import PAD, ByteTokenizer
+from repro.data.tokenizer import ByteTokenizer
 
 
 def build_data_project(tokenizer: ByteTokenizer, seq_len: int,

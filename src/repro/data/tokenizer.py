@@ -9,7 +9,6 @@ from __future__ import annotations
 from collections import Counter
 from typing import Dict, Iterable, List, Optional, Tuple
 
-import numpy as np
 
 PAD, BOS, EOS = 0, 1, 2
 _SPECIALS = 3

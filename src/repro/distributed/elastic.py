@@ -8,7 +8,7 @@ simulated) and resumes from the last committed step.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Sequence, Tuple
+from typing import Sequence, Tuple
 
 import jax
 import numpy as np

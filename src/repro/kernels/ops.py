@@ -14,7 +14,6 @@ import jax.numpy as jnp
 from repro.kernels import filter_compact as _fc
 from repro.kernels import flash_attention as _fa
 from repro.kernels import groupby_agg as _gb
-from repro.kernels import ref
 
 
 def _interpret() -> bool:

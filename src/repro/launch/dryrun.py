@@ -27,12 +27,11 @@ import traceback
 from typing import Dict, Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import (ARCH_IDS, SHAPES, applicable_shapes, get_config)
 from repro.distributed.sharding import make_sharding_plan
 from repro.launch import roofline as rl
-from repro.launch.mesh import describe_mesh, make_production_mesh
+from repro.launch.mesh import make_production_mesh
 from repro.models import build_model
 from repro.models import layers as L
 from repro.train import serve_step as ss

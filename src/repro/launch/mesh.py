@@ -11,7 +11,6 @@ collectives inside a pod.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
 
 import jax
 

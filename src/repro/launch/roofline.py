@@ -20,9 +20,8 @@ ICI (per assignment).
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Tuple
 
 # v5e constants (assignment-specified)
 PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip

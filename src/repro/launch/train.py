@@ -24,7 +24,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-import repro as bp
 from repro.columnar import Catalog, ObjectStore
 from repro.configs import ARCH_IDS, get_config, smoke_config
 from repro.core.runtime import Client, LocalCluster, execute_run

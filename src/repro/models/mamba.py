@@ -9,7 +9,6 @@ for the backward pass (memory ~ boundaries + one chunk).
 """
 from __future__ import annotations
 
-import math
 from typing import Dict, Optional, Tuple
 
 import jax

@@ -12,7 +12,6 @@ llama-family GQA dense (codeqwen/yi/minitron), llama4-style MoE, jamba
 """
 from __future__ import annotations
 
-import functools
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -20,7 +19,7 @@ import jax.numpy as jnp
 
 from repro.configs.common import LayerSpec, ModelConfig
 from repro.models import attention, layers, mamba, moe, xlstm
-from repro.models.layers import ParamSpec, Specs
+from repro.models.layers import Specs
 
 AUX_KEYS = ("load_balance", "router_z", "dropped_frac")
 

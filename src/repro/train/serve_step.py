@@ -6,7 +6,6 @@ assignment); caches are donated so generation runs in place.
 """
 from __future__ import annotations
 
-import functools
 from typing import Dict, Optional, Tuple
 
 import jax

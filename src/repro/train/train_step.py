@@ -14,7 +14,6 @@ Distributed-optimization posture:
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Dict, Optional, Tuple
 
 import jax

@@ -1,0 +1,570 @@
+"""Static analyzer (`bp.check` / repro.analysis): schema & lineage
+inference, contract conformance, determinism lint, lock lint, the
+lineage-driven projection pushdown, and the validate= run gate."""
+import json
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import repro as bp
+from repro.analysis import check_project, edge_read_columns
+from repro.analysis.determinism import lint_source
+from repro.analysis.locklint import lint_module_source
+from repro.columnar import Catalog, ColumnTable, ObjectStore, compute
+
+
+@pytest.fixture
+def cat(tmp_path):
+    c = Catalog(ObjectStore(str(tmp_path / "s3")))
+    c.write_table("events", ColumnTable.from_pydict({
+        "k": (np.arange(200) % 7).astype(np.int64),
+        "v": np.arange(200.0),
+        "tag": ["x"] * 200}), rows_per_file=50)
+    c.write_table("dims", ColumnTable.from_pydict({
+        "k": np.arange(7).astype(np.int64),
+        "label": [f"g{i}" for i in range(7)]}))
+    c.write_table("dims_str", ColumnTable.from_pydict({
+        "k": [str(i) for i in range(7)],
+        "label": [f"g{i}" for i in range(7)]}))
+    return c
+
+
+def codes(report):
+    return sorted(set(report.codes()))
+
+
+# ---------------------------------------------------------------------------
+# pass 1 — schema & column lineage
+# ---------------------------------------------------------------------------
+
+
+def test_unknown_declared_column_is_plan_time_error(cat):
+    proj = bp.Project("p101")
+
+    @proj.model()
+    def m(data=bp.Model("events", columns=["k", "nope"])):
+        return data
+
+    rep = check_project(proj, catalog=cat)
+    assert "BPL101" in codes(rep)
+    assert rep.by_code("BPL101")[0].column == "nope"
+    assert not rep.ok
+
+    ok = bp.Project("p101ok")
+
+    @ok.model()
+    def m2(data=bp.Model("events", columns=["k", "v"])):
+        return data
+
+    assert check_project(ok, catalog=cat).ok
+
+
+def test_select_after_drop_across_models(cat):
+    """The classic select-after-drop: a projecting parent drops `tag`, a
+    grandchild asks for it. Caught by propagating the parent's *inferred*
+    output schema, not the source table's."""
+    proj = bp.Project("pdrop")
+
+    @proj.model()
+    def narrow(data=bp.Model("events")):
+        return data.project(["k", "v"])
+
+    @proj.model()
+    def child(data=bp.Model("narrow", columns=["tag"])):
+        return data
+
+    rep = check_project(proj, catalog=cat)
+    bad = rep.by_code("BPL101")
+    assert bad and bad[0].model == "child" and bad[0].column == "tag"
+
+
+def test_join_key_dtype_mismatch(cat):
+    proj = bp.Project("p102")
+
+    @proj.model(combinable=bp.JoinCombine(["k"], probe="ev"))
+    def joined(ev=bp.Model("events"), d=bp.Model("dims_str")):
+        return compute.hash_join(ev, d, ["k"])
+
+    rep = check_project(proj, catalog=cat)
+    bad = rep.by_code("BPL102")
+    assert bad and bad[0].column == "k" and bad[0].severity == "error"
+
+    ok = bp.Project("p102ok")
+
+    @ok.model(combinable=bp.JoinCombine(["k"], probe="ev"))
+    def joined2(ev=bp.Model("events"), d=bp.Model("dims")):
+        return compute.hash_join(ev, d, ["k"])
+
+    assert check_project(ok, catalog=cat).ok
+
+
+def test_filter_on_unknown_column(cat):
+    proj = bp.Project("p103")
+
+    @proj.model()
+    def m(data=bp.Model("events", filter="ghost > 3")):
+        return data
+
+    rep = check_project(proj, catalog=cat)
+    assert "BPL103" in codes(rep)
+    assert rep.by_code("BPL103")[0].column == "ghost"
+
+    ok = bp.Project("p103ok")
+
+    @ok.model()
+    def m2(data=bp.Model("events", filter="v > 3")):
+        return data
+
+    assert check_project(ok, catalog=cat).ok
+
+
+def test_contract_key_missing_upstream(cat):
+    proj = bp.Project("p104")
+
+    @proj.model(combinable=bp.GroupByCombine(["region"],
+                                             {"s": ("v", "sum")}))
+    def agg(data=bp.Model("events")):
+        return compute.group_by(data, ["region"], {"s": ("v", "sum")})
+
+    rep = check_project(proj, catalog=cat)
+    assert "BPL104" in codes(rep)
+    assert rep.by_code("BPL104")[0].column == "region"
+
+    ok = bp.Project("p104ok")
+
+    @ok.model(combinable=bp.GroupByCombine(["k"], {"s": ("v", "sum")}))
+    def agg2(data=bp.Model("events")):
+        return compute.group_by(data, ["k"], {"s": ("v", "sum")})
+
+    assert check_project(ok, catalog=cat).ok
+
+
+def test_inferred_schemas_carry_dtypes(cat):
+    proj = bp.Project("pdt")
+
+    @proj.model(combinable=bp.GroupByCombine(
+        ["k"], {"total": ("v", "sum"), "n": ("v", "count"),
+                "avg": ("v", "mean")}))
+    def agg(data=bp.Model("events")):
+        return compute.group_by(data, ["k"],
+                                {"total": ("v", "sum"), "n": ("v", "count"),
+                                 "avg": ("v", "mean")})
+
+    rep = check_project(proj, catalog=cat)
+    assert rep.schemas["agg"] == {"k": "int64", "total": "float64",
+                                  "n": "int64", "avg": "float64"}
+
+
+def test_inferred_join_schema_feeds_downstream_check(cat):
+    """Join output schema (probe cols + build cols minus keys) is inferred
+    from the contract, so a consumer of the join is checked too."""
+    proj = bp.Project("pjs")
+
+    @proj.model(combinable=bp.JoinCombine(["k"], probe="ev"))
+    def joined(ev=bp.Model("events"), d=bp.Model("dims")):
+        return compute.hash_join(ev, d, ["k"])
+
+    @proj.model()
+    def child(data=bp.Model("joined", columns=["label", "missing"])):
+        return data
+
+    rep = check_project(proj, catalog=cat)
+    assert rep.schemas["joined"] == {"k": "int64", "v": "float64",
+                                     "tag": "utf8", "label": "utf8"}
+    bad = rep.by_code("BPL101")
+    assert bad and bad[0].model == "child" and bad[0].column == "missing"
+
+
+# ---------------------------------------------------------------------------
+# pass 2 — contract conformance (decoration-time) + explain via check
+# ---------------------------------------------------------------------------
+
+
+def test_decoration_rejects_unknown_merge_and_how():
+    with pytest.raises(bp.ContractError) as ei:
+        bp.exchangeable(lambda data=None: data, ["k"], merge="zigzag")
+    assert ei.value.code == "BPL203"
+    with pytest.raises(bp.ContractError) as ei:
+        bp.JoinExchange(["k"], probe="a", build="b", how="cross")
+    assert ei.value.code == "BPL203"
+
+
+def test_decoration_rejects_empty_keys():
+    with pytest.raises(bp.ContractError) as ei:
+        bp.GroupByCombine([], {"s": ("v", "sum")})
+    assert ei.value.code == "BPL202"
+    with pytest.raises(bp.ContractError) as ei:
+        bp.SortExchange([])
+    assert ei.value.code == "BPL202"
+
+
+def test_decoration_rejects_holistic_aggregation():
+    with pytest.raises(bp.ContractError) as ei:
+        bp.GroupByCombine(["k"], {"med": ("v", "median")})
+    assert ei.value.code == "BPL204"
+    with pytest.raises(bp.ContractError) as ei:
+        bp.GroupByExchange(["k"], {"mode": ("v", "mode")})
+    assert ei.value.code == "BPL204"
+    # every mergeable aggregation is accepted
+    bp.GroupByCombine(["k"], {"s": ("v", "sum"), "m": ("v", "mean"),
+                              "n": ("v", "count"), "lo": ("v", "min"),
+                              "hi": ("v", "max")})
+
+
+def test_decoration_rejects_left_join_combine():
+    with pytest.raises(bp.ContractError) as ei:
+        bp.JoinCombine(["k"], probe="ev", how="left")
+    assert ei.value.code == "BPL205"
+    bp.JoinCombine(["k"], probe="ev", how="inner")
+
+
+def test_decoration_rejects_split_without_order_merge():
+    with pytest.raises(bp.ContractError) as ei:
+        bp.exchangeable(lambda data=None: data, ["k"], merge="keys",
+                        split_param="data")
+    assert ei.value.code == "BPL206"
+
+
+def test_decoration_rejects_contract_param_not_in_signature():
+    proj = bp.Project("p201")
+    with pytest.raises(bp.ContractError) as ei:
+        @proj.model(combinable=bp.JoinCombine(["k"], probe="ghost"))
+        def j(ev=bp.Model("events"), d=bp.Model("dims")):
+            return ev
+    assert ei.value.code == "BPL201"
+    assert "j" in str(ei.value)
+
+
+def test_dead_rewrite_guard_surfaces_in_check(cat):
+    """A contract that can never fire (join contract, three inputs) is an
+    error in the report, not a silent plan-time gather fallback."""
+    proj = bp.Project("pdead")
+
+    @proj.model(combinable=bp.JoinCombine(["k"], probe="a"))
+    def j(a=bp.Model("events"), b=bp.Model("dims"), c=bp.Model("dims")):
+        return a
+
+    rep = check_project(proj, catalog=cat, sharded={"events"})
+    assert "BPL252" in codes(rep)
+    assert not rep.ok
+
+
+# ---------------------------------------------------------------------------
+# pass 3a — determinism & cache-safety lint
+# ---------------------------------------------------------------------------
+
+
+def test_nondeterministic_call_flagged(cat):
+    import time
+
+    proj = bp.Project("p301")
+
+    @proj.model()
+    def stamped(data=bp.Model("events")):
+        return {"ts": [time.time()] * data.num_rows}
+
+    rep = check_project(proj, catalog=cat)
+    d = rep.by_code("BPL301")
+    assert d and d[0].model == "stamped" and d[0].severity == "warning"
+    assert rep.ok        # warnings never fail strict validation
+
+    ok = bp.Project("p301ok")
+
+    @ok.model()
+    def clean(data=bp.Model("events")):
+        return {"v2": np.asarray(data.column("v").to_numpy()) * 2}
+
+    assert check_project(ok, catalog=cat).by_code("BPL301") == []
+
+
+def test_mutable_default_and_env_read_flagged(cat):
+    import os
+
+    proj = bp.Project("p302")
+
+    @proj.model()
+    def m(data=bp.Model("events"), acc=[]):
+        acc.append(os.environ.get("MODE", "x"))
+        return data
+
+    rep = check_project(proj, catalog=cat)
+    assert "BPL302" in codes(rep) and "BPL304" in codes(rep)
+
+
+def test_memory_address_value_flagged(cat):
+    proj = bp.Project("p303")
+
+    @proj.model()
+    def m(data=bp.Model("events")):
+        return {"h": [float(id(data))] * data.num_rows}
+
+    assert "BPL303" in codes(check_project(proj, catalog=cat))
+
+
+def test_mutable_closure_capture_flagged(cat):
+    proj = bp.Project("p305")
+    seen = []
+
+    @proj.model()
+    def m(data=bp.Model("events")):
+        seen.append(data.num_rows)
+        return data
+
+    rep = check_project(proj, catalog=cat)
+    d = rep.by_code("BPL305")
+    assert d and d[0].column == "seen"
+
+    # an immutable capture is fine
+    ok = bp.Project("p305ok")
+    factor = 2.0
+
+    @ok.model()
+    def m2(data=bp.Model("events")):
+        return {"v2": np.asarray(data.column("v").to_numpy()) * factor}
+
+    assert check_project(ok, catalog=cat).by_code("BPL305") == []
+
+
+def test_file_mode_lint_without_import():
+    src = '''
+import time
+import repro as bp
+
+@bp.model()
+def stamped(data=bp.Model("events")):
+    return {"ts": [time.time()]}
+
+def helper():            # undecorated: not linted in file mode
+    return time.time()
+'''
+    diags = lint_source(src, "pipeline.py")
+    assert [d.code for d in diags] == ["BPL301"]
+    assert diags[0].file == "pipeline.py" and diags[0].line > 0
+
+
+# ---------------------------------------------------------------------------
+# pass 3b — lock-annotation lint
+# ---------------------------------------------------------------------------
+
+_LOCKED_SRC = '''
+import threading
+
+class Engine:
+    def __init__(self):
+        self._runs = []          # guard: _lock
+        self._lock = threading.Lock()
+
+    def fine(self):
+        with self._lock:
+            return len(self._runs)
+
+    def helper(self):  # guard-held: _lock
+        return self._runs[-1]
+
+    def drain(self):
+        """Pop everything (lock held)."""
+        self._runs.clear()
+'''
+
+
+def test_lock_lint_accepts_annotated_discipline():
+    assert lint_module_source(_LOCKED_SRC, "eng.py") == []
+
+
+def test_lock_lint_flags_unguarded_access():
+    bad = _LOCKED_SRC + '''
+    def racy(self):
+        return len(self._runs)
+'''
+    diags = lint_module_source(bad, "eng.py")
+    assert [d.code for d in diags] == ["BPL401"]
+    assert diags[0].model == "Engine.racy" and diags[0].column == "_runs"
+
+
+def test_lock_lint_flags_unknown_guard_lock():
+    bad = _LOCKED_SRC.replace("# guard: _lock", "# guard: _locck")
+    diags = lint_module_source(bad, "eng.py")
+    assert [d.code for d in diags] == ["BPL402"]
+
+
+def test_runtime_modules_pass_lock_lint():
+    """The conventions are enforced on the real engine/runtime/remote —
+    a regression that touches guarded state off-lock fails this test."""
+    import os
+
+    import repro.core as core
+    root = os.path.dirname(os.path.abspath(core.__file__))
+    for mod in ("engine.py", "runtime.py", "remote.py"):
+        with open(os.path.join(root, mod)) as fh:
+            assert lint_module_source(fh.read(), mod) == [], mod
+
+
+# ---------------------------------------------------------------------------
+# lineage-driven projection pushdown
+# ---------------------------------------------------------------------------
+
+
+def _lineage_project(name):
+    """mapped emits a narrow v2 plus an 8x-wide pad; the consumer declares
+    NO columns= hint but its body provably reads only v2."""
+    proj = bp.Project(name)
+
+    @proj.model(rowwise=True)
+    def mapped(data=bp.Model("big", columns=["k", "v"])):
+        v = np.asarray(data.column("v").to_numpy())
+        return {"v2": v * 2.0, "pad": ["x" * 64] * len(v)}
+
+    @proj.model()
+    def consumer(data=bp.Model("mapped")):
+        return {"v2": np.asarray(data.column("v2").to_numpy())}
+
+    return proj
+
+
+@pytest.fixture
+def wide_cat(tmp_path):
+    c = Catalog(ObjectStore(str(tmp_path / "s3w")))
+    c.write_table("big", ColumnTable.from_pydict({
+        "k": (np.arange(4000) % 16).astype(np.float64),
+        "v": np.arange(4000.0)}), rows_per_file=500)
+    return c
+
+
+def test_edge_read_columns_proves_body_read_sets():
+    proj = _lineage_project("lp")
+    edges = edge_read_columns(proj)
+    by_consumer = {c: cols for (c, _), cols in edges.items()}
+    assert by_consumer["consumer"] == ("v2",)
+
+
+def test_lineage_pushdown_shrinks_remote_bytes(wide_cat, tmp_path):
+    """Same project, no columns= hints: the analyzer's proven read set
+    narrows the cross-worker gather exactly like a declared union would."""
+    from repro.core import LocalCluster
+    from repro.core.runtime import execute_run
+
+    def run_and_count(name, lineage):
+        cluster = LocalCluster(wide_cat, wide_cat.store,
+                               str(tmp_path / f"dp-{name}"), n_workers=4)
+        try:
+            res = execute_run(_lineage_project(name), cluster=cluster,
+                              shard_threshold_bytes=1, max_shards=4,
+                              lineage_pushdown=lineage)
+            vals = np.asarray(
+                res.read("consumer", cluster).column("v2").to_numpy())
+            stats = [w.transport.stats for w in cluster.workers.values()]
+            return vals, sum(s["remote_part_bytes"] for s in stats)
+        finally:
+            cluster.close()
+
+    on_vals, on_bytes = run_and_count("lineage-on", lineage=True)
+    off_vals, off_bytes = run_and_count("lineage-off", lineage=False)
+    np.testing.assert_array_equal(on_vals, off_vals)   # identical results
+    assert on_bytes < off_bytes / 2                    # pad stayed local
+
+
+def test_lineage_never_narrows_unprovable_bodies(wide_cat):
+    """A body the AST can't bound (whole-table passthrough into a helper)
+    must NOT get a lineage entry — silence, not a guess."""
+    proj = bp.Project("lp-unprovable")
+
+    def opaque(t):
+        return t
+
+    @proj.model()
+    def consumer(data=bp.Model("big")):
+        return opaque(data)
+
+    assert edge_read_columns(proj) == {}
+
+
+# ---------------------------------------------------------------------------
+# the run gate and the CLI
+# ---------------------------------------------------------------------------
+
+
+def test_validate_strict_blocks_and_off_defers(cat):
+    proj = bp.Project("gate")
+
+    @proj.model()
+    def m(data=bp.Model("events", columns=["k", "nope"])):
+        return data
+
+    with pytest.raises(bp.PlanError) as ei:
+        bp.run(proj, catalog=cat, validate="strict")
+    assert ei.value.code == "BPL101" and ei.value.model == "m"
+    with pytest.raises(ValueError, match="validate"):
+        bp.run(proj, catalog=cat, validate="bogus")
+
+
+def test_validate_warn_emits_diagnostic_events(cat):
+    import time
+
+    from repro.core.runtime import Client
+
+    proj = bp.Project("warned")
+
+    @proj.model()
+    def stamped(data=bp.Model("events")):
+        return {"ts": [time.time()] * data.num_rows}
+
+    client = Client()
+    bp.run(proj, catalog=cat, validate="warn", client=client)
+    diag = client.of_kind("diagnostic")
+    assert diag and diag[0].payload["code"] == "BPL301"
+
+
+def test_strict_validation_passes_clean_pipeline_unchanged(cat, tmp_path):
+    """validate="strict" on a clean pipeline neither blocks nor perturbs
+    the result: outputs are value-identical to a validation-off run."""
+    from repro.core import LocalCluster
+
+    def run(name, **kw):
+        proj = bp.Project(name)
+
+        @proj.model(combinable=bp.GroupByCombine(["k"], {"s": ("v", "sum")}))
+        def agg(data=bp.Model("events")):
+            return compute.group_by(data, ["k"], {"s": ("v", "sum")})
+
+        cluster = LocalCluster(cat, cat.store, str(tmp_path / name))
+        try:
+            res = bp.run(proj, cluster=cluster, **kw)
+            t = res.read("agg", cluster)
+            return {c: np.asarray(t.column(c).to_numpy()).tolist()
+                    for c in t.schema()}
+        finally:
+            cluster.close()
+
+    assert run("v-strict", validate="strict") == run("v-off")
+
+
+def test_cli_file_mode_and_rules(tmp_path):
+    bad = tmp_path / "pipe.py"
+    bad.write_text(
+        "import time\nimport repro as bp\n\n"
+        "@bp.model()\n"
+        "def m(data=bp.Model('t'), acc=[]):\n"
+        "    return {'ts': [time.time()]}\n")
+    env = {"PYTHONPATH": "src"}
+    r = subprocess.run([sys.executable, "-m", "repro.analysis",
+                       str(bad), "--json"],
+                      capture_output=True, text=True, env=env,
+                      cwd="/root/repo")
+    assert r.returncode == 0        # warnings only: exit 0
+    payload = json.loads(r.stdout)
+    assert {d["code"] for d in payload} == {"BPL301", "BPL302"}
+
+    r = subprocess.run([sys.executable, "-m", "repro.analysis", "--rules"],
+                      capture_output=True, text=True, env=env,
+                      cwd="/root/repo")
+    assert r.returncode == 0 and "BPL101" in r.stdout
+
+
+def test_cli_internal_lint_is_clean():
+    r = subprocess.run([sys.executable, "-m", "repro.analysis",
+                       "--internal"],
+                      capture_output=True, text=True,
+                      env={"PYTHONPATH": "src"}, cwd="/root/repo")
+    assert r.returncode == 0, r.stdout + r.stderr

@@ -355,7 +355,10 @@ def test_function_gather_carries_consumer_column_union(wide_cat):
 def test_column_union_pushdown_shrinks_part_fetches(wide_cat, tmp_path):
     """DataTransport counters: with the union pushed into the gather, the
     bytes fetched from remote parts drop (only `v2` crosses workers; the
-    8x-wide `pad` column stays put)."""
+    8x-wide `pad` column stays put). Lineage pushdown is disabled here:
+    this test isolates the *declared* columns= union (the analyzer would
+    prove the wide consumer's read set and narrow it too — see
+    test_lineage_pushdown_* in test_analysis.py)."""
     from repro.core import LocalCluster
     from repro.core.runtime import execute_run
 
@@ -365,7 +368,7 @@ def test_column_union_pushdown_shrinks_part_fetches(wide_cat, tmp_path):
         try:
             res = execute_run(_pushdown_project(name, narrow),
                               cluster=cluster, shard_threshold_bytes=1,
-                              max_shards=4)
+                              max_shards=4, lineage_pushdown=False)
             assert res.read("consumer", cluster).num_rows == 4000
             stats = [w.transport.stats for w in cluster.workers.values()]
             return (sum(s["remote_part_bytes"] for s in stats),
@@ -451,3 +454,171 @@ def test_unknown_consumer_column_fails_cleanly_not_as_dead_shard(wide_cat,
         assert "typo" in str(ei.value)
     finally:
         cluster.close()
+
+
+# ---------------------------------------------------------------------------
+# rewrite-guard explain mode: for every guard in physical.combinable_guard /
+# physical.exchange_guard, one project where the guard blocks the rewrite
+# (explain names it by BPL code) and one where it doesn't
+# ---------------------------------------------------------------------------
+
+
+def _explain_codes(proj, sharded=None):
+    from repro.analysis.contracts import explain
+    return [d.code for d in explain(proj, sharded=sharded)]
+
+
+def test_explain_single_input_contract_guard():
+    """BPL251: an unnamed combine contract can't pick a shard side on a
+    multi-input model; naming shard_param clears it."""
+    proj = bp.Project("g251")
+
+    @proj.model(combinable=bp.GroupByCombine(["a"], {"s": ("b", "sum")}))
+    def agg(x=bp.Model("src"), y=bp.Model("aux")):
+        return x
+
+    assert "BPL251" in _explain_codes(proj, sharded={"src"})
+
+    ok = bp.Project("g251ok")
+
+    @ok.model(combinable=bp.GroupByCombine(["a"], {"s": ("b", "sum")}))
+    def agg1(x=bp.Model("src")):
+        return x
+
+    assert _explain_codes(ok, sharded={"src"}) == []
+
+
+def test_explain_join_contract_input_count_guard():
+    """BPL252: a join contract pairs exactly one probe with one build."""
+    proj = bp.Project("g252")
+
+    @proj.model(combinable=bp.JoinCombine(["k"], probe="x"))
+    def j(x=bp.Model("src"), y=bp.Model("aux"), z=bp.Model("aux2")):
+        return x
+
+    assert "BPL252" in _explain_codes(proj, sharded={"src"})
+
+    ok = bp.Project("g252ok")
+
+    @ok.model(combinable=bp.JoinCombine(["k"], probe="x"))
+    def j2(x=bp.Model("src"), y=bp.Model("aux")):
+        return x
+
+    assert _explain_codes(ok, sharded={"src"}) == []
+
+
+def test_explain_sharded_input_count_guard():
+    """BPL253: the combine rewrite needs exactly one sharded input — zero
+    (nothing to combine) and two (ambiguous shard side) both decline."""
+    proj = bp.Project("g253")
+
+    @proj.model(combinable=bp.JoinCombine(["k"], probe="x"))
+    def j(x=bp.Model("src"), y=bp.Model("aux")):
+        return x
+
+    assert "BPL253" in _explain_codes(proj, sharded=set())
+    assert "BPL253" in _explain_codes(proj, sharded={"src", "aux"})
+    assert _explain_codes(proj, sharded={"src"}) == []
+
+
+def test_explain_shard_param_mismatch_guard():
+    """BPL254: the sharded input must be the declared probe side — a
+    sharded build table cannot drive the per-shard join."""
+    proj = bp.Project("g254")
+
+    @proj.model(combinable=bp.JoinCombine(["k"], probe="x"))
+    def j(x=bp.Model("src"), y=bp.Model("aux")):
+        return x
+
+    assert "BPL254" in _explain_codes(proj, sharded={"aux"})
+    assert _explain_codes(proj, sharded={"src"}) == []
+
+
+def test_explain_exchange_params_guard_unit():
+    """BPL255: a hand-built exchange contract naming a parameter the model
+    lacks (the api constructors reject this at decoration time, so the
+    guard is exercised at the spec level)."""
+    from repro.core.physical import exchange_guard
+    from repro.core.spec import (EnvSpec, ExchangeContract, FunctionSpec,
+                                 ModelRef)
+
+    contract = ExchangeContract("custom", ("k",), lambda **kw: None,
+                                merge="concat", mode="hash",
+                                shard_params=("nope",), fingerprint="x")
+    spec = FunctionSpec(name="m", fn=lambda data=None: data,
+                        inputs=(("data", ModelRef.create("src")),),
+                        env=EnvSpec(), exchange=contract)
+    fired, code = exchange_guard(spec, {"src"})
+    assert fired is None and code == "BPL255"
+    good = dataclasses_replace_exchange(spec, shard_params=("data",))
+    fired, code = exchange_guard(good, {"src"})
+    assert fired == ["data"] and code == ""
+
+
+def dataclasses_replace_exchange(spec, **contract_changes):
+    import dataclasses as _dc
+    return _dc.replace(spec, exchange=_dc.replace(spec.exchange,
+                                                  **contract_changes))
+
+
+def test_explain_range_exchange_multi_input_guard():
+    """BPL256: range partitioning is single-input (a global sort has no
+    co-partitioned second table); one input clears it."""
+    proj = bp.Project("g256")
+
+    @proj.model(exchange=bp.SortExchange(["k"]))
+    def s(x=bp.Model("src"), y=bp.Model("aux")):
+        return x
+
+    assert "BPL256" in _explain_codes(proj, sharded={"src", "aux"})
+
+    ok = bp.Project("g256ok")
+
+    @ok.model(exchange=bp.SortExchange(["k"]))
+    def s2(x=bp.Model("src")):
+        return x
+
+    assert _explain_codes(ok, sharded={"src"}) == []
+
+
+def test_explain_order_param_outside_exchanged_guard():
+    """BPL257: order/split params must belong to the exchanged set — an
+    order anchor on a broadcast-whole input is meaningless."""
+    proj = bp.Project("g257")
+
+    def body(x=bp.Model("src"), y=bp.Model("aux")):
+        return x
+
+    proj.model(exchange=bp.exchangeable(
+        body, ["k"], merge="order", shard_params=("x",),
+        order_param="y"))(body)
+
+    assert "BPL257" in _explain_codes(proj, sharded={"src"})
+
+    ok = bp.Project("g257ok")
+
+    def body2(x=bp.Model("src"), y=bp.Model("aux")):
+        return x
+
+    ok.model(exchange=bp.exchangeable(
+        body2, ["k"], merge="order", shard_params=("x",),
+        order_param="x"))(body2)
+
+    assert _explain_codes(ok, sharded={"src"}) == []
+
+
+def test_explain_nothing_sharded_guard():
+    """BPL258: a valid exchange whose inputs all arrive gathered has
+    nothing to repartition (info, not an error)."""
+    from repro.analysis.contracts import explain
+
+    proj = bp.Project("g258")
+
+    @proj.model(exchange=bp.GroupByExchange(["k"], {"s": ("v", "sum")}))
+    def g(x=bp.Model("src")):
+        return x
+
+    diags = explain(proj, sharded=set())
+    assert [d.code for d in diags] == ["BPL258"]
+    assert diags[0].severity == "info"
+    assert explain(proj, sharded={"src"}) == []
