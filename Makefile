@@ -2,7 +2,7 @@ PYTHON ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
 .PHONY: test test-fast bench-smoke bench-sharding bench-combine \
-	bench-multihost bench-shuffle serve-smoke lint check
+	bench-multihost bench-shuffle bench-serving serve-smoke lint check
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -27,6 +27,9 @@ bench-multihost:
 
 bench-shuffle:
 	$(PYTHON) -m benchmarks.shuffle_exchange --json shuffle_exchange.json
+
+bench-serving:
+	$(PYTHON) -m benchmarks.serving_gateway --json BENCH_serving.json
 
 serve-smoke:
 	$(PYTHON) -m repro.launch.serve --arch xlstm-125m --smoke --steps 8 --batch 2

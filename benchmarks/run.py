@@ -22,9 +22,9 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (kernels_bench, multihost_scan, pipeline_cache,
-                            shard_combine, sharded_scan, shuffle_exchange,
-                            table1_limits, table2_envs, table3_passing,
-                            training_throughput)
+                            serving_gateway, shard_combine, sharded_scan,
+                            shuffle_exchange, table1_limits, table2_envs,
+                            table3_passing, training_throughput)
 
     plan = [
         ("table1_limits", lambda: table1_limits.run(
@@ -45,6 +45,8 @@ def main() -> None:
             join_rows=4_000_000 if args.full else 1_000_000,
             skew_rows=300_000 if args.full else 100_000,
             trials=5 if args.full else 3)),
+        ("serving_gateway", lambda: serving_gateway.run(
+            n_requests=160 if args.full else 80)),
         ("kernels_bench", lambda: kernels_bench.run(
             n_rows=4_000_000 if args.full else 500_000)),
         ("training_throughput", lambda: training_throughput.run(

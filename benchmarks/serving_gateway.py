@@ -1,0 +1,216 @@
+"""Serving gateway benchmark: micro-batched vs one-run-per-request serving.
+
+A mixed light/heavy request stream (80% light lookup-sized tables, 20%
+heavy analytical ones) is served against a rowwise pipeline on one warm
+4-worker LocalCluster, two ways:
+
+  * ``per_request`` — the gateway with max_batch_requests=1: every
+    request pays the full per-run overhead (planning, the per-batch
+    catalog branch + commit, dispatch-time channel binding, task
+    dispatch) alone. This is what PipelineServer did before this layer.
+  * ``batched`` — the same gateway with micro-batching on: compatible
+    requests coalesce into one pipeline run and split back per-request,
+    amortizing every per-run cost across the batch.
+
+Reported per variant: sustained requests/sec over the whole stream and
+p50/p99 request latency (submit -> response table). Responses from both
+variants are checked byte-identical per request, so the speedup is
+measured on provably equivalent serving.
+
+A third phase drives the front door past a deliberately small admission
+bound (max_pending) and verifies backpressure: a bounded number of
+requests is ever outstanding, the excess is refused fast with
+AdmissionError (callers see sub-millisecond rejections, not timeouts),
+and the p99 of ADMITTED requests stays bounded instead of growing with
+offered load.
+
+    PYTHONPATH=src python -m benchmarks.serving_gateway [--smoke] [--json PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import report
+import repro as bp
+from repro.columnar import Catalog, ColumnTable, ObjectStore
+from repro.serving import AdmissionError, Gateway
+
+N_WORKERS = 4
+LIGHT_ROWS = 16
+HEAVY_ROWS = 2048
+
+
+def _project() -> bp.Project:
+    proj = bp.Project("serve-bench")
+
+    @proj.model(rowwise=True)
+    def featurized(data=bp.Model("requests", columns=["x"])):
+        x = np.asarray(data.column("x").to_numpy())
+        return {"x": x, "f": np.sqrt(np.abs(x)) + np.log1p(np.abs(x))}
+
+    @proj.model(rowwise=True, materialize=True)
+    def scored(data=bp.Model("featurized")):
+        f = np.asarray(data.column("f").to_numpy())
+        return {"score": f * 2.0 + 1.0}
+
+    return proj
+
+
+def _requests(n: int, seed: int = 7):
+    """Mixed workload: 80% light, 20% heavy, deterministic content."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n):
+        rows = HEAVY_ROWS if i % 5 == 4 else LIGHT_ROWS
+        out.append(ColumnTable.from_pydict(
+            {"x": rng.standard_normal(rows) * 100.0}))
+    return out
+
+
+def _identical(a, b) -> bool:
+    return (a.column_names == b.column_names
+            and all(a.column(c).data.tobytes() == b.column(c).data.tobytes()
+                    for c in a.column_names))
+
+
+def _serve(tmp: str, tag: str, requests, max_batch_requests: int,
+           max_pending: int = 4096):
+    """Run the whole stream through one warm gateway; returns
+    (outputs, wall_s, latencies, stats)."""
+    store = ObjectStore(f"{tmp}/s3-{tag}")
+    catalog = Catalog(store)
+    catalog.write_table("requests",
+                        ColumnTable.from_pydict({"x": np.asarray([0.0])}))
+    gw = Gateway(catalog, f"{tmp}/dp-{tag}", n_workers=N_WORKERS,
+                 max_batch_requests=max_batch_requests,
+                 max_pending=max_pending, tenant_rate=1e9, tenant_burst=1e9,
+                 validate="off")
+    try:
+        gw.register("ep", _project(), "requests")
+        gw.invoke("ep", requests[0])            # warm the fleet + caches
+        t0 = time.perf_counter()
+        tickets = [gw.submit("ep", r, slo="standard") for r in requests]
+        outs = [t.result(timeout=600) for t in tickets]
+        wall = time.perf_counter() - t0
+        lats = [t.latency_s for t in tickets]
+        return outs, wall, lats, gw.stats()
+    finally:
+        gw.close()
+
+
+def _overload(tmp: str, requests, max_pending: int) -> dict:
+    """Drive a burst far past the admission bound; the queue must stay
+    bounded and the excess must be refused, not buffered."""
+    store = ObjectStore(f"{tmp}/s3-over")
+    catalog = Catalog(store)
+    catalog.write_table("requests",
+                        ColumnTable.from_pydict({"x": np.asarray([0.0])}))
+    gw = Gateway(catalog, f"{tmp}/dp-over", n_workers=N_WORKERS,
+                 max_batch_requests=8, max_pending=max_pending,
+                 tenant_rate=1e9, tenant_burst=1e9, validate="off")
+    try:
+        gw.register("ep", _project(), "requests")
+        gw.invoke("ep", requests[0])
+        admitted, reject_s = [], []
+        max_seen_pending = 0
+        for r in requests:
+            try:
+                t0 = time.perf_counter()
+                admitted.append(gw.submit("ep", r, slo="standard"))
+            except AdmissionError:
+                reject_s.append(time.perf_counter() - t0)
+            max_seen_pending = max(max_seen_pending,
+                                   gw.stats()["admission"]["pending"])
+        lats = [t.result(timeout=600) and t.latency_s for t in admitted]
+        return {"offered": len(requests), "admitted": len(admitted),
+                "rejected": len(reject_s),
+                "max_pending_seen": max_seen_pending,
+                "bound": max_pending,
+                "bounded": bool(max_seen_pending <= max_pending),
+                "reject_p99_ms": round(_pct(reject_s, 99) * 1e3, 3)
+                if reject_s else 0.0,
+                "admitted_p99_s": round(_pct(lats, 99), 4)}
+    finally:
+        gw.close()
+
+
+def _pct(xs, p: float) -> float:
+    if not xs:
+        return 0.0
+    xs = sorted(xs)
+    return xs[min(int(len(xs) * p / 100.0), len(xs) - 1)]
+
+
+def run(n_requests: int = 80, json_path: str = None) -> dict:
+    tmp = tempfile.mkdtemp(prefix="bench_serving_")
+    requests = _requests(n_requests)
+
+    base_out, base_wall, base_lat, base_stats = _serve(
+        tmp, "base", requests, max_batch_requests=1)
+    bat_out, bat_wall, bat_lat, bat_stats = _serve(
+        tmp, "batched", requests, max_batch_requests=8)
+
+    identical = all(_identical(a, b) for a, b in zip(base_out, bat_out))
+    base_rps = n_requests / base_wall
+    bat_rps = n_requests / bat_wall
+    speedup = bat_rps / max(base_rps, 1e-9)
+
+    report("serving/per_request", base_wall,
+           f"{n_requests} reqs, {base_stats['runs']} runs, "
+           f"{base_rps:.1f} req/s, p99 {_pct(base_lat, 99) * 1e3:.0f}ms")
+    report("serving/batched", bat_wall,
+           f"{n_requests} reqs, {bat_stats['runs']} runs, "
+           f"{bat_rps:.1f} req/s, x{speedup:.2f}, identical={identical}")
+
+    over = _overload(tmp, requests, max_pending=8)
+    report("serving/overload", over["admitted_p99_s"],
+           f"{over['rejected']}/{over['offered']} shed, pending "
+           f"<= {over['max_pending_seen']}/{over['bound']}, "
+           f"reject p99 {over['reject_p99_ms']}ms")
+
+    result = {
+        "n_workers": N_WORKERS, "n_requests": n_requests,
+        "light_rows": LIGHT_ROWS, "heavy_rows": HEAVY_ROWS,
+        "per_request": {
+            "wall_s": round(base_wall, 4), "runs": base_stats["runs"],
+            "req_per_s": round(base_rps, 2),
+            "p50_s": round(_pct(base_lat, 50), 4),
+            "p99_s": round(_pct(base_lat, 99), 4)},
+        "batched": {
+            "wall_s": round(bat_wall, 4), "runs": bat_stats["runs"],
+            "coalesced_requests": bat_stats["coalesced_requests"],
+            "req_per_s": round(bat_rps, 2),
+            "p50_s": round(_pct(bat_lat, 50), 4),
+            "p99_s": round(_pct(bat_lat, 99), 4)},
+        "speedup_req_per_s": round(speedup, 3),
+        "identical": bool(identical),
+        "overload": over,
+    }
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(result, f, indent=2)
+    if not identical:
+        raise SystemExit("batched responses differ from per-request serving")
+    if not over["bounded"]:
+        raise SystemExit("admission bound exceeded under overload")
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes for CI (correctness + plumbing)")
+    ap.add_argument("--json", default=None, help="write results JSON here")
+    args = ap.parse_args()
+    out = run(n_requests=24 if args.smoke else 80, json_path=args.json)
+    print(json.dumps(out))
+
+
+if __name__ == "__main__":
+    main()

@@ -19,11 +19,13 @@ The public SDK mirrors the paper's programming model:
 from repro.api import (GroupByCombine, GroupByExchange, JoinCombine,
                        JoinExchange, Model, Project, SortExchange,
                        StatsCombine, check, combinable, default_project,
-                       exchangeable, model, python, resources, run, submit)
+                       exchangeable, model, python, resources, run, serve,
+                       submit)
 from repro.core.errors import (BauplanError, ContractError, LintError,
                                PlanError)
 from repro.core.spec import (CombineContract, EnvSpec, ExchangeContract,
                              ModelRef, ResourceHint)
+from repro.serving import (AdmissionError, Gateway, GatewayError, SLOClass)
 
 __version__ = "1.0.0"
 
@@ -35,4 +37,5 @@ __all__ = [
     "ExchangeContract", "GroupByExchange", "JoinExchange", "SortExchange",
     "exchangeable",
     "BauplanError", "PlanError", "ContractError", "LintError",
+    "serve", "Gateway", "GatewayError", "AdmissionError", "SLOClass",
 ]

@@ -9,7 +9,8 @@ Three modes, combinable:
   * ``--project module:attr`` — import a Project object and run the full
     three-pass analyzer (schemas, contracts, explain, determinism);
   * ``--internal`` — run the lock-annotation lint over the runtime's own
-    concurrency-critical modules (engine/runtime/remote).
+    concurrency-critical modules (engine/runtime/remote + the serving
+    gateway).
 
 Exit status is 1 when any error-severity diagnostic was emitted, else 0.
 """
@@ -27,7 +28,12 @@ from repro.analysis.determinism import lint_source
 from repro.analysis.diagnostics import Diagnostic, RULES, Report
 from repro.analysis.locklint import lint_files
 
-_INTERNAL_MODULES = ("engine.py", "runtime.py", "remote.py")
+# package-relative: the engine's concurrency core plus the serving
+# front door (gateway/admission/batcher all share state across the
+# dispatcher thread, the batch pool and callers)
+_INTERNAL_MODULES = ("core/engine.py", "core/runtime.py", "core/remote.py",
+                     "serving/gateway.py", "serving/admission.py",
+                     "serving/batcher.py")
 
 
 def _iter_py_files(paths) -> List[str]:
@@ -99,9 +105,8 @@ def main(argv=None) -> int:
         report = check_project(_load_project(args.project))
         diags.extend(report.diagnostics)
     if args.internal:
-        core = os.path.join(os.path.dirname(os.path.dirname(
-            os.path.abspath(__file__))), "core")
-        diags.extend(lint_files(os.path.join(core, m)
+        pkg = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        diags.extend(lint_files(os.path.join(pkg, *m.split("/"))
                                 for m in _INTERNAL_MODULES))
     if not (args.paths or args.project or args.internal):
         ap.error("nothing to check: give paths, --project or --internal")

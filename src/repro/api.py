@@ -452,12 +452,51 @@ def run(project: Optional[Project] = None, *, catalog=None, cluster=None,
                        lineage_pushdown=lineage_pushdown)
 
 
+def serve(project: Optional[Project] = None, *, catalog, scratch_root=None,
+          cluster=None, source_table: Optional[str] = None,
+          target: Optional[str] = None, endpoint: str = "default",
+          branch: str = "main", validate: str = "warn", **gateway_kw):
+    """Stand up a serving Gateway with this project registered as one
+    endpoint — the request-level front door (micro-batching, SLO classes,
+    admission control) over a warm cluster.
+
+        gw = bp.serve(project, catalog=catalog, scratch_root="/tmp/bp",
+                      source_table="requests")
+        ticket = gw.submit("default", request_table, slo="interactive")
+        response = ticket.result()
+
+    ``source_table`` is the request seam (defaults to the project's single
+    source table when unambiguous); extra keyword args are Gateway knobs
+    (max_batch_requests, max_pending, tenant_rate, ...). Remember to
+    ``gw.close()`` (or use it as a context manager)."""
+    from repro.serving import Gateway
+
+    project = project or _default_project
+    if source_table is None:
+        sources = project.source_tables()
+        if len(sources) != 1:
+            raise ValueError(f"source_table= is required: project "
+                             f"{project.name!r} reads {len(sources)} source "
+                             f"tables ({sources})")
+        source_table = sources[0]
+    gw = Gateway(catalog, scratch_root, cluster=cluster, validate=validate,
+                 **gateway_kw)
+    try:
+        gw.register(endpoint, project, source_table, target=target,
+                    branch=branch)
+    except BaseException:
+        gw.close()
+        raise
+    return gw
+
+
 def submit(project: Optional[Project] = None, *, cluster,
            branch: str = "main", targets: Optional[Sequence[str]] = None,
            client=None, run_id: Optional[str] = None,
            shard_threshold_bytes: Optional[int] = None,
            max_shards: Optional[int] = None,
            priority: int = 0,
+           deadline_s: Optional[float] = None,
            validate: str = "off",
            lineage_pushdown: bool = True):
     """Submit a run without blocking: returns a RunHandle whose `.wait()`
@@ -465,13 +504,16 @@ def submit(project: Optional[Project] = None, *, cluster,
     fleet and caches through one event-driven engine (`cluster` may be a
     LocalCluster or a process-isolated remote.RemoteCluster). Scans/row-wise
     functions over `shard_threshold_bytes` split into up to `max_shards`
-    shard tasks spread across the fleet. A higher `priority` wins contended
-    worker slots over lower-priority concurrent runs (FIFO on ties).
-    `validate`/`lineage_pushdown` are as in ``bp.run``."""
+    shard tasks spread across the fleet. A higher effective `priority`
+    (static + aging credit while queued) wins contended worker slots over
+    lower-priority concurrent runs; equal priorities break toward the
+    earlier `deadline_s` (this run's SLO, in seconds from submission),
+    then FIFO. `validate`/`lineage_pushdown` are as in ``bp.run``."""
     from repro.core.runtime import submit_run
 
     return submit_run(project or _default_project, cluster, branch=branch,
                       targets=targets, client=client, run_id=run_id,
                       shard_threshold_bytes=shard_threshold_bytes,
                       max_shards=max_shards, priority=priority,
+                      deadline_s=deadline_s,
                       validate=validate, lineage_pushdown=lineage_pushdown)

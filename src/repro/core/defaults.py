@@ -28,3 +28,24 @@ SKEW_MIN_BYTES = 1 << 20
 # outputs above this spill to a disk-backed mmap channel instead of the
 # in-memory table store (per-worker working-set bound)
 MMAP_SPILL_BYTES = int(2e9)
+
+# ready-heap priority aging: a queued task's run gains +1 effective priority
+# per PRIORITY_AGING_S seconds spent waiting, so a sustained stream of
+# high-priority runs cannot starve a queued low-priority run forever
+# (None disables — the static-priority baseline)
+PRIORITY_AGING_S = 5.0
+
+# serving gateway (repro.serving): micro-batching and admission knobs.
+# A batch closes at SERVE_MAX_BATCH_REQUESTS coalesced requests or
+# SERVE_MAX_BATCH_ROWS total rows, whichever first; the SLO class bounds
+# how long the oldest member may wait. The front door admits at most
+# SERVE_MAX_PENDING outstanding requests (queued + in flight) and each
+# tenant draws from a SERVE_TENANT_RATE req/s token bucket with
+# SERVE_TENANT_BURST burst capacity; beyond either bound submissions fail
+# fast with AdmissionError instead of growing an unbounded queue.
+SERVE_MAX_BATCH_REQUESTS = 8
+SERVE_MAX_BATCH_ROWS = 1 << 16
+SERVE_MAX_PENDING = 64
+SERVE_TENANT_RATE = 200.0
+SERVE_TENANT_BURST = 64
+SERVE_MAX_INFLIGHT_BATCHES = 8

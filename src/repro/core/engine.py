@@ -8,8 +8,11 @@ not by a centralized polling loop over a precomputed schedule.
   * **indegree counters + ready queue** — every task knows how many distinct
     parents it still waits on; a completion callback decrements its children
     and dispatches any that hit zero immediately (no `cv.wait` spin); the
-    ready queue is a heap ordered by (run priority desc, FIFO seq), so a
-    high-priority run's tasks take contended worker slots first;
+    ready queue is a heap ordered by (effective run priority desc, deadline,
+    FIFO seq) — effective priority ages monotonically while an entry waits,
+    so a high-priority run's tasks take contended worker slots first but a
+    sustained high-priority stream cannot starve a queued background run,
+    and a run submitted with an SLO deadline beats equal-priority peers;
   * **late-binding placement** — the planner emits hints (memory needs,
     co-location groups, on-demand flags); the engine binds each task to a
     concrete worker at dispatch time: least-loaded among healthy workers
@@ -182,7 +185,8 @@ class _RunState:
 
     def __init__(self, plan: PhysicalPlan, project, client: Client,
                  journal: Optional[RunJournal], max_retries: int,
-                 spec_factor: float, spec_min_s: float, priority: int = 0):
+                 spec_factor: float, spec_min_s: float, priority: int = 0,
+                 deadline: Optional[float] = None):
         self.plan = plan
         self.project = project
         self.client = client
@@ -191,6 +195,9 @@ class _RunState:
         self.spec_factor = spec_factor
         self.spec_min_s = spec_min_s
         self.priority = priority
+        # absolute perf_counter time this run's SLO expires (None = no SLO);
+        # the ready heap prefers earlier deadlines among equal priorities
+        self.deadline = deadline
         self.handles = HandleMap()
         self.attempts: Dict[str, int] = {t: 0 for t in plan.order}
         self.indegree: Dict[str, int] = {t: len(plan.parents[t])
@@ -241,7 +248,8 @@ class ExecutionEngine:
     def __init__(self, cluster: "ClusterLike", worker_queue_depth: int = 4,
                  mmap_spill_bytes: int = defaults.MMAP_SPILL_BYTES,
                  skew_factor: Optional[float] = defaults.SKEW_FACTOR,
-                 skew_min_bytes: int = defaults.SKEW_MIN_BYTES):
+                 skew_min_bytes: int = defaults.SKEW_MIN_BYTES,
+                 aging_interval_s: Optional[float] = defaults.PRIORITY_AGING_S):
         self.cluster = cluster
         self.worker_queue_depth = worker_queue_depth
         self.mmap_spill_bytes = mmap_spill_bytes
@@ -251,15 +259,22 @@ class ExecutionEngine:
         # (None disables — the static-partitioning baseline)
         self.skew_factor = skew_factor
         self.skew_min_bytes = skew_min_bytes
+        # priority aging: a queued entry gains +1 effective priority per
+        # aging_interval_s spent waiting, so sustained high-priority load
+        # cannot starve a queued background run (None = static priorities)
+        self.aging_interval_s = aging_interval_s
         self._lock = threading.RLock()
         self._runs: List[_RunState] = []         # guard: _lock
         self._load: Dict[str, int] = {}          # guard: _lock (inflight tasks)
         self._mem: Dict[str, int] = {}           # guard: _lock (inflight bytes)
-        # one ready heap across all runs: (-priority, seq, tid, state); seq
-        # is engine-global and unique, so equal-priority entries pop FIFO
-        # and the comparison never reaches the unorderable state object
-        self._ready: List[Tuple[int, int, str, _RunState]] = []  # guard: _lock
+        # one ready heap across all runs. Entries are mutable lists
+        # [key, seq, tid, state] where key is the order tuple
+        # (-effective_priority, deadline, seq), recomputed on aging rebuilds;
+        # seq is engine-global and unique, so equal-key prefixes pop FIFO
+        # and comparison never reaches the unorderable state object
+        self._ready: List[List] = []             # guard: _lock
         self._seq = itertools.count()            # guard: _lock
+        self._last_aged = time.perf_counter()    # guard: _lock
         self._pool = ThreadPoolExecutor(
             max_workers=self._pool_size(len(cluster.workers)),
             thread_name_prefix="engine")
@@ -312,11 +327,15 @@ class ExecutionEngine:
                max_retries: int = defaults.MAX_RETRIES,
                speculation_factor: float = defaults.SPECULATION_FACTOR,
                speculation_min_s: float = defaults.SPECULATION_MIN_S,
-               priority: int = 0) -> RunHandle:
+               priority: int = 0,
+               deadline_s: Optional[float] = None) -> RunHandle:
         """Register a run and dispatch its source tasks. Returns immediately;
         the run progresses on completion events. `priority` orders the shared
         ready heap: when worker slots are contended, a higher-priority run's
-        tasks dispatch first (equal priorities stay FIFO)."""
+        tasks dispatch first; among equal effective priorities an earlier
+        `deadline_s` (seconds from now, the run's SLO) wins, then FIFO.
+        Queued entries age: +1 effective priority per engine
+        `aging_interval_s` waited, so background runs cannot starve."""
         with self._lock:
             if self._closed:
                 raise TaskError("engine is closed")
@@ -326,10 +345,13 @@ class ExecutionEngine:
             journal.record_plan(plan.plan_id, plan.run_id, plan.order)
         client.emit(Event("plan", plan.plan_id, "", {"tasks": len(plan.order),
                                                      "run_id": plan.run_id,
-                                                     "priority": priority}))
+                                                     "priority": priority,
+                                                     "deadline_s": deadline_s}))
+        deadline = (time.perf_counter() + deadline_s
+                    if deadline_s is not None else None)
         state = _RunState(plan, project, client, journal, max_retries,
                           speculation_factor, speculation_min_s,
-                          priority=priority)
+                          priority=priority, deadline=deadline)
         with self._lock:
             if self._closed:
                 if journal:
@@ -443,6 +465,20 @@ class ExecutionEngine:
         return healthy[_stable_digest(task.task_id) % len(healthy)]
 
     # -- dispatch -----------------------------------------------------------
+    def _order_key(self, state: _RunState, seq: int,
+                   now: float) -> Tuple[float, float, int]:
+        """Heap order for one ready entry (lock held): effective priority
+        desc (static run priority + monotonic aging credit), then earliest
+        deadline, then FIFO seq. Aging credit accrues per RUN — +1 per
+        aging interval since the run was submitted — so a starved run's
+        downstream tasks inherit its seniority instead of rejoining the
+        back of the line freshly-enqueued after every parent completes."""
+        eff = float(state.priority)
+        if self.aging_interval_s:
+            eff += int((now - state.t0) / self.aging_interval_s)
+        deadline = state.deadline if state.deadline is not None else float("inf")
+        return (-eff, deadline, seq)
+
     def _enqueue(self, state: _RunState, tid: str) -> None:
         """Queue a task on the shared ready heap (lock held). The seq is
         sticky for the entry's lifetime: a backpressure re-queue keeps its
@@ -450,13 +486,29 @@ class ExecutionEngine:
         if tid in state.queued:
             return
         state.queued.add(tid)
+        now = time.perf_counter()
+        seq = next(self._seq)
         heapq.heappush(self._ready,
-                       (-state.priority, next(self._seq), tid, state))
+                       [self._order_key(state, seq, now), seq, tid, state])
+
+    def _age_ready(self, now: float) -> None:
+        """Recompute every queued entry's effective priority from its run's
+        age and re-heapify (lock held). Runs at most once per aging
+        interval — finer rebuilds can't change the integer aging credit."""
+        if (not self.aging_interval_s or not self._ready
+                or now - self._last_aged < self.aging_interval_s):
+            return
+        self._last_aged = now
+        for entry in self._ready:
+            entry[0] = self._order_key(entry[3], entry[1], now)
+        heapq.heapify(self._ready)
 
     def _dispatch_ready(self) -> None:
-        """Drain the ready heap — highest run priority first, FIFO within a
-        priority — as far as worker queues allow (lock held)."""
-        blocked: List[Tuple[int, int, str, _RunState]] = []
+        """Drain the ready heap (lock held) — highest effective priority
+        first, earliest deadline then FIFO within it — as far as worker
+        queues allow."""
+        self._age_ready(time.perf_counter())
+        blocked: List[List] = []
         while self._ready:
             entry = heapq.heappop(self._ready)
             _, _, tid, state = entry

@@ -700,6 +700,7 @@ def submit_run(project: "Project", cluster,
                shard_threshold_bytes: Optional[int] = None,
                max_shards: Optional[int] = None,
                priority: int = 0,
+               deadline_s: Optional[float] = None,
                validate: str = "off",
                lineage_pushdown: bool = True,
                **engine_kw):
@@ -708,8 +709,10 @@ def submit_run(project: "Project", cluster,
     `cluster` is anything ClusterLike (LocalCluster, remote.RemoteCluster).
     Tables over `shard_threshold_bytes` are scanned as up to `max_shards`
     (default: fleet size) parallel shard tasks. `priority` orders this
-    run's tasks on the engine's shared ready heap: higher wins contended
-    worker slots first; equal priorities stay FIFO. Extra keyword args
+    run's tasks on the engine's shared ready heap: higher effective
+    priority (static + aging credit) wins contended worker slots first;
+    among equal effective priorities an earlier `deadline_s` (this run's
+    SLO, seconds from submission) wins, then FIFO. Extra keyword args
     (`max_retries`, `speculation_factor`, `speculation_min_s`) forward to
     ``ExecutionEngine.submit`` — benchmarks disable straggler speculation
     this way so 1-CPU timing noise doesn't double-run multi-second tasks."""
@@ -753,7 +756,8 @@ def submit_run(project: "Project", cluster,
     plan = planner.plan(logical, branch=branch, run_id=run_id)
     return cluster.engine().submit(plan, project, client=client,
                                    journal_path=journal_path,
-                                   priority=priority, **engine_kw)
+                                   priority=priority, deadline_s=deadline_s,
+                                   **engine_kw)
 
 
 def execute_run(project: "Project", catalog: Catalog = None, cluster=None,

@@ -37,14 +37,40 @@ class PipelineServer:
     invocations."""
 
     def __init__(self, catalog, scratch_root: str, n_workers: int = 4,
-                 memory_gb: float = 4.0):
+                 memory_gb: float = 4.0, validate: str = "warn"):
         from repro.core.runtime import LocalCluster
 
+        if validate not in ("off", "warn", "strict"):
+            raise ValueError(f"validate must be off/warn/strict, got "
+                             f"{validate!r}")
         self.catalog = catalog
+        self.validate = validate
         self.cluster = LocalCluster(catalog, catalog.store, scratch_root,
                                     n_workers=n_workers, memory_gb=memory_gb)
         self._seq = 0
         self._lock = threading.Lock()
+        self._checked: set = set()   # id(project)s already analyzed
+
+    def register(self, project, branch: str = "main") -> None:
+        """Statically analyze a project once, per the server's `validate`
+        mode — a broken project fails at deploy time, not on its first
+        request. `submit` registers implicitly on first sight."""
+        import sys
+
+        if self.validate == "off":
+            return
+        with self._lock:
+            if id(project) in self._checked:
+                return
+            self._checked.add(id(project))
+        from repro.analysis import check_project
+
+        report = check_project(project, catalog=self.catalog, branch=branch)
+        if self.validate == "strict":
+            report.raise_first()
+        elif report.diagnostics:
+            print(f"[serve] project {project.name!r}:\n{report.render()}",
+                  file=sys.stderr)
 
     def submit(self, project, branch: str = "main",
                targets: Optional[Sequence[str]] = None,
@@ -53,6 +79,7 @@ class PipelineServer:
         the fleet through the cluster's engine."""
         from repro.core.runtime import Client, submit_run
 
+        self.register(project, branch=branch)
         with self._lock:
             self._seq += 1
             run_id = run_id or f"serve-{self._seq:06d}"

@@ -1,0 +1,26 @@
+"""Request-level serving over the run engine (see gateway module docs).
+
+``DecodeService`` (model continuous batching) lives behind a lazy import
+so gateway-only users never pay the jax import.
+"""
+
+from .admission import AdmissionController, AdmissionError, TokenBucket
+from .batcher import MicroBatcher, PendingRequest
+from .gateway import Endpoint, Gateway, GatewayError, Ticket
+from .slo import BATCH, INTERACTIVE, SLO_CLASSES, STANDARD, SLOClass, resolve_slo
+
+__all__ = [
+    "AdmissionController", "AdmissionError", "TokenBucket",
+    "MicroBatcher", "PendingRequest",
+    "Endpoint", "Gateway", "GatewayError", "Ticket",
+    "BATCH", "INTERACTIVE", "STANDARD", "SLO_CLASSES", "SLOClass",
+    "resolve_slo",
+    "DecodeService",
+]
+
+
+def __getattr__(name):
+    if name == "DecodeService":
+        from .decode import DecodeService
+        return DecodeService
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

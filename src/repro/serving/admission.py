@@ -1,0 +1,114 @@
+"""Front-door admission control for the serving gateway.
+
+Two independent bounds, both checked before a request ever touches the
+batching queues:
+
+- a global bound on outstanding requests (queued + in flight), so a
+  slow fleet surfaces as fast AdmissionError backpressure at the front
+  door instead of an unbounded queue the fleet then OOMs digesting;
+- a per-tenant token bucket, so one chatty tenant cannot crowd every
+  other tenant out of the global bound (fair share by rate, with a
+  burst allowance for spiky-but-light callers).
+
+Callers are expected to catch AdmissionError and retry after
+``retry_after_s`` (tenant throttle) or back off (queue full).
+"""
+
+import threading
+import time
+from typing import Dict, Optional
+
+
+class AdmissionError(RuntimeError):
+    """A request was refused at the front door (never partially run).
+
+    ``reason`` is ``"queue_full"`` (global outstanding-request bound) or
+    ``"tenant_throttled"`` (this tenant's token bucket is empty, retry
+    after ``retry_after_s`` seconds).
+    """
+
+    def __init__(self, reason: str, tenant: Optional[str] = None,
+                 retry_after_s: Optional[float] = None):
+        self.reason = reason
+        self.tenant = tenant
+        self.retry_after_s = retry_after_s
+        msg = reason if tenant is None else f"{reason} (tenant={tenant!r})"
+        if retry_after_s is not None:
+            msg += f", retry after {retry_after_s:.3f}s"
+        super().__init__(msg)
+
+
+class TokenBucket:
+    """Classic token bucket: ``rate`` tokens/s refill, ``burst`` capacity.
+
+    Not thread-safe on its own — AdmissionController serializes access
+    under its lock.
+    """
+
+    def __init__(self, rate: float, burst: float):
+        if rate <= 0 or burst <= 0:
+            raise ValueError("rate and burst must be positive")
+        self.rate = rate
+        self.burst = float(burst)
+        self.tokens = float(burst)
+        self.stamp = time.perf_counter()
+
+    def try_take(self, now: float) -> Optional[float]:
+        """Take one token; return None on success, else seconds until
+        one token will be available."""
+        self.tokens = min(self.burst, self.tokens + (now - self.stamp) * self.rate)
+        self.stamp = now
+        if self.tokens >= 1.0:
+            self.tokens -= 1.0
+            return None
+        return (1.0 - self.tokens) / self.rate
+
+
+class AdmissionController:
+    """Bounded outstanding-request count + per-tenant token buckets."""
+
+    def __init__(self, max_pending: int, tenant_rate: float,
+                 tenant_burst: float):
+        if max_pending <= 0:
+            raise ValueError("max_pending must be positive")
+        self.max_pending = max_pending
+        self.tenant_rate = tenant_rate
+        self.tenant_burst = tenant_burst
+        self._lock = threading.Lock()
+        self._pending = 0              # guard: _lock
+        self._buckets: Dict[str, TokenBucket] = {}  # guard: _lock
+        self._admitted = 0             # guard: _lock
+        self._rejected: Dict[str, int] = {}  # guard: _lock
+
+    def admit(self, tenant: str = "default") -> None:
+        """Admit one request or raise AdmissionError; on success the
+        caller owes exactly one release() when the request resolves."""
+        now = time.perf_counter()
+        with self._lock:
+            if self._pending >= self.max_pending:
+                self._rejected["queue_full"] = self._rejected.get("queue_full", 0) + 1
+                raise AdmissionError("queue_full", tenant=tenant)
+            bucket = self._buckets.get(tenant)
+            if bucket is None:
+                bucket = self._buckets[tenant] = TokenBucket(
+                    self.tenant_rate, self.tenant_burst)
+            wait = bucket.try_take(now)
+            if wait is not None:
+                self._rejected["tenant_throttled"] = (
+                    self._rejected.get("tenant_throttled", 0) + 1)
+                raise AdmissionError("tenant_throttled", tenant=tenant,
+                                     retry_after_s=wait)
+            self._pending += 1
+            self._admitted += 1
+
+    def release(self) -> None:
+        """Return one admitted request's slot (resolved or failed)."""
+        with self._lock:
+            if self._pending <= 0:
+                raise RuntimeError("release() without matching admit()")
+            self._pending -= 1
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {"pending": self._pending, "admitted": self._admitted,
+                    "rejected": dict(self._rejected)}

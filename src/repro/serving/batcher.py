@@ -1,0 +1,131 @@
+"""Micro-batching queues for the serving gateway.
+
+Requests land in per-(endpoint, SLO class) queues — only requests for
+the same registered endpoint under the same SLO tier may share a
+pipeline run, so a batch's run priority and deadline are well defined.
+A queue flushes when any of three knobs trips:
+
+- it holds ``max_batch_requests`` requests,
+- its rows sum past ``max_batch_rows`` (bounds the coalesced table so a
+  batch of heavy requests doesn't blow the working-set math PR 2 set up),
+- its oldest member has waited ``slo.max_wait_s`` (latency floor — an
+  interactive request never waits long for co-riders that may not come).
+
+``next_batch`` blocks the single dispatcher thread until some queue is
+ready, using the earliest pending flush deadline as the wait bound, so
+idle gateways sleep instead of spinning.
+"""
+
+import threading
+import time
+from typing import Dict, List, Optional, Tuple
+
+from .slo import SLOClass
+
+
+class PendingRequest:
+    """One admitted request waiting in a batching queue."""
+
+    def __init__(self, ticket, endpoint: str, slo: SLOClass, table,
+                 enqueued: float):
+        self.ticket = ticket
+        self.endpoint = endpoint
+        self.slo = slo
+        self.table = table
+        self.enqueued = enqueued
+
+
+class MicroBatcher:
+    def __init__(self, max_batch_requests: int, max_batch_rows: int):
+        if max_batch_requests < 1:
+            raise ValueError("max_batch_requests must be >= 1")
+        self.max_batch_requests = max_batch_requests
+        self.max_batch_rows = max_batch_rows
+        self._lock = threading.Lock()
+        self._ready = threading.Condition(self._lock)
+        # guard: _lock
+        self._queues: Dict[Tuple[str, str], List[PendingRequest]] = {}
+        self._slos: Dict[Tuple[str, str], SLOClass] = {}  # guard: _lock
+        self._closed = False           # guard: _lock
+
+    def add(self, req: PendingRequest) -> None:
+        key = (req.endpoint, req.slo.name)
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("batcher is closed")
+            self._queues.setdefault(key, []).append(req)
+            self._slos[key] = req.slo
+            self._ready.notify()
+
+    def _rows(self, queue: List[PendingRequest]) -> int:
+        """(lock held) total rows currently queued under one key."""
+        return sum(r.table.num_rows for r in queue)
+
+    def _flush_key(self, now: float) -> Optional[Tuple[str, str]]:
+        """(lock held) a key whose queue should flush now, else None.
+        Prefers the queue whose oldest request has waited longest."""
+        best, best_age = None, -1.0
+        for key, queue in self._queues.items():
+            if not queue:
+                continue
+            slo = self._slos[key]
+            age = now - queue[0].enqueued
+            full = (len(queue) >= self.max_batch_requests
+                    or self._rows(queue) >= self.max_batch_rows)
+            if (full or age >= slo.max_wait_s) and age > best_age:
+                best, best_age = key, age
+        return best
+
+    def _next_deadline(self, now: float) -> Optional[float]:
+        """(lock held) seconds until the earliest pending flush."""
+        soonest = None
+        for key, queue in self._queues.items():
+            if not queue:
+                continue
+            due = queue[0].enqueued + self._slos[key].max_wait_s - now
+            if soonest is None or due < soonest:
+                soonest = due
+        return soonest
+
+    def next_batch(self, timeout: Optional[float] = None
+                   ) -> Optional[List[PendingRequest]]:
+        """Block until a queue is ready to flush; return its requests
+        (up to max_batch_requests, trimmed to max_batch_rows but always
+        at least one). Returns None on timeout, or when closed and
+        drained."""
+        end = None if timeout is None else time.perf_counter() + timeout
+        with self._lock:
+            while True:
+                now = time.perf_counter()
+                key = self._flush_key(now)
+                if key is None and self._closed:
+                    # closed: flush any remainder immediately
+                    key = next((k for k, q in self._queues.items() if q), None)
+                    if key is None:
+                        return None
+                if key is not None:
+                    queue = self._queues[key]
+                    batch, rows = [], 0
+                    while queue and len(batch) < self.max_batch_requests:
+                        nxt = queue[0]
+                        if batch and rows + nxt.table.num_rows > self.max_batch_rows:
+                            break
+                        batch.append(queue.pop(0))
+                        rows += nxt.table.num_rows
+                    return batch
+                wait = self._next_deadline(now)
+                if end is not None:
+                    remaining = end - now
+                    if remaining <= 0:
+                        return None
+                    wait = remaining if wait is None else min(wait, remaining)
+                self._ready.wait(timeout=wait)
+
+    def close(self) -> None:
+        with self._lock:
+            self._closed = True
+            self._ready.notify_all()
+
+    def depth(self) -> int:
+        with self._lock:
+            return sum(len(q) for q in self._queues.values())

@@ -1,0 +1,100 @@
+"""Continuous-batching decode service: the model-serving seam.
+
+`train/serve_step.py`'s ContinuousBatcher gives the mechanism — a fixed
+pool of decode slots at independent positions. DecodeService adds the
+serving policy on top: a request queue, swap-IN of queued prompts into
+any freed slot mid-decode (other slots' positions stay frozen during
+the replay), and swap-OUT of finished sequences the step they reach
+their token budget — the vLLM-style loop where the decode batch
+composition changes continuously instead of draining between batches.
+
+Kept import-light at module load by design: jax is only pulled in when
+a service is constructed, so the pipeline-serving gateway can be used
+on fleets with no model stack warm.
+"""
+
+from typing import Dict, List, Optional, Tuple
+
+
+class DecodeService:
+    """Queue + slot policy over a ContinuousBatcher.
+
+    Single-threaded by design — callers drive it with ``run()`` (drain
+    everything) or ``step()`` (one decode step, for interleaved tests).
+    Greedy decode, so results are deterministic and must be byte-equal
+    to one-request-at-a-time ``serve_step.generate``.
+    """
+
+    def __init__(self, model, cfg, params, n_slots: int, max_seq: int):
+        from repro.train.serve_step import ContinuousBatcher
+
+        self.batcher = ContinuousBatcher(model, cfg, params, n_slots,
+                                         max_seq)
+        self.max_seq = max_seq
+        self._next_id = 0
+        self._queue: List[int] = []                # request ids awaiting a slot
+        self._requests: Dict[int, Tuple[List[int], int]] = {}
+        self._slot_req: Dict[int, int] = {}        # slot -> request id
+        self._results: Dict[int, List[int]] = {}
+
+    def submit(self, prompt, max_new_tokens: int) -> int:
+        """Enqueue one request; returns its id (see ``result``)."""
+        prompt = [int(t) for t in prompt]
+        if len(prompt) + max_new_tokens > self.max_seq:
+            raise ValueError(f"prompt ({len(prompt)}) + max_new_tokens "
+                             f"({max_new_tokens}) exceeds max_seq "
+                             f"{self.max_seq}")
+        rid = self._next_id
+        self._next_id += 1
+        self._requests[rid] = (prompt, max_new_tokens)
+        self._queue.append(rid)
+        return rid
+
+    def _swap_in(self) -> int:
+        """Admit queued requests into free slots; returns swap-in count."""
+        n = 0
+        for slot in self.batcher.free_slots():
+            if not self._queue:
+                break
+            rid = self._queue.pop(0)
+            prompt, _ = self._requests[rid]
+            self.batcher.admit(slot, prompt)
+            self._slot_req[slot] = rid
+            n += 1
+        return n
+
+    def _swap_out(self) -> int:
+        """Retire slots whose sequence hit its budget; returns count."""
+        n = 0
+        for slot, rid in list(self._slot_req.items()):
+            prompt, max_new = self._requests[rid]
+            if len(self.batcher.outputs[slot]) >= len(prompt) + max_new:
+                self._results[rid] = self.batcher.retire(slot)
+                del self._slot_req[slot]
+                n += 1
+        return n
+
+    def step(self) -> bool:
+        """Swap in, decode one step for every active slot, swap out.
+        Returns True while any work remains."""
+        self._swap_in()
+        if self._slot_req:
+            self.batcher.step()
+        self._swap_out()
+        return bool(self._slot_req or self._queue)
+
+    def run(self, max_steps: Optional[int] = None) -> None:
+        """Drive until every submitted request has a result."""
+        steps = 0
+        while self.step():
+            steps += 1
+            if max_steps is not None and steps > max_steps:
+                raise RuntimeError(f"decode did not drain in {max_steps} "
+                                   "steps")
+
+    def result(self, rid: int) -> List[int]:
+        """Full token sequence (prompt + generated) for a finished id."""
+        if rid not in self._results:
+            raise KeyError(f"request {rid} not finished (queued or "
+                           "decoding)")
+        return self._results[rid]

@@ -1,0 +1,390 @@
+"""The serving gateway: a request-level front door over the run engine.
+
+The engine (`core/engine.py`) thinks in pipeline runs; a serving workload
+thinks in requests — thousands of small request tables against a handful
+of registered pipelines. Running one pipeline per request wastes the
+warm fleet on per-run overheads (planning, the catalog commit, per-task
+environment binding, dispatch) that don't shrink with request size. The
+gateway closes that gap:
+
+1. **admission** — every request passes the AdmissionController first
+   (bounded outstanding count + per-tenant token buckets); refused
+   requests fail fast with AdmissionError, so overload surfaces as
+   backpressure at the front door instead of fleet OOM.
+2. **micro-batching** — admitted requests land in per-(endpoint, SLO)
+   queues and coalesce into one pipeline run per batch: the request
+   tables concat into one source table on a throwaway catalog branch,
+   the pipeline runs once, and the output splits back into per-request
+   row ranges. Amortizes every per-run cost across the batch.
+3. **SLO scheduling** — the batch's run is submitted with its SLO
+   class's static priority and deadline; the engine's shared ready heap
+   orders by effective priority (static + aging), then deadline, then
+   FIFO, so interactive batches preempt background runs on contended
+   slots without starving them.
+
+Coalescing is only sound when the pipeline is row-preserving: every
+model downstream of the request source table must be declared
+``rowwise=True`` (output row i depends only on input row i), so that
+running the concatenation equals concatenating the runs. ``register``
+proves that reachability statically; endpoints that fail it still serve
+— admitted, SLO-scheduled, one run per request — they just don't
+coalesce. As a belt-and-braces check, every coalesced run's output row
+count must equal the input row count or the whole batch fails loudly
+with GatewayError (never silently mis-split).
+"""
+
+import sys
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Dict, List, Optional, Union
+
+from repro.core import defaults
+
+from .admission import AdmissionController, AdmissionError  # noqa: F401
+from .batcher import MicroBatcher, PendingRequest
+from .slo import SLOClass, resolve_slo
+
+
+class GatewayError(RuntimeError):
+    """A request failed inside the gateway after admission (run failure,
+    row-count contract violation, unknown endpoint, shutdown)."""
+
+
+class Ticket:
+    """Caller's future for one admitted request."""
+
+    def __init__(self, endpoint: str, slo: SLOClass, tenant: str):
+        self.endpoint = endpoint
+        self.slo = slo
+        self.tenant = tenant
+        self.submitted = time.perf_counter()
+        self._done = threading.Event()
+        self._table = None
+        self._error: Optional[BaseException] = None
+        self._resolved_at: Optional[float] = None
+        self.batched_with = 0   # co-riders in this request's micro-batch
+
+    def _resolve(self, table) -> None:
+        self._table = table
+        self._resolved_at = time.perf_counter()
+        self._done.set()
+
+    def _fail(self, exc: BaseException) -> None:
+        self._error = exc
+        self._resolved_at = time.perf_counter()
+        self._done.set()
+
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    def result(self, timeout: Optional[float] = None):
+        """Block for the response table; raises GatewayError (or the
+        underlying run error) if the request failed."""
+        if not self._done.wait(timeout):
+            raise TimeoutError(f"request against {self.endpoint!r} still "
+                               "in flight")
+        if self._error is not None:
+            raise self._error
+        return self._table
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        """Submit-to-resolve wall time (None while in flight)."""
+        if self._resolved_at is None:
+            return None
+        return self._resolved_at - self.submitted
+
+
+class Endpoint:
+    """One registered pipeline: project + the request-table seam."""
+
+    def __init__(self, name: str, project, source_table: str, target: str,
+                 branch: str, coalescible: bool, why_not: str = ""):
+        self.name = name
+        self.project = project
+        self.source_table = source_table
+        self.target = target
+        self.branch = branch
+        self.coalescible = coalescible
+        self.why_not = why_not  # human-readable reason coalescing is off
+
+
+def _downstream_of(project, source_table: str) -> List:
+    """Specs whose transitive input closure includes source_table."""
+    out, known = [], {source_table}
+    # functions dict is insertion-ordered but deps may be declared in any
+    # order; iterate to fixpoint
+    pending = dict(project.functions)
+    changed = True
+    while changed:
+        changed = False
+        for name, spec in list(pending.items()):
+            if any(r.name in known for _, r in spec.inputs):
+                known.add(name)
+                out.append(spec)
+                del pending[name]
+                changed = True
+    return out
+
+
+def _coalescible(project, source_table: str, target: str):
+    """(ok, why_not): may requests for this endpoint share one run?"""
+    downstream = _downstream_of(project, source_table)
+    if target not in {s.name for s in downstream}:
+        return False, (f"target {target!r} is not downstream of "
+                       f"source table {source_table!r}")
+    for spec in downstream:
+        if spec.combinable is not None or spec.exchange is not None:
+            return False, (f"model {spec.name!r} declares a "
+                           "combine/exchange contract (not row-preserving)")
+        if not spec.rowwise:
+            return False, (f"model {spec.name!r} is not rowwise=True "
+                           "(output rows may not map 1:1 to request rows)")
+    return True, ""
+
+
+class Gateway:
+    """Request-level serving front door over one warm cluster.
+
+    Owns (or borrows via ``cluster=``) a LocalCluster; `register` binds
+    named endpoints; `submit` admits one request table and returns a
+    Ticket. ``validate`` mirrors ``bp.run``: ``"warn"`` (default) prints
+    analyzer diagnostics for a registered project to stderr, ``"strict"``
+    refuses registration on the first error-severity diagnostic,
+    ``"off"`` skips analysis.
+    """
+
+    def __init__(self, catalog, scratch_root: Optional[str] = None, *,
+                 cluster=None, n_workers: int = 4, memory_gb: float = 4.0,
+                 max_batch_requests: int = defaults.SERVE_MAX_BATCH_REQUESTS,
+                 max_batch_rows: int = defaults.SERVE_MAX_BATCH_ROWS,
+                 max_pending: int = defaults.SERVE_MAX_PENDING,
+                 tenant_rate: float = defaults.SERVE_TENANT_RATE,
+                 tenant_burst: float = defaults.SERVE_TENANT_BURST,
+                 max_inflight_batches: int = defaults.SERVE_MAX_INFLIGHT_BATCHES,
+                 validate: str = "warn"):
+        if validate not in ("off", "warn", "strict"):
+            raise ValueError(f"validate must be off/warn/strict, "
+                             f"got {validate!r}")
+        self.catalog = catalog
+        self.validate = validate
+        self._owns_cluster = cluster is None
+        if cluster is None:
+            if scratch_root is None:
+                raise ValueError("pass scratch_root= (or an existing "
+                                 "cluster=)")
+            from repro.core.runtime import LocalCluster
+            cluster = LocalCluster(catalog, catalog.store, scratch_root,
+                                   n_workers=n_workers, memory_gb=memory_gb)
+        self.cluster = cluster
+        self.admission = AdmissionController(max_pending, tenant_rate,
+                                             tenant_burst)
+        self._batcher = MicroBatcher(max_batch_requests, max_batch_rows)
+        self._pool = ThreadPoolExecutor(max_workers=max_inflight_batches,
+                                        thread_name_prefix="gw-batch")
+        self._lock = threading.Lock()
+        self._endpoints: Dict[str, Endpoint] = {}  # guard: _lock
+        self._seq = 0                 # guard: _lock (branch/run id counter)
+        self._closed = False          # guard: _lock
+        self._stats = {"requests": 0, "batches": 0, "runs": 0,
+                       "coalesced_requests": 0}  # guard: _lock
+        self._dispatcher = threading.Thread(target=self._dispatch_loop,
+                                            name="gw-dispatch", daemon=True)
+        self._dispatcher.start()
+
+    # -- registration -------------------------------------------------------
+
+    def register(self, name: str, project, source_table: str,
+                 target: Optional[str] = None,
+                 branch: str = "main") -> Endpoint:
+        """Bind a pipeline as a serving endpoint.
+
+        ``source_table`` is the request seam: each request's table is
+        written under that name (on a per-batch branch) before the run.
+        ``target`` is the model whose output answers the request; when
+        omitted it must be unambiguous — the project's single sink model.
+        Registration runs the static analyzer per the gateway's
+        ``validate`` mode, so a broken project fails at deploy time, not
+        on its first request.
+        """
+        if source_table not in project.source_tables():
+            raise GatewayError(
+                f"source_table {source_table!r} is not a source table of "
+                f"project {project.name!r} (has {project.source_tables()})")
+        if target is None:
+            consumed = {r.name for f in project.functions.values()
+                        for _, r in f.inputs}
+            sinks = sorted(set(project.functions) - consumed)
+            if len(sinks) != 1:
+                raise GatewayError(
+                    f"target= is required: project {project.name!r} has "
+                    f"{len(sinks)} sink models ({sinks})")
+            target = sinks[0]
+        elif target not in project.functions:
+            raise GatewayError(f"target {target!r} is not a model of "
+                               f"project {project.name!r}")
+
+        if self.validate != "off":
+            from repro.analysis import check_project
+            report = check_project(project, catalog=self.catalog,
+                                   branch=branch, targets=[target])
+            if self.validate == "strict":
+                report.raise_first()
+            elif report.diagnostics:
+                print(f"[gateway] endpoint {name!r}:\n{report.render()}",
+                      file=sys.stderr)
+
+        ok, why = _coalescible(project, source_table, target)
+        ep = Endpoint(name, project, source_table, target, branch,
+                      coalescible=ok, why_not=why)
+        with self._lock:
+            if self._closed:
+                raise GatewayError("gateway is closed")
+            self._endpoints[name] = ep
+        return ep
+
+    # -- request path -------------------------------------------------------
+
+    def submit(self, endpoint: str, table, slo: Union[str, SLOClass, None] = None,
+               tenant: str = "default") -> Ticket:
+        """Admit one request table; returns a Ticket immediately.
+
+        Raises AdmissionError (front door refused — nothing ran) or
+        GatewayError (unknown endpoint / closed). The admission slot is
+        held until the ticket resolves or fails.
+        """
+        with self._lock:
+            if self._closed:
+                raise GatewayError("gateway is closed")
+            ep = self._endpoints.get(endpoint)
+            registered = sorted(self._endpoints)
+        if ep is None:
+            raise GatewayError(f"unknown endpoint {endpoint!r}; registered: "
+                               f"{registered}")
+        slo_cls = resolve_slo(slo)
+        self.admission.admit(tenant)  # raises AdmissionError
+        ticket = Ticket(endpoint, slo_cls, tenant)
+        req = PendingRequest(ticket, endpoint, slo_cls, table,
+                             time.perf_counter())
+        with self._lock:
+            self._stats["requests"] += 1
+        try:
+            if ep.coalescible:
+                self._batcher.add(req)
+            else:
+                # still admitted + SLO-scheduled, just never coalesced
+                self._pool.submit(self._run_batch, [req])
+        except BaseException as e:
+            self.admission.release()
+            ticket._fail(e)
+            raise
+        return ticket
+
+    def invoke(self, endpoint: str, table, **kw):
+        """Blocking convenience: submit + result()."""
+        return self.submit(endpoint, table, **kw).result()
+
+    # -- batch execution ----------------------------------------------------
+
+    def _dispatch_loop(self) -> None:
+        while True:
+            batch = self._batcher.next_batch(timeout=0.2)
+            if batch:
+                self._pool.submit(self._run_batch, batch)
+                continue
+            with self._lock:
+                if self._closed:
+                    return
+
+    def _next_seq(self) -> int:
+        with self._lock:
+            self._seq += 1
+            return self._seq
+
+    def _run_batch(self, batch: List[PendingRequest]) -> None:
+        """Coalesce -> one run on a throwaway branch -> split -> resolve."""
+        from repro.columnar.table import concat_tables
+        from repro.core.runtime import Client, submit_run
+
+        with self._lock:
+            ep = self._endpoints[batch[0].endpoint]
+        slo = batch[0].slo
+        seq = self._next_seq()
+        run_id = f"gw-{ep.name}-{seq:06d}"
+        branch = f"serve/{ep.name}/{seq:06d}"
+        try:
+            coalesced = (batch[0].table if len(batch) == 1
+                         else concat_tables([r.table for r in batch]))
+            # the per-batch branch copies the base branch's commit chain,
+            # so base tables stay visible and the request table vanishes
+            # with the branch — main is never polluted by request data
+            self.catalog.create_branch(branch, from_branch=ep.branch)
+            self.catalog.write_table(ep.source_table, coalesced,
+                                     branch=branch,
+                                     message=f"serve batch {run_id}")
+            handle = submit_run(ep.project, self.cluster, branch=branch,
+                                targets=[ep.target], client=Client(),
+                                run_id=run_id, priority=slo.priority,
+                                deadline_s=slo.deadline_s)
+            result = handle.wait()
+            out = result.read(ep.target, self.cluster)
+            if not ep.coalescible:
+                # one request per run: no split, no row-preservation
+                # contract — the pipeline may aggregate freely
+                with self._lock:
+                    self._stats["batches"] += 1
+                    self._stats["runs"] += 1
+                batch[0].ticket._resolve(out)
+                return
+            if out.num_rows != coalesced.num_rows:
+                raise GatewayError(
+                    f"endpoint {ep.name!r}: target {ep.target!r} returned "
+                    f"{out.num_rows} rows for {coalesced.num_rows} request "
+                    "rows — the pipeline is not row-preserving, so the "
+                    "batch cannot be split back per-request (register with "
+                    "rowwise models or a non-coalescible endpoint)")
+            with self._lock:
+                self._stats["batches"] += 1
+                self._stats["runs"] += 1
+                if len(batch) > 1:
+                    self._stats["coalesced_requests"] += len(batch)
+            start = 0
+            for req in batch:
+                n = req.table.num_rows
+                req.ticket.batched_with = len(batch) - 1
+                req.ticket._resolve(out.slice(start, n))
+                start += n
+        except BaseException as e:
+            for req in batch:
+                req.ticket._fail(e)
+        finally:
+            for _ in batch:
+                self.admission.release()
+
+    # -- introspection / lifecycle -----------------------------------------
+
+    def stats(self) -> dict:
+        with self._lock:
+            out = dict(self._stats)
+        out["admission"] = self.admission.stats()
+        out["queued"] = self._batcher.depth()
+        return out
+
+    def close(self) -> None:
+        """Drain queued requests, then stop. Idempotent."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+        self._batcher.close()
+        self._dispatcher.join(timeout=30)
+        self._pool.shutdown(wait=True)
+        if self._owns_cluster:
+            self.cluster.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

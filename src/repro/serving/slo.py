@@ -1,0 +1,58 @@
+"""SLO classes for the serving gateway.
+
+A request names an SLO class at submission; the class pins three things
+at once so they cannot drift apart per-request:
+
+- ``priority``: the static engine priority its batch's run is submitted
+  with (the engine adds aging credit on top, see ``core/engine.py``)
+- ``deadline_s``: the run deadline forwarded to the engine's ready heap
+  (ties between equal effective priorities break toward the earlier
+  deadline); ``None`` means best-effort
+- ``max_wait_s``: how long the micro-batcher may hold this request open
+  waiting for more coalescible requests before flushing a partial batch
+
+The three built-ins mirror the usual serving tiers: ``interactive``
+(user-facing, flush almost immediately), ``standard`` (the default),
+``batch`` (background, wait longest / yield slots to everyone else).
+"""
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Union
+
+
+@dataclass(frozen=True)
+class SLOClass:
+    name: str
+    priority: int            # static engine priority for the batch's run
+    deadline_s: Optional[float]  # run deadline (seconds from submit); None = best effort
+    max_wait_s: float        # batcher holds a partial batch at most this long
+
+    def __post_init__(self):
+        if self.max_wait_s < 0:
+            raise ValueError("max_wait_s must be >= 0")
+        if self.deadline_s is not None and self.deadline_s <= 0:
+            raise ValueError("deadline_s must be positive or None")
+
+
+INTERACTIVE = SLOClass("interactive", priority=10, deadline_s=1.0, max_wait_s=0.01)
+STANDARD = SLOClass("standard", priority=5, deadline_s=5.0, max_wait_s=0.05)
+BATCH = SLOClass("batch", priority=0, deadline_s=None, max_wait_s=0.25)
+
+SLO_CLASSES: Dict[str, SLOClass] = {
+    c.name: c for c in (INTERACTIVE, STANDARD, BATCH)
+}
+
+
+def resolve_slo(slo: Union[str, SLOClass, None]) -> SLOClass:
+    """Accept a class name, an SLOClass instance (custom tiers are fine),
+    or None (-> standard)."""
+    if slo is None:
+        return STANDARD
+    if isinstance(slo, SLOClass):
+        return slo
+    try:
+        return SLO_CLASSES[slo]
+    except KeyError:
+        raise ValueError(
+            f"unknown SLO class {slo!r}; built-ins: {sorted(SLO_CLASSES)} "
+            "(or pass an SLOClass instance)") from None

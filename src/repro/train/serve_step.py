@@ -99,7 +99,12 @@ class ContinuousBatcher:
         self.max_seq = max_seq
         import jax.numpy as jnp
 
-        shapes = model.cache_shapes(n_slots, max_seq, dtype=jnp.float32)
+        # the model's native cache dtype, NOT a widened one: generate()
+        # decodes against default-dtype caches, and continuous batching
+        # must be byte-identical to that one-request-at-a-time path — a
+        # float32 cache here drifts from the bf16 reference once rounding
+        # flips an argmax a few tokens in
+        shapes = model.cache_shapes(n_slots, max_seq)
         self.caches = jax.tree.map(
             lambda sds: jnp.zeros(sds.shape, sds.dtype), shapes)
         # widen pos to per-slot (G, B, W)
@@ -115,12 +120,34 @@ class ContinuousBatcher:
         self._step = jax.jit(
             lambda p, b: model.decode(p, b))
 
+    def free_slots(self):
+        """Slot ids currently free (retired or never admitted)."""
+        import numpy as np
+
+        return [s for s in range(self.n_slots)
+                if int(np.asarray(self.indices)[s]) < 0]
+
+    def reset_slot(self, slot: int) -> None:
+        """Clear one slot's ring-buffer pos lane. Retired slots keep stale
+        keys whose pos <= a new request's indices would alias into its
+        attention window; resetting to -1 masks them out."""
+        import jax.numpy as jnp
+
+        self.caches = jax.tree_util.tree_map_with_path(
+            lambda p, leaf: (leaf.at[:, slot].set(-1)
+                             if (hasattr(p[-1], "key") and p[-1].key == "pos")
+                             else leaf), self.caches)
+
     def admit(self, slot: int, prompt) -> None:
         """Replay a prompt into one slot (others keep decoding positions
-        frozen via negative indices)."""
+        frozen via negative indices). The slot must be free; its stale
+        pos lane from any previous occupant is reset automatically."""
         import numpy as np
         import jax.numpy as jnp
 
+        if int(np.asarray(self.indices)[slot]) >= 0:
+            raise ValueError(f"slot {slot} is busy (retire it first)")
+        self.reset_slot(slot)
         prompt = np.asarray(prompt, np.int32)
         for t, tok in enumerate(prompt):
             idx = jnp.full((self.n_slots,), -1, jnp.int32).at[slot].set(t)

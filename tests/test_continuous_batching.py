@@ -79,6 +79,82 @@ def test_slot_reuse_after_retire(setup):
     assert first != second
 
 
+def test_admit_busy_slot_rejected(setup):
+    cfg, model, params = setup
+    b = ss.ContinuousBatcher(model, cfg, params, n_slots=2, max_seq=16)
+    b.admit(0, [5, 9, 3])
+    with pytest.raises(ValueError, match="busy"):
+        b.admit(0, [1, 2])
+    assert b.free_slots() == [1]
+    b.retire(0)
+    assert b.free_slots() == [0, 1]
+
+
+def test_slot_reuse_resets_pos_lane_automatically(setup):
+    """admit() must clear the slot's stale ring-buffer pos lane itself —
+    the manual reset in test_slot_reuse_after_retire becomes redundant."""
+    cfg, model, params = setup
+    b = ss.ContinuousBatcher(model, cfg, params, n_slots=1, max_seq=24)
+    b.admit(0, [5, 9, 3])
+    for _ in range(3):
+        b.step()
+    b.retire(0)
+    b.admit(0, [30, 4, 8, 2])       # no manual cache surgery
+    for _ in range(3):
+        b.step()
+    want = _reference(model, cfg, params, [30, 4, 8, 2], steps=3, max_seq=24)
+    assert b.retire(0) == want
+
+
+def test_ragged_batch_parity(setup):
+    """Prompts of different lengths decoding different step counts in one
+    slot pool must each match their solo lockstep reference exactly."""
+    from repro.serving import DecodeService
+
+    cfg, model, params = setup
+    requests = [([5, 9, 3, 17, 11, 2, 7], 3),
+                ([30, 4], 6),
+                ([8], 5),
+                ([12, 1, 1, 9], 4)]
+    svc = DecodeService(model, cfg, params, n_slots=2, max_seq=24)
+    rids = [svc.submit(p, n) for p, n in requests]
+    svc.run(max_steps=200)
+    for rid, (prompt, steps) in zip(rids, requests):
+        want = _reference(model, cfg, params, prompt, steps=steps,
+                          max_seq=24)
+        assert svc.result(rid) == want
+
+
+def test_mid_decode_swap_in_and_out(setup):
+    """With 2 slots and 3 requests, the third must swap INTO the slot the
+    first finished request swapped OUT of, mid-decode of the second."""
+    from repro.serving import DecodeService
+
+    cfg, model, params = setup
+    svc = DecodeService(model, cfg, params, n_slots=2, max_seq=24)
+    r_short = svc.submit([5, 9], 2)       # finishes first, frees a slot
+    r_long = svc.submit([30, 4, 8, 2], 8)
+    r_queued = svc.submit([17, 3, 6], 3)  # waits for the freed slot
+
+    swapped_out = swapped_in = False
+    while True:
+        svc._swap_in()
+        if r_queued in svc._slot_req.values() and r_short in svc._results:
+            swapped_in = True
+        if not (svc._slot_req or svc._queue):
+            break
+        svc.batcher.step()
+        if svc._swap_out() and r_short in svc._results and not swapped_in:
+            swapped_out = True
+    assert swapped_out and swapped_in
+    for rid, (prompt, steps) in [(r_short, ([5, 9], 2)),
+                                 (r_long, ([30, 4, 8, 2], 8)),
+                                 (r_queued, ([17, 3, 6], 3))]:
+        want = _reference(model, cfg, params, prompt, steps=steps,
+                          max_seq=24)
+        assert svc.result(rid) == want
+
+
 def test_recurrent_arch_rejected(setup):
     cfg = smoke_config("xlstm-125m")
     model = build_model(cfg)

@@ -1,6 +1,9 @@
 """Priority-aware ready queue: the engine's shared heap orders contended
-dispatch by (run priority desc, FIFO seq) instead of pure FIFO."""
+dispatch by (effective priority desc, deadline, FIFO seq) instead of pure
+FIFO — including monotonic priority aging so sustained high-priority load
+cannot starve a queued low-priority run."""
 import threading
+import time
 
 import numpy as np
 import pytest
@@ -36,24 +39,26 @@ def _tagged_project(tag, order, lock):
     return proj
 
 
-def _submit(engine, cat, cluster, proj, priority):
+def _submit(engine, cat, cluster, proj, **submit_kw):
     plan = Planner(cat, cluster.profiles()).plan(build_logical_plan(proj))
-    return engine.submit(plan, proj, priority=priority)
+    return engine.submit(plan, proj, **submit_kw)
 
 
-def _contended_engine(cat, tmp_path):
+def _contended_engine(cat, tmp_path, **engine_kw):
     """One worker, one slot: every queued task competes for the same slot,
     so dispatch order is exactly the ready-heap order."""
     cluster = LocalCluster(cat, cat.store, str(tmp_path / "dp"), n_workers=1)
-    engine = ExecutionEngine(cluster, worker_queue_depth=1)
+    engine = ExecutionEngine(cluster, worker_queue_depth=1, **engine_kw)
     cluster._engine = engine
     return cluster, engine
 
 
-def _run_gated(cat, tmp_path, submissions):
+def _run_gated(cat, tmp_path, submissions, engine_kw=None, settle_s=0.0):
     """Occupy the only worker slot with a gate task, submit `submissions`
-    while it blocks, then release and return the observed execution order."""
-    cluster, engine = _contended_engine(cat, tmp_path)
+    (a list of (tag, submit-kwargs); a bare int means priority) while it
+    blocks — sleeping `settle_s` between consecutive submissions — then
+    release and return the observed execution order."""
+    cluster, engine = _contended_engine(cat, tmp_path, **(engine_kw or {}))
     order, lock = [], threading.Lock()
     release = threading.Event()
     started = threading.Event()
@@ -68,10 +73,14 @@ def _run_gated(cat, tmp_path, submissions):
     try:
         gate_handle = _submit(engine, cat, cluster, gate_proj, priority=0)
         assert started.wait(timeout=30)     # worker slot is now occupied
-        handles = [
-            _submit(engine, cat, cluster,
-                    _tagged_project(tag, order, lock), prio)
-            for tag, prio in submissions]
+        handles = []
+        for i, (tag, kw) in enumerate(submissions):
+            if isinstance(kw, int):
+                kw = {"priority": kw}
+            if i and settle_s:
+                time.sleep(settle_s)
+            handles.append(_submit(engine, cat, cluster,
+                                   _tagged_project(tag, order, lock), **kw))
         release.set()
         gate_handle.wait(timeout=60)
         for h in handles:
@@ -93,6 +102,36 @@ def test_equal_priority_stays_fifo(cat, tmp_path):
     assert order == ["first", "second"]
 
 
+def test_priority_aging_prevents_starvation(cat, tmp_path):
+    """A queued low-priority run accrues +1 effective priority per aging
+    interval: after waiting ~16 intervals it must beat a freshly queued
+    priority-10 run. Without aging (the old static heap) `high` always
+    dispatches first here."""
+    order = _run_gated(cat, tmp_path, [("low", 0), ("high", 10)],
+                       engine_kw={"aging_interval_s": 0.05}, settle_s=0.8)
+    assert order == ["low", "high"]
+
+
+def test_aging_disabled_keeps_static_order(cat, tmp_path):
+    """aging_interval_s=None is the static baseline: the same wait changes
+    nothing and the high-priority run still preempts."""
+    order = _run_gated(cat, tmp_path, [("low", 0), ("high", 10)],
+                       engine_kw={"aging_interval_s": None}, settle_s=0.8)
+    assert order == ["high", "low"]
+
+
+def test_earlier_deadline_breaks_priority_ties(cat, tmp_path):
+    """Equal effective priorities: the run with the earlier deadline wins
+    the contended slot even though it was submitted second (FIFO would run
+    `nodeadline` first)."""
+    order = _run_gated(
+        cat, tmp_path,
+        [("nodeadline", {"priority": 5}),
+         ("deadline", {"priority": 5, "deadline_s": 5.0})],
+        engine_kw={"aging_interval_s": None})
+    assert order == ["deadline", "nodeadline"]
+
+
 def test_submit_run_plumbs_priority(cat, tmp_path):
     cluster = LocalCluster(cat, cat.store, str(tmp_path / "dp"), n_workers=2)
     proj = bp.Project("plumb")
@@ -102,8 +141,9 @@ def test_submit_run_plumbs_priority(cat, tmp_path):
         return {"a": np.asarray(data.column("a").to_numpy())}
 
     try:
-        handle = bp.submit(proj, cluster=cluster, priority=7)
+        handle = bp.submit(proj, cluster=cluster, priority=7, deadline_s=9.0)
         assert handle._state.priority == 7
+        assert handle._state.deadline is not None
         handle.wait(timeout=60)
     finally:
         cluster.close()

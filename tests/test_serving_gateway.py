@@ -1,0 +1,317 @@
+"""Serving gateway: admission, micro-batching, SLO plumbing, and the
+coalescing correctness contract (batched results byte-identical to
+one-request-at-a-time serving)."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import repro as bp
+from repro.columnar import Catalog, ColumnTable, ObjectStore
+from repro.serving import (AdmissionController, AdmissionError, Gateway,
+                           GatewayError, MicroBatcher, PendingRequest,
+                           SLO_CLASSES, resolve_slo)
+from repro.serving.slo import STANDARD
+
+
+@pytest.fixture
+def cat(tmp_path):
+    c = Catalog(ObjectStore(str(tmp_path / "s3")))
+    # seed the request seam so plan-time schema checks see a real table
+    c.write_table("requests",
+                  ColumnTable.from_pydict({"x": np.asarray([0.0])}))
+    return c
+
+
+def _rowwise_project():
+    proj = bp.Project("serve-rowwise")
+
+    @proj.model(rowwise=True)
+    def scaled(data=bp.Model("requests", columns=["x"])):
+        return {"x": np.asarray(data.column("x").to_numpy()) * 2.0}
+
+    @proj.model(rowwise=True, materialize=True)
+    def shifted(data=bp.Model("scaled")):
+        return {"x": np.asarray(data.column("x").to_numpy()) + 1.0}
+
+    return proj
+
+
+def _req(vals):
+    return ColumnTable.from_pydict({"x": np.asarray(vals, np.float64)})
+
+
+def _gateway(cat, tmp_path, **kw):
+    kw.setdefault("n_workers", 2)
+    kw.setdefault("validate", "off")
+    return Gateway(cat, str(tmp_path / "dp"), **kw)
+
+
+# -- end-to-end ------------------------------------------------------------
+
+
+def test_roundtrip_single_request(cat, tmp_path):
+    gw = _gateway(cat, tmp_path)
+    try:
+        gw.register("ep", _rowwise_project(), "requests")
+        out = gw.invoke("ep", _req([1.0, 2.0, 3.0]))
+        assert out.column("x").to_numpy().tolist() == [3.0, 5.0, 7.0]
+    finally:
+        gw.close()
+
+
+def test_coalesced_batch_is_byte_identical_to_serial(cat, tmp_path):
+    """N requests submitted together must coalesce into fewer runs and
+    return exactly the tables serial one-request-per-run serving returns."""
+    requests = [_req(list(np.arange(float(n + 1)))) for n in range(6)]
+
+    serial = []
+    gw = _gateway(cat, tmp_path, max_batch_requests=1)
+    try:
+        gw.register("ep", _rowwise_project(), "requests")
+        for r in requests:
+            serial.append(gw.invoke("ep", r))
+        assert gw.stats()["runs"] == len(requests)
+    finally:
+        gw.close()
+
+    gw = _gateway(cat, tmp_path, max_batch_requests=8)
+    try:
+        gw.register("ep", _rowwise_project(), "requests")
+        tickets = [gw.submit("ep", r, slo="batch") for r in requests]
+        batched = [t.result(timeout=60) for t in tickets]
+        stats = gw.stats()
+        assert stats["runs"] < len(requests)
+        assert stats["coalesced_requests"] >= 2
+    finally:
+        gw.close()
+
+    for s, b in zip(serial, batched):
+        assert b.equals(s)
+
+
+def test_unknown_endpoint_and_closed_gateway(cat, tmp_path):
+    gw = _gateway(cat, tmp_path)
+    try:
+        with pytest.raises(GatewayError, match="unknown endpoint"):
+            gw.submit("nope", _req([1.0]))
+    finally:
+        gw.close()
+    with pytest.raises(GatewayError, match="closed"):
+        gw.submit("ep", _req([1.0]))
+
+
+# -- registration / validation ---------------------------------------------
+
+
+def test_register_rejects_bad_seam(cat, tmp_path):
+    gw = _gateway(cat, tmp_path)
+    try:
+        with pytest.raises(GatewayError, match="source table"):
+            gw.register("ep", _rowwise_project(), "not_a_source")
+        with pytest.raises(GatewayError, match="not a model"):
+            gw.register("ep", _rowwise_project(), "requests",
+                        target="missing")
+    finally:
+        gw.close()
+
+
+def test_strict_validation_fails_registration(cat, tmp_path):
+    """A project whose model reads a column the seam doesn't have must be
+    refused at registration under validate='strict' — deploy-time failure,
+    not first-request failure."""
+    proj = bp.Project("serve-broken")
+
+    @proj.model(rowwise=True)
+    def out(data=bp.Model("requests", columns=["no_such_column"])):
+        return {"x": np.asarray(data.column("no_such_column").to_numpy())}
+
+    gw = _gateway(cat, tmp_path, validate="strict")
+    try:
+        with pytest.raises(bp.BauplanError):
+            gw.register("ep", proj, "requests")
+    finally:
+        gw.close()
+
+
+def test_non_rowwise_endpoint_serves_without_coalescing(cat, tmp_path):
+    """A pipeline with a non-rowwise model can't share runs, but it still
+    serves correct per-request results through admission + SLO scheduling."""
+    proj = bp.Project("serve-agg")
+
+    @proj.model()
+    def total(data=bp.Model("requests", columns=["x"])):
+        return {"sum": np.asarray([data.column("x").to_numpy().sum()])}
+
+    gw = _gateway(cat, tmp_path)
+    try:
+        ep = gw.register("ep", proj, "requests")
+        assert not ep.coalescible
+        assert "rowwise" in ep.why_not
+        tickets = [gw.submit("ep", _req([1.0, 2.0])),
+                   gw.submit("ep", _req([10.0, 20.0, 30.0]))]
+        outs = [t.result(timeout=60) for t in tickets]
+        assert outs[0].column("sum").to_numpy().tolist() == [3.0]
+        assert outs[1].column("sum").to_numpy().tolist() == [60.0]
+        assert gw.stats()["coalesced_requests"] == 0
+    finally:
+        gw.close()
+
+
+def test_row_count_mismatch_fails_batch_loudly(cat, tmp_path):
+    """A model that LIES about rowwise (drops rows) must fail the batch
+    with GatewayError, never silently mis-split responses."""
+    proj = bp.Project("serve-liar")
+
+    @proj.model(rowwise=True)
+    def liar(data=bp.Model("requests", columns=["x"])):
+        x = np.asarray(data.column("x").to_numpy())
+        return {"x": x[: max(len(x) - 1, 0)]}   # drops the last row
+
+    gw = _gateway(cat, tmp_path)
+    try:
+        gw.register("ep", proj, "requests")
+        t = gw.submit("ep", _req([1.0, 2.0, 3.0]))
+        with pytest.raises(GatewayError, match="not row-preserving"):
+            t.result(timeout=60)
+    finally:
+        gw.close()
+
+
+# -- admission -------------------------------------------------------------
+
+
+def test_queue_full_admission_error():
+    ctl = AdmissionController(max_pending=2, tenant_rate=1000.0,
+                              tenant_burst=1000)
+    ctl.admit()
+    ctl.admit()
+    with pytest.raises(AdmissionError) as ei:
+        ctl.admit()
+    assert ei.value.reason == "queue_full"
+    ctl.release()
+    ctl.admit()     # slot freed -> admits again
+    assert ctl.stats()["rejected"]["queue_full"] == 1
+
+
+def test_tenant_token_bucket_throttles_per_tenant():
+    ctl = AdmissionController(max_pending=100, tenant_rate=5.0,
+                              tenant_burst=3)
+    for _ in range(3):
+        ctl.admit(tenant="chatty")
+    with pytest.raises(AdmissionError) as ei:
+        ctl.admit(tenant="chatty")
+    assert ei.value.reason == "tenant_throttled"
+    assert ei.value.tenant == "chatty"
+    assert 0 < ei.value.retry_after_s <= 1.0 / 5.0 + 0.05
+    # another tenant draws from its own bucket — unaffected
+    ctl.admit(tenant="quiet")
+
+
+def test_gateway_backpressure_surfaces_as_admission_error(cat, tmp_path):
+    """With max_pending=1 the second concurrent submit must be refused at
+    the front door while the first is still queued or running."""
+    gw = _gateway(cat, tmp_path, max_pending=1, max_batch_requests=1)
+    try:
+        gw.register("ep", _rowwise_project(), "requests")
+        t1 = gw.submit("ep", _req([1.0]))
+        with pytest.raises(AdmissionError) as ei:
+            gw.submit("ep", _req([2.0]))
+        assert ei.value.reason == "queue_full"
+        t1.result(timeout=60)       # resolving releases the slot
+        out = gw.invoke("ep", _req([3.0]))
+        assert out.column("x").to_numpy().tolist() == [7.0]
+    finally:
+        gw.close()
+
+
+# -- PipelineServer deploy-time validation ---------------------------------
+
+
+def test_pipeline_server_strict_register_rejects_broken_project(cat,
+                                                                tmp_path):
+    from repro.launch.serve import PipelineServer
+
+    proj = bp.Project("server-broken")
+
+    @proj.model()
+    def out(data=bp.Model("requests", columns=["ghost"])):
+        return {"x": np.asarray(data.column("ghost").to_numpy())}
+
+    server = PipelineServer(cat, str(tmp_path / "dp"), n_workers=1,
+                            validate="strict")
+    try:
+        with pytest.raises(bp.BauplanError):
+            server.register(proj)
+    finally:
+        server.close()
+
+
+def test_pipeline_server_warn_mode_still_serves(cat, tmp_path, capsys):
+    from repro.launch.serve import PipelineServer
+
+    proj = bp.Project("server-ok")
+
+    @proj.model()
+    def out(data=bp.Model("requests", columns=["x"])):
+        return {"x": np.asarray(data.column("x").to_numpy())}
+
+    server = PipelineServer(cat, str(tmp_path / "dp"), n_workers=1)
+    try:
+        res = server.invoke(proj)
+        assert res.run_id
+    finally:
+        server.close()
+
+
+# -- batcher / SLO units ----------------------------------------------------
+
+
+def test_slo_registry_and_resolution():
+    assert resolve_slo(None) is STANDARD
+    assert resolve_slo("interactive").priority > resolve_slo("batch").priority
+    custom = bp.SLOClass("gold", priority=20, deadline_s=0.5, max_wait_s=0.0)
+    assert resolve_slo(custom) is custom
+    with pytest.raises(ValueError, match="unknown SLO class"):
+        resolve_slo("platinum")
+    assert set(SLO_CLASSES) == {"interactive", "standard", "batch"}
+
+
+def _pending(endpoint, slo, rows):
+    return PendingRequest(object(), endpoint, slo,
+                          _req(list(np.arange(float(rows)))),
+                          time.perf_counter())
+
+
+def test_batcher_flushes_on_size_and_keeps_keys_separate():
+    mb = MicroBatcher(max_batch_requests=2, max_batch_rows=1 << 20)
+    slo = resolve_slo("batch")
+    mb.add(_pending("a", slo, 1))
+    mb.add(_pending("b", slo, 1))   # different endpoint: separate queue
+    mb.add(_pending("a", slo, 1))   # fills endpoint a's batch
+    batch = mb.next_batch(timeout=1.0)
+    assert [r.endpoint for r in batch] == ["a", "a"]
+    # endpoint b's lone request flushes on max_wait (0.25s for batch tier)
+    batch = mb.next_batch(timeout=1.0)
+    assert [r.endpoint for r in batch] == ["b"]
+
+
+def test_batcher_caps_batch_rows():
+    mb = MicroBatcher(max_batch_requests=8, max_batch_rows=10)
+    slo = resolve_slo("batch")
+    for _ in range(3):
+        mb.add(_pending("a", slo, 6))
+    batch = mb.next_batch(timeout=1.0)   # 6+6 > 10 -> only one fits
+    assert len(batch) == 1
+    assert mb.depth() == 2
+
+
+def test_batcher_max_wait_flushes_partial_batch():
+    mb = MicroBatcher(max_batch_requests=8, max_batch_rows=1 << 20)
+    mb.add(_pending("a", resolve_slo("interactive"), 1))
+    t0 = time.perf_counter()
+    batch = mb.next_batch(timeout=2.0)
+    waited = time.perf_counter() - t0
+    assert len(batch) == 1
+    assert waited < 1.0     # interactive max_wait is 10ms, not the timeout
