@@ -2,7 +2,8 @@ PYTHON ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
 .PHONY: test test-fast bench-smoke bench-sharding bench-combine \
-	bench-multihost bench-shuffle bench-serving serve-smoke lint check
+	bench-multihost bench-shuffle bench-serving bench-streaming \
+	serve-smoke lint check
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -30,6 +31,9 @@ bench-shuffle:
 
 bench-serving:
 	$(PYTHON) -m benchmarks.serving_gateway --json BENCH_serving.json
+
+bench-streaming:
+	$(PYTHON) -m benchmarks.streaming_chain --json BENCH_streaming.json
 
 serve-smoke:
 	$(PYTHON) -m repro.launch.serve --arch xlstm-125m --smoke --steps 8 --batch 2

@@ -23,8 +23,8 @@ def main() -> None:
 
     from benchmarks import (kernels_bench, multihost_scan, pipeline_cache,
                             serving_gateway, shard_combine, sharded_scan,
-                            shuffle_exchange, table1_limits, table2_envs,
-                            table3_passing, training_throughput)
+                            shuffle_exchange, streaming_chain, table1_limits,
+                            table2_envs, table3_passing, training_throughput)
 
     plan = [
         ("table1_limits", lambda: table1_limits.run(
@@ -47,6 +47,9 @@ def main() -> None:
             trials=5 if args.full else 3)),
         ("serving_gateway", lambda: serving_gateway.run(
             n_requests=160 if args.full else 80)),
+        ("streaming_chain", lambda: streaming_chain.run(
+            n_rows=1_500_000 if args.full else 400_000,
+            io_total_s=0.8 if args.full else 0.5)),
         ("kernels_bench", lambda: kernels_bench.run(
             n_rows=4_000_000 if args.full else 500_000)),
         ("training_throughput", lambda: training_throughput.run(

@@ -30,8 +30,11 @@ from repro.analysis.locklint import lint_files
 
 # package-relative: the engine's concurrency core plus the serving
 # front door (gateway/admission/batcher all share state across the
-# dispatcher thread, the batch pool and callers)
+# dispatcher thread, the batch pool and callers). channels.py joined when
+# the transport grew a budgeted LRU + live stream states (shared between
+# producer threads, the flight server and consumers)
 _INTERNAL_MODULES = ("core/engine.py", "core/runtime.py", "core/remote.py",
+                     "core/channels.py",
                      "serving/gateway.py", "serving/admission.py",
                      "serving/batcher.py")
 

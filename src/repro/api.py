@@ -102,11 +102,15 @@ def GroupByCombine(keys: Sequence[str], aggs: Dict[str, tuple],
     def combine(parts):
         return compute.combine_group_by(parts, keys, aggs, backend=backend)
 
+    def merge_states(parts):
+        return compute.merge_group_by_states(parts, keys, aggs)
+
     return CombineContract("group_by", partial, combine,
                            fingerprint=repr((keys, sorted(aggs.items()),
                                              backend)),
                            keys=tuple(keys),
-                           aggs=tuple(sorted(aggs.items())))
+                           aggs=tuple(sorted(aggs.items())),
+                           merge_states=merge_states)
 
 
 def JoinCombine(on: Sequence[str], probe: str, how: str = "inner",
@@ -135,10 +139,13 @@ def JoinCombine(on: Sequence[str], probe: str, how: str = "inner",
         return compute.partial_join(probe_t, build_t, on, how=how,
                                     suffix=suffix)
 
+    # per-chunk probe outputs concat into a valid partial state, so the
+    # combine itself doubles as the chunk-fold merge
     return CombineContract("join", partial, compute.combine_join,
                            shard_param=probe,
                            fingerprint=repr((on, probe, how, suffix)),
-                           keys=tuple(on))
+                           keys=tuple(on),
+                           merge_states=compute.combine_join)
 
 
 def StatsCombine() -> CombineContract:
@@ -151,8 +158,11 @@ def StatsCombine() -> CombineContract:
         (table,) = kw.values()
         return compute.partial_stats(table)
 
+    # combine_stats output has the stats schema itself — state-closed, so
+    # it merges per-chunk states as readily as per-shard ones
     return CombineContract("column_stats", partial, compute.combine_stats,
-                           fingerprint="stats")
+                           fingerprint="stats",
+                           merge_states=compute.combine_stats)
 
 
 # ---------------------------------------------------------------------------

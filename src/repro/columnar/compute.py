@@ -314,6 +314,75 @@ def combine_join(parts: Sequence[ColumnTable]) -> ColumnTable:
 
 
 # ---------------------------------------------------------------------------
+# chunk-incremental compute (streaming data plane)
+# ---------------------------------------------------------------------------
+# Streamed shards arrive as fixed-size row chunks. Rowwise functions apply
+# chunk-by-chunk (their contract distributes over any row split); partial
+# aggregations fold per-chunk states with a state-level merge that never
+# finalizes (mean keeps its __sum/__count pair), so nothing in the streamed
+# path ever concatenates the full input table.
+
+
+def iter_table_chunks(table: ColumnTable, chunk_rows: int):
+    """Yield zero-copy row slices of at most ``chunk_rows`` rows. Always
+    yields at least one chunk — an empty table streams as one empty chunk so
+    the downstream handle still carries the schema."""
+    if chunk_rows <= 0 or table.num_rows <= chunk_rows:
+        yield table
+        return
+    for start in range(0, table.num_rows, chunk_rows):
+        yield table.slice(start, min(chunk_rows, table.num_rows - start))
+
+
+def apply_rowwise_chunks(fn, chunks):
+    """Apply a rowwise function to each chunk of a stream. By the rowwise
+    contract ``fn(concat(chunks)) == concat(fn(chunks))``, so the chunked
+    output concatenates byte-identically to the materialized path."""
+    for chunk in chunks:
+        yield fn(chunk)
+
+
+def merge_group_by_states(parts: Sequence[ColumnTable], keys: Sequence[str],
+                          aggs: Dict[str, Tuple[str, str]]) -> ColumnTable:
+    """Merge ``partial_group_by`` states into one state of the SAME schema —
+    unlike ``combine_group_by`` nothing is finalized (a mean's __sum/__count
+    pair stays a pair), so the result can keep folding with later chunk
+    states or feed the ordinary combine downstream."""
+    parts = list(parts)
+    if not parts:
+        raise ValueError("merge of zero partial states")
+    nonempty = [p for p in parts if p.num_rows]
+    if not nonempty:
+        return parts[0]
+    if len(nonempty) == 1:
+        return nonempty[0]
+    merge_aggs: Dict[str, Tuple[str, str]] = {}
+    for out, (_, fn) in aggs.items():
+        if fn == "mean":
+            merge_aggs[f"{out}__sum"] = (f"{out}__sum", "sum")
+            merge_aggs[f"{out}__count"] = (f"{out}__count", "sum")
+        elif fn == "count":
+            merge_aggs[out] = (out, "sum")      # counts add up
+        else:
+            merge_aggs[out] = (out, fn)         # sum->sum, min->min, max->max
+    return group_by(concat_tables(nonempty), keys, merge_aggs)
+
+
+def fold_partial_states(states: Sequence[ColumnTable],
+                        merge) -> ColumnTable:
+    """Collapse per-chunk partial states with a state-closed merge. States
+    are one row per key (or one row per column for stats) — holding all of
+    them is cheap; the single merge keeps float accumulation order identical
+    to merging the same states at a combine point."""
+    states = list(states)
+    if not states:
+        raise ValueError("fold of zero partial states")
+    if len(states) == 1:
+        return states[0]
+    return merge(states)
+
+
+# ---------------------------------------------------------------------------
 # join
 # ---------------------------------------------------------------------------
 

@@ -19,6 +19,31 @@ Flight (across workers)." Four channels, one contract:
 
 Column projection is pushed INTO every channel (seekable format / flight
 ticket), so differential reads touch only requested bytes.
+
+Streaming data plane (on top of the four):
+
+  * ``chunked``    — an aggregate handle over a producer's fixed-size row
+                     chunks, each published through one of the channels above
+                     under ``{key}/c{i}``. ``get`` concatenates once at the
+                     consumer; ``get_stream`` yields chunks without ever
+                     materializing the whole table.
+  * ``stream``     — a PROVISIONAL handle the engine hands to a consumer
+                     while the producer is still appending: ``get_stream``
+                     follows the live stream (a condition variable locally, a
+                     chunk-framed flight request remotely) and ends exactly
+                     when the producer finishes. An aborted stream surfaces as
+                     ``ShardUnavailable`` so recovery re-executes the producer
+                     like any lost shard.
+
+The flight wire protocol frames PER CHUNK in both directions (one JSON
+header + raw buffers per chunk, then an ``end`` frame), so peak transfer
+memory is one chunk even for the legacy whole-table path.
+
+``DataTransport`` also enforces a memory budget: resident zero-copy bytes
+are tracked against ``memory_budget_bytes`` and cold entries LRU-spill to
+disk-backed colfiles, restored transparently (mmap) on access — observable
+through the ``resident_bytes`` / ``spilled_bytes`` / ``restored_bytes``
+stats counters.
 """
 from __future__ import annotations
 
@@ -29,13 +54,15 @@ import socket
 import struct
 import threading
 import uuid
-from typing import Dict, List, Optional, Sequence, Tuple
+from collections import OrderedDict
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.columnar import colfile
 from repro.columnar.objectstore import ObjectStore
-from repro.columnar.table import Column, ColumnTable
+from repro.columnar.table import Column, ColumnTable, concat_tables
+from repro.core import defaults
 
 
 def _fs_safe(key: str) -> str:
@@ -52,7 +79,7 @@ class TableHandle:
     nbytes: int
     num_rows: int
     location: str = ""      # path (mmap/objectstore) or host:port (flight)
-    parts: Tuple["TableHandle", ...] = ()   # channel == "partitioned" only
+    parts: Tuple["TableHandle", ...] = ()   # aggregate channels only
 
 
 def partitioned_handle(key: str,
@@ -83,6 +110,20 @@ def shuffle_handle(key: str, parts: Sequence[TableHandle]) -> TableHandle:
                        sum(p.num_rows for p in parts), "", parts)
 
 
+def chunked_handle(key: str, parts: Sequence[TableHandle],
+                   location: str = "") -> TableHandle:
+    """One streamed producer output: an ordered row-chunk sequence under a
+    single handle. ``get`` concatenates the chunks exactly once at the
+    consumer (byte-identical to a whole-table put); ``get_stream`` yields
+    them one at a time so a chunk-capable consumer never holds the table."""
+    parts = tuple(parts)
+    if not parts:
+        raise ValueError("chunked handle needs at least one chunk")
+    return TableHandle(key, "chunked",
+                       sum(p.nbytes for p in parts),
+                       sum(p.num_rows for p in parts), location, parts)
+
+
 class ShardUnavailable(ConnectionError):
     """One part of a partitioned read is gone (its producer worker died);
     carries the part key so the engine can re-execute just that shard."""
@@ -92,8 +133,18 @@ class ShardUnavailable(ConnectionError):
         self.key = key
 
 
+def _iter_chunks(table: ColumnTable, chunk_rows: int) -> Iterator[ColumnTable]:
+    """Zero-copy row slices of at most ``chunk_rows`` rows; an empty table
+    yields one empty chunk so the schema still travels."""
+    if chunk_rows <= 0 or table.num_rows <= chunk_rows:
+        yield table
+        return
+    for start in range(0, table.num_rows, chunk_rows):
+        yield table.slice(start, min(chunk_rows, table.num_rows - start))
+
+
 # ---------------------------------------------------------------------------
-# Flight: length-prefixed do_get over TCP
+# Flight: length-prefixed, chunk-framed do_get over TCP
 # ---------------------------------------------------------------------------
 
 _U64 = struct.Struct("<Q")
@@ -126,12 +177,57 @@ def _recv_frame(sock: socket.socket) -> bytes:
     return bytes(buf)
 
 
-class FlightServer:
-    """Per-worker 'Arrow Flight' endpoint streaming raw column buffers."""
+def _send_table_chunk(conn: socket.socket, table: ColumnTable,
+                      index: int) -> None:
+    """One chunk on the wire: a JSON header frame then the raw column
+    buffers. The contiguity staging copy (``ascontiguousarray``) is per
+    CHUNK — the whole-table path used to stage every buffer of the full
+    table before the first byte moved."""
+    header: Dict = {"chunk": index, "num_rows": table.num_rows,
+                    "columns": []}
+    buffers: List[np.ndarray] = []
+    for name in table.column_names:
+        c = table.column(name)
+        spec: Dict = {"name": name, "kind": c.kind, "buffers": []}
+        for role, arr in c.buffers().items():
+            arr = np.ascontiguousarray(arr)
+            spec["buffers"].append({"role": role,
+                                    "dtype": str(arr.dtype),
+                                    "size": int(arr.nbytes)})
+            buffers.append(arr)
+        header["columns"].append(spec)
+    _send_frame(conn, json.dumps(header).encode())
+    for arr in buffers:     # raw buffers — no serialization
+        conn.sendall(memoryview(arr).cast("B"))
 
-    def __init__(self, host: str = "127.0.0.1"):
-        self._tables: Dict[str, ColumnTable] = {}
+
+def _recv_table_chunk(sock: socket.socket, header: Dict) -> ColumnTable:
+    """Reassemble one chunk from its header frame + raw buffers."""
+    out: Dict[str, Column] = {}
+    for spec in header["columns"]:
+        bufs = {}
+        for b in spec["buffers"]:
+            raw = bytearray(b["size"])
+            _recv_exact(sock, b["size"], memoryview(raw))
+            bufs[b["role"]] = np.frombuffer(raw, dtype=np.dtype(b["dtype"]))
+        out[spec["name"]] = Column(spec["kind"], bufs["data"],
+                                   bufs.get("offsets"),
+                                   bufs.get("validity"))
+    return ColumnTable(out)
+
+
+class FlightServer:
+    """Per-worker 'Arrow Flight' endpoint streaming raw column buffers,
+    chunk-framed. Tables registered explicitly are served from memory;
+    anything else is resolved through the attached transport (resident
+    zero-copy tables, budget-spilled colfiles, mmap puts, live streams)."""
+
+    def __init__(self, host: str = "127.0.0.1",
+                 chunk_rows: int = defaults.STREAM_CHUNK_ROWS):
+        self._tables: Dict[str, ColumnTable] = {}   # guard: _lock
         self._lock = threading.Lock()
+        self.chunk_rows = chunk_rows
+        self._transport: Optional["DataTransport"] = None
         self._srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self._srv.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
         self._srv.bind((host, 0))
@@ -143,6 +239,12 @@ class FlightServer:
         self._thread.start()
 
     # -- registry -------------------------------------------------------------
+    def attach(self, transport: "DataTransport") -> None:
+        """Resolve unregistered keys (and live streams) through `transport`
+        instead of pinning strong refs here — a spilled table stays spilled
+        even while remote peers read it."""
+        self._transport = transport
+
     def register(self, key: str, table: ColumnTable) -> None:
         with self._lock:
             self._tables[key] = table
@@ -161,13 +263,22 @@ class FlightServer:
             threading.Thread(target=self._handle, args=(conn,),
                              daemon=True).start()
 
+    def _lookup(self, key: str) -> Optional[ColumnTable]:
+        with self._lock:
+            table = self._tables.get(key)
+        if table is None and self._transport is not None:
+            table = self._transport._local_lookup(key)
+        return table
+
     def _handle(self, conn: socket.socket) -> None:
         try:
             if self._stop:          # killed worker: refuse, don't serve
                 return
             req = json.loads(_recv_frame(conn).decode())
-            with self._lock:
-                table = self._tables.get(req["key"])
+            if req.get("stream"):
+                self._serve_stream(conn, req["key"], req.get("columns"))
+                return
+            table = self._lookup(req["key"])
             if table is None:
                 _send_frame(conn, json.dumps({"error": "unknown key"}).encode())
                 return
@@ -177,25 +288,40 @@ class FlightServer:
             cols = [c for c in (req.get("columns") or table.column_names)
                     if c in table.column_names]
             table = table.project(cols)
-            header: Dict = {"num_rows": table.num_rows, "columns": []}
-            buffers: List[np.ndarray] = []
-            for name in cols:
-                c = table.column(name)
-                spec = {"name": name, "kind": c.kind, "buffers": []}
-                for role, arr in c.buffers().items():
-                    arr = np.ascontiguousarray(arr)
-                    spec["buffers"].append({"role": role,
-                                            "dtype": str(arr.dtype),
-                                            "size": int(arr.nbytes)})
-                    buffers.append(arr)
-                header["columns"].append(spec)
-            _send_frame(conn, json.dumps(header).encode())
-            for arr in buffers:     # raw buffers — no serialization
-                conn.sendall(memoryview(arr).cast("B"))
+            n = 0
+            for chunk in _iter_chunks(table, self.chunk_rows):
+                _send_table_chunk(conn, chunk, n)
+                n += 1
+            _send_frame(conn, json.dumps({"end": n}).encode())
         except (ConnectionError, json.JSONDecodeError, KeyError, OSError):
             pass
         finally:
             conn.close()
+
+    def _serve_stream(self, conn: socket.socket, key: str,
+                      columns: Optional[Sequence[str]]) -> None:
+        """Follow a live stream: frame each chunk as it lands, end when the
+        producer finishes. An aborted/unknown stream gets an error frame the
+        client maps to ShardUnavailable."""
+        tr = self._transport
+        state = tr._stream_state(key) if tr is not None else None
+        if state is None:
+            _send_frame(conn, json.dumps({"error": "unknown stream"}).encode())
+            return
+        i = 0
+        while not self._stop:
+            status, handle = state.next_chunk(i)
+            if status == "aborted":
+                _send_frame(conn,
+                            json.dumps({"error": "stream aborted"}).encode())
+                return
+            if status == "end":
+                _send_frame(conn, json.dumps({"end": i}).encode())
+                return
+            assert handle is not None
+            chunk = tr._resolve_chunk(handle, columns)
+            _send_table_chunk(conn, chunk, i)
+            i += 1
 
     def close(self) -> None:
         self._stop = True
@@ -214,17 +340,9 @@ class FlightServer:
             pass
 
 
-def flight_get(host: str, port: int, key: str,
-               columns: Optional[Sequence[str]] = None) -> ColumnTable:
-    """Fetch a registered table from a peer's flight endpoint.
-
-    Error contract (the remote runtime's recovery paths lean on it):
-    a server that knows nothing about the key raises ``KeyError``; every
-    transport-level failure — connection refused/reset, the peer closing
-    after the do_get header or mid-stream, a garbled header, the localhost
-    self-connect artifact — raises ``ShardUnavailable(key)``, never a raw
-    socket error. Callers map ShardUnavailable/KeyError to
-    HandleUnavailable, which re-executes exactly the lost producer."""
+def _flight_request(host: str, port: int, key: str,
+                    columns: Optional[Sequence[str]],
+                    stream: bool = False) -> socket.socket:
     try:
         sock = socket.create_connection((host, port))
     except OSError as e:
@@ -234,23 +352,51 @@ def flight_get(host: str, port: int, key: str,
             # localhost ephemeral-port self-connection (server is gone and
             # TCP simultaneous-open hit our own source port)
             raise ShardUnavailable(key)
-        _send_frame(sock, json.dumps({"key": key,
-                                      "columns": list(columns) if columns else None})
-                    .encode())
-        header = json.loads(_recv_frame(sock).decode())
-        if "error" in header:
-            raise KeyError(f"flight: {header['error']} ({key})")
-        out: Dict[str, Column] = {}
-        for spec in header["columns"]:
-            bufs = {}
-            for b in spec["buffers"]:
-                raw = bytearray(b["size"])
-                _recv_exact(sock, b["size"], memoryview(raw))
-                bufs[b["role"]] = np.frombuffer(raw, dtype=np.dtype(b["dtype"]))
-            out[spec["name"]] = Column(spec["kind"], bufs["data"],
-                                       bufs.get("offsets"),
-                                       bufs.get("validity"))
-        return ColumnTable(out)
+        req: Dict = {"key": key,
+                     "columns": list(columns) if columns else None}
+        if stream:
+            req["stream"] = True
+        _send_frame(sock, json.dumps(req).encode())
+        return sock
+    except ShardUnavailable:
+        sock.close()
+        raise
+    except (ConnectionError, OSError) as e:
+        sock.close()
+        raise ShardUnavailable(key) from e
+
+
+def flight_get(host: str, port: int, key: str,
+               columns: Optional[Sequence[str]] = None) -> ColumnTable:
+    """Fetch a registered table from a peer's flight endpoint. The wire is
+    chunk-framed — the peer stages/sends one chunk at a time and this side
+    holds chunk buffers, concatenated exactly once at the end (a one-chunk
+    table reassembles with no extra concat copy).
+
+    Error contract (the remote runtime's recovery paths lean on it):
+    a server that knows nothing about the key raises ``KeyError``; every
+    transport-level failure — connection refused/reset, the peer closing
+    after the do_get header or mid-stream, a garbled header, the localhost
+    self-connect artifact — raises ``ShardUnavailable(key)``, never a raw
+    socket error. Callers map ShardUnavailable/KeyError to
+    HandleUnavailable, which re-executes exactly the lost producer."""
+    sock = _flight_request(host, port, key, columns)
+    try:
+        chunks: List[ColumnTable] = []
+        while True:
+            header = json.loads(_recv_frame(sock).decode())
+            if "error" in header:
+                if chunks:
+                    # data already flowed: a mid-stream error is a dead
+                    # shard, not an unknown key
+                    raise ShardUnavailable(key)
+                raise KeyError(f"flight: {header['error']} ({key})")
+            if "end" in header:
+                break
+            chunks.append(_recv_table_chunk(sock, header))
+        if not chunks:
+            raise ShardUnavailable(key)
+        return chunks[0] if len(chunks) == 1 else concat_tables(chunks)
     except (ShardUnavailable, KeyError):
         raise
     except (ConnectionError, OSError, json.JSONDecodeError,
@@ -260,8 +406,121 @@ def flight_get(host: str, port: int, key: str,
         sock.close()
 
 
+def flight_get_stream(host: str, port: int, key: str,
+                      columns: Optional[Sequence[str]] = None
+                      ) -> Iterator[ColumnTable]:
+    """Follow a peer's LIVE stream chunk by chunk: yields each chunk as the
+    producer publishes it and returns when the producer finishes. Every
+    failure — including an aborted or unknown stream — raises
+    ``ShardUnavailable(key)``: a broken stream means re-executing the
+    producer, exactly like a lost shard."""
+    sock = _flight_request(host, port, key, columns, stream=True)
+    try:
+        while True:
+            header = json.loads(_recv_frame(sock).decode())
+            if "error" in header:
+                raise ShardUnavailable(key)
+            if "end" in header:
+                return
+            yield _recv_table_chunk(sock, header)
+    except ShardUnavailable:
+        raise
+    except (ConnectionError, OSError, json.JSONDecodeError,
+            struct.error) as e:
+        raise ShardUnavailable(key) from e
+    finally:
+        sock.close()
+
+
 # ---------------------------------------------------------------------------
-# DataTransport: one façade over all four channels
+# live stream state (producer side)
+# ---------------------------------------------------------------------------
+
+
+class _StreamState:
+    """Chunk-handle sequence of one in-progress stream. Producers append
+    and finish/abort; consumers (local generators and flight server threads)
+    block on the condition variable for the next chunk."""
+
+    def __init__(self, key: str):
+        self.key = key
+        self.cv = threading.Condition()
+        self.chunks: List[TableHandle] = []     # guard: cv
+        self.finished = False                   # guard: cv
+        self.aborted = False                    # guard: cv
+
+    def append(self, handle: TableHandle) -> None:
+        with self.cv:
+            self.chunks.append(handle)
+            self.cv.notify_all()
+
+    def finish(self) -> None:
+        with self.cv:
+            self.finished = True
+            self.cv.notify_all()
+
+    def abort(self) -> None:
+        with self.cv:
+            self.aborted = True
+            self.cv.notify_all()
+
+    def snapshot(self) -> List[TableHandle]:
+        with self.cv:
+            return list(self.chunks)
+
+    def next_chunk(self, index: int
+                   ) -> Tuple[str, Optional[TableHandle]]:
+        """Block until chunk `index` exists or the stream settles. Returns
+        ("chunk", handle) | ("end", None) | ("aborted", None). Abort wins
+        over already-published chunks — a re-executed producer republishes
+        everything, so partial reads of a dead attempt must not survive."""
+        with self.cv:
+            while (len(self.chunks) <= index and not self.finished
+                   and not self.aborted):
+                self.cv.wait(timeout=0.2)
+            if self.aborted:
+                return "aborted", None
+            if len(self.chunks) > index:
+                return "chunk", self.chunks[index]
+            return "end", None
+
+
+class StreamWriter:
+    """Producer-side streaming put: ``append`` publishes each fixed-size
+    row chunk through the underlying channel (so chunks spill/serve like any
+    table), ``finish`` seals the stream into a ``chunked`` TableHandle,
+    ``abort`` wakes every consumer with a dead stream."""
+
+    def __init__(self, transport: "DataTransport", key: str, channel: str):
+        self._transport = transport
+        self.key = key
+        self.channel = channel
+        self._state = transport._register_stream(key)
+        self._index = 0
+
+    @property
+    def location(self) -> str:
+        return f"{self._transport.flight.host}:{self._transport.flight.port}"
+
+    def append(self, table: ColumnTable) -> TableHandle:
+        handle = self._transport.put(f"{self.key}/c{self._index}", table,
+                                     self.channel)
+        self._index += 1
+        self._transport._bump("stream_chunks")
+        self._state.append(handle)
+        return handle
+
+    def finish(self) -> TableHandle:
+        self._state.finish()
+        return chunked_handle(self.key, self._state.snapshot(),
+                              location=self.location)
+
+    def abort(self) -> None:
+        self._state.abort()
+
+
+# ---------------------------------------------------------------------------
+# DataTransport: one façade over all the channels
 # ---------------------------------------------------------------------------
 
 
@@ -291,17 +550,28 @@ def _file_columns_available(path: str, columns: Optional[Sequence[str]]
 
 class DataTransport:
     def __init__(self, spill_dir: str, object_store: Optional[ObjectStore] = None,
-                 flight: Optional[FlightServer] = None):
+                 flight: Optional[FlightServer] = None,
+                 memory_budget_bytes: Optional[int] =
+                 defaults.TRANSPORT_MEMORY_BYTES):
         self.spill_dir = os.path.abspath(spill_dir)
         os.makedirs(self.spill_dir, exist_ok=True)
         self.object_store = object_store
         self.flight = flight or FlightServer()
-        self._shm: Dict[str, ColumnTable] = {}
+        self.memory_budget_bytes = memory_budget_bytes
+        self._shm: "OrderedDict[str, ColumnTable]" = OrderedDict()  # guard: _lock
+        self._spilled: Dict[str, str] = {}      # guard: _lock
+        self._files: Dict[str, str] = {}        # guard: _lock
+        self._streams: Dict[str, _StreamState] = {}     # guard: _lock
         self._lock = threading.Lock()
         self.stats = {"zerocopy_puts": 0, "mmap_puts": 0, "flight_puts": 0,
                       "objectstore_puts": 0, "gets": 0, "partitioned_gets": 0,
                       "local_parts": 0, "remote_parts": 0,
-                      "remote_part_bytes": 0}
+                      "remote_part_bytes": 0,
+                      "stream_puts": 0, "stream_chunks": 0, "stream_gets": 0,
+                      "chunked_gets": 0,
+                      "resident_bytes": 0, "spilled_bytes": 0,
+                      "restored_bytes": 0}      # guard: _lock
+        self.flight.attach(self)
 
     def _bump(self, name: str, by: int = 1) -> None:
         # counters are shared by every concurrent run on this worker; an
@@ -309,26 +579,146 @@ class DataTransport:
         with self._lock:
             self.stats[name] = self.stats.get(name, 0) + by
 
+    # -- memory budget -----------------------------------------------------------
+    def _admit(self, key: str, table: ColumnTable) -> None:
+        """Track a zero-copy put against the memory budget, LRU-spilling
+        cold entries to colfiles once resident bytes exceed it."""
+        with self._lock:
+            old = self._shm.pop(key, None)
+            if old is not None:
+                self.stats["resident_bytes"] -= old.nbytes
+            self._shm[key] = table
+            self.stats["resident_bytes"] += table.nbytes
+            self._enforce_budget(keep=key)
+
+    def _enforce_budget(self, keep: str) -> None:
+        """(lock held) Spill LRU entries until resident bytes fit the
+        budget. The just-admitted `keep` entry survives even when it alone
+        exceeds the budget — spilling it immediately would make every get a
+        restore. Spill happens under the lock on purpose: dropping the entry
+        first and recording the file after would open a window where the key
+        resolves nowhere and a healthy producer looks dead."""
+        budget = self.memory_budget_bytes
+        if budget is None:
+            return
+        while self.stats["resident_bytes"] > budget and len(self._shm) > 1:
+            victim_key = next(iter(self._shm))
+            if victim_key == keep:
+                break
+            victim = self._shm.pop(victim_key)
+            path = os.path.join(self.spill_dir,
+                                f"spill-{_fs_safe(victim_key)}.rcf")
+            colfile.write_table(path, victim)
+            self._spilled[victim_key] = path
+            self.stats["resident_bytes"] -= victim.nbytes
+            self.stats["spilled_bytes"] += victim.nbytes
+
+    def _local_lookup(self, key: str) -> Optional[ColumnTable]:
+        """Resolve a key this transport can serve without the network:
+        resident zero-copy tables first (refreshing LRU recency), then
+        budget-spilled colfiles and mmap puts, memory-mapped back in without
+        re-admitting (the OS page cache owns restored bytes, so a restore
+        can't re-trigger the spill it came from)."""
+        with self._lock:
+            table = self._shm.get(key)
+            if table is not None:
+                self._shm.move_to_end(key)
+                return table
+            path = self._spilled.get(key) or self._files.get(key)
+            spilled = key in self._spilled
+        if path is None or not os.path.exists(path):
+            return None
+        table = colfile.read_table(path, mmap=True)
+        if spilled:
+            self._bump("restored_bytes", table.nbytes)
+        return table
+
+    # -- streams -----------------------------------------------------------------
+    def open_stream(self, key: str, channel: str = "zerocopy") -> StreamWriter:
+        """Producer-side entry point: publish `key` as a live chunk stream.
+        Consumers may start reading (get_stream on a provisional handle)
+        before ``finish`` seals the chunked handle."""
+        self._bump("stream_puts")
+        return StreamWriter(self, key, channel)
+
+    def _register_stream(self, key: str) -> _StreamState:
+        with self._lock:
+            state = _StreamState(key)
+            # a retried producer replaces the old attempt's stream; readers
+            # of the dead attempt see it aborted, never a chunk mix
+            old = self._streams.get(key)
+            self._streams[key] = state
+        if old is not None:
+            old.abort()
+        return state
+
+    def _stream_state(self, key: str) -> Optional[_StreamState]:
+        with self._lock:
+            return self._streams.get(key)
+
+    def _resolve_chunk(self, handle: TableHandle,
+                       columns: Optional[Sequence[str]] = None) -> ColumnTable:
+        """(flight server threads) resolve one chunk handle of a served
+        stream through the normal channel machinery."""
+        return self._get_one(handle, columns)
+
+    def get_stream(self, handle: TableHandle,
+                   columns: Optional[Sequence[str]] = None
+                   ) -> Iterator[ColumnTable]:
+        """Yield a handle's row chunks without materializing the table.
+
+        * ``chunked`` — the sealed form: resolve each chunk in order.
+        * ``stream``  — the live form: follow the producer's stream (local
+          condition variable, or a chunk-framed flight request when the
+          producer is on another worker). Ends when the producer finishes;
+          an aborted stream raises ``ShardUnavailable``.
+        * anything else — the whole table as one chunk (so chunk-capable
+          consumers degrade gracefully on materialized inputs).
+        """
+        self._bump("stream_gets")
+        if handle.channel == "chunked":
+            for part in handle.parts:
+                yield self._get_one(part, columns)
+            return
+        if handle.channel == "stream":
+            state = self._stream_state(handle.key)
+            if state is not None:
+                i = 0
+                while True:
+                    status, chunk_handle = state.next_chunk(i)
+                    if status == "aborted":
+                        raise ShardUnavailable(handle.key)
+                    if status == "end":
+                        return
+                    assert chunk_handle is not None
+                    yield self._get_one(chunk_handle, columns)
+                    i += 1
+            host, port = handle.location.rsplit(":", 1)
+            yield from flight_get_stream(host, int(port), handle.key, columns)
+            return
+        yield self.get(handle, columns)
+
     # -- put ---------------------------------------------------------------------
     def put(self, key: str, table: ColumnTable, channel: str) -> TableHandle:
         self._bump(f"{channel}_puts")
         flight_loc = f"{self.flight.host}:{self.flight.port}"
         if channel == "zerocopy":
-            with self._lock:
-                self._shm[key] = table
-            # zero-copy tables are also flight-visible for remote children
-            self.flight.register(key, table)
+            # flight-visible for remote children through the server's
+            # transport lookup — no strong ref pinned, so the budget can
+            # spill this entry even while peers read it
+            self._admit(key, table)
             return TableHandle(key, "zerocopy", table.nbytes, table.num_rows,
                                flight_loc)
         if channel == "mmap":
             path = os.path.join(self.spill_dir, f"{_fs_safe(key)}.rcf")
             colfile.write_table(path, table)
-            self.flight.register(key, table)
+            with self._lock:
+                self._files[key] = path
             return TableHandle(key, "mmap", table.nbytes, table.num_rows, path)
         if channel == "flight":
             self.flight.register(key, table)
             return TableHandle(key, "flight", table.nbytes, table.num_rows,
-                               f"{self.flight.host}:{self.flight.port}")
+                               flight_loc)
         if channel == "objectstore":
             if self.object_store is None:
                 raise RuntimeError("objectstore channel requires an ObjectStore")
@@ -352,6 +742,12 @@ class DataTransport:
         self._bump("gets")
         if handle.channel in ("partitioned", "shuffle"):
             return self._get_partitioned(handle, columns)
+        if handle.channel == "chunked":
+            self._bump("chunked_gets")
+            return concat_tables(self.get_parts(handle, columns))
+        if handle.channel == "stream":
+            # a non-chunk-capable consumer of a live stream: drain it whole
+            return concat_tables(list(self.get_stream(handle, columns)))
         return self._get_one(handle, columns, via)
 
     def _get_one(self, handle: TableHandle,
@@ -362,10 +758,16 @@ class DataTransport:
             channel = handle.channel    # no spill file exists; use producer's
         if channel == "zerocopy" and handle.channel == "objectstore":
             channel = "objectstore"
+        if handle.channel in ("chunked", "stream"):
+            channel = handle.channel
         handle = dataclasses.replace(handle, channel=channel)
+        if handle.channel == "chunked":
+            return concat_tables([self._get_one(p, columns)
+                                  for p in handle.parts])
+        if handle.channel == "stream":
+            return concat_tables(list(self.get_stream(handle, columns)))
         if handle.channel == "zerocopy":
-            with self._lock:
-                table = self._shm.get(handle.key)
+            table = self._local_lookup(handle.key)
             if table is None:  # remote zero-copy degrades to flight
                 loc = handle.location or f"{self.flight.host}:{self.flight.port}"
                 host, port = loc.rsplit(":", 1)
@@ -392,10 +794,11 @@ class DataTransport:
         raise ValueError(f"unknown channel {handle.channel!r}")
 
     def has_local(self, key: str) -> bool:
-        """True if this transport holds the key's buffers in its local table
-        store (a partitioned read would resolve it zero-copy)."""
+        """True if this transport holds the key's buffers locally — resident
+        in the table store or budget-spilled to its own colfile (either way a
+        partitioned read resolves it without the network)."""
         with self._lock:
-            return key in self._shm
+            return key in self._shm or key in self._spilled
 
     def get_parts(self, handle: TableHandle,
                   columns: Optional[Sequence[str]] = None
@@ -411,8 +814,8 @@ class DataTransport:
         tables: List[Optional[ColumnTable]] = [None] * len(handle.parts)
         remote: List[Tuple[int, TableHandle]] = []
         for i, part in enumerate(handle.parts):
-            with self._lock:
-                local = self._shm.get(part.key)
+            local = (self._local_lookup(part.key)
+                     if part.channel == "zerocopy" else None)
             if local is not None:
                 self._bump("local_parts")
                 tables[i] = _project_available(local, columns)
@@ -487,13 +890,36 @@ class DataTransport:
         return self.get_parts(synthetic, columns)
 
     def evict(self, handle: TableHandle) -> None:
-        for part in handle.parts:   # shuffle/partitioned: evict every slice
+        for part in handle.parts:   # aggregate channels: evict every slice
             self.evict(part)
+        spath = None
         with self._lock:
-            self._shm.pop(handle.key, None)
+            table = self._shm.pop(handle.key, None)
+            if table is not None:
+                self.stats["resident_bytes"] -= table.nbytes
+            spath = self._spilled.pop(handle.key, None)
+            self._files.pop(handle.key, None)
+            self._streams.pop(handle.key, None)
         self.flight.unregister(handle.key)
+        if spath is not None and os.path.exists(spath):
+            os.remove(spath)
         if handle.channel == "mmap" and os.path.exists(handle.location):
             os.remove(handle.location)
 
+    def drop_memory(self) -> None:
+        """Forget every resident table and abort live streams (a killed
+        worker's consumers must see dead streams, not a hang). Spilled files
+        stay — eviction owns their lifecycle."""
+        with self._lock:
+            self._shm.clear()
+            self.stats["resident_bytes"] = 0
+            streams = list(self._streams.values())
+        for state in streams:
+            state.abort()
+
     def close(self) -> None:
+        with self._lock:
+            streams = list(self._streams.values())
+        for state in streams:
+            state.abort()
         self.flight.close()

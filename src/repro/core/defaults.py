@@ -29,6 +29,22 @@ SKEW_MIN_BYTES = 1 << 20
 # in-memory table store (per-worker working-set bound)
 MMAP_SPILL_BYTES = int(2e9)
 
+# streaming data plane: streamable producers (scans, rowwise functions)
+# publish their output as fixed-size row chunks under one chunked
+# TableHandle, and stream-capable consumers start on the FIRST chunk
+# instead of producer completion. 0 disables chunking for a run.
+STREAM_CHUNK_ROWS = 1 << 16
+
+# transport memory budget: resident bytes the in-memory table store may
+# hold before cold entries LRU-spill to disk-backed colfiles (restored
+# transparently on access). None = unlimited (the pre-budget behavior).
+TRANSPORT_MEMORY_BYTES = None
+
+# streamed function outputs are still result-cached (warm re-runs skip
+# re-execution) — but only up to this many bytes, so a spill-sized stream
+# is never re-concatenated into one resident table just to cache it
+STREAM_CACHE_MAX_BYTES = 64 << 20
+
 # ready-heap priority aging: a queued task's run gains +1 effective priority
 # per PRIORITY_AGING_S seconds spent waiting, so a sustained stream of
 # high-priority runs cannot starve a queued low-priority run forever

@@ -199,6 +199,11 @@ class _RunState:
         # the ready heap prefers earlier deadlines among equal priorities
         self.deadline = deadline
         self.handles = HandleMap()
+        # producers currently publishing a live chunk stream: their
+        # stream-capable consumers dispatch on the first chunk (pipelined
+        # dispatch) instead of on task_done
+        self.streaming: Set[str] = set()
+        self.stream_cb = None       # the client subscription, for unsubscribe
         self.attempts: Dict[str, int] = {t: 0 for t in plan.order}
         self.indegree: Dict[str, int] = {t: len(plan.parents[t])
                                          for t in plan.order}
@@ -311,7 +316,8 @@ class ExecutionEngine:
                     handle = state.handles.get(tid)
                     if handle is not None and (
                             handle.channel in ("mmap", "objectstore")
-                            or (handle.channel == "shuffle" and handle.parts
+                            or (handle.channel in ("shuffle", "chunked")
+                                and handle.parts
                                 and all(p.channel in ("mmap", "objectstore")
                                         for p in handle.parts))):
                         continue
@@ -352,10 +358,19 @@ class ExecutionEngine:
         state = _RunState(plan, project, client, journal, max_retries,
                           speculation_factor, speculation_min_s,
                           priority=priority, deadline=deadline)
+        if plan.chunk_rows > 0 and hasattr(client, "subscribe"):
+            # pipelined dispatch: learn about stream_chunk events the moment
+            # a producer publishes them (subscribed before any task runs, so
+            # the first chunk can never be missed)
+            state.stream_cb = (lambda ev, _s=state:
+                               self._on_stream_event(_s, ev))
+            client.subscribe(state.stream_cb)
         with self._lock:
             if self._closed:
                 if journal:
                     journal.close()
+                if state.stream_cb is not None:
+                    client.unsubscribe(state.stream_cb)
                 raise TaskError("engine is closed")
             self._runs.append(state)
             for tid in plan.order:
@@ -503,6 +518,57 @@ class ExecutionEngine:
             entry[0] = self._order_key(entry[3], entry[1], now)
         heapq.heapify(self._ready)
 
+    # -- pipelined dispatch: streams satisfy edges early --------------------
+    def _ready_indegree(self, state: _RunState, tid: str) -> int:
+        """Effective indegree (lock held): a stream-capable consumer's edge
+        to a currently-streaming producer counts as satisfied — the consumer
+        reads chunks as they land instead of waiting for task_done. Only the
+        declared stream edge discounts; every other edge still needs a full
+        completion."""
+        base = state.indegree[tid]
+        task = state.plan.tasks.get(tid)
+        sp = getattr(task, "stream_param", "")
+        if base <= 0 or not sp:
+            return base
+        for edge in task.inputs:
+            if (edge.param == sp and edge.parent_task in state.streaming
+                    and edge.parent_task not in state.done):
+                return base - 1
+        return base
+
+    def _on_stream_event(self, state: _RunState, ev: Event) -> None:
+        """Client subscription (pool thread, synchronous with the producer's
+        emit): the first chunk of a streaming producer publishes a
+        provisional `stream` handle and wakes consumers whose only missing
+        edge is that stream. task_done later overwrites the provisional
+        handle with the sealed chunked one."""
+        if ev.kind != "stream_chunk":
+            return
+        tid = ev.task_id
+        with self._lock:
+            if (state.finished.is_set() or state.error or tid in state.done
+                    or tid in state.streaming
+                    or tid not in state.plan.tasks):
+                return
+            state.streaming.add(tid)
+            state.handles.put(tid, TableHandle(
+                ev.payload["key"], "stream", 0, 0,
+                location=ev.payload.get("location", "")))
+            for child in state.plan.children(tid):
+                if (child not in state.done and child not in state.inflight
+                        and self._ready_indegree(state, child) == 0):
+                    self._enqueue(state, child)
+            self._dispatch_ready()
+
+    def _clear_streaming(self, state: _RunState, tid: str) -> None:
+        """Forget a task's live-stream state (lock held): drop it from the
+        streaming set and pop a provisional handle so a retry republishes
+        cleanly (possibly from another worker)."""
+        state.streaming.discard(tid)
+        h = state.handles.get(tid)
+        if h is not None and h.channel == "stream":
+            state.handles.pop(tid)
+
     def _dispatch_ready(self) -> None:
         """Drain the ready heap (lock held) — highest effective priority
         first, earliest deadline then FIFO within it — as far as worker
@@ -514,7 +580,7 @@ class ExecutionEngine:
             _, _, tid, state = entry
             if (state.finished.is_set() or state.error
                     or tid in state.done or tid in state.inflight
-                    or state.indegree[tid] != 0):
+                    or self._ready_indegree(state, tid) != 0):
                 # stale entry: the run ended, a twin won, or a parent was
                 # invalidated after this was queued
                 state.queued.discard(tid)
@@ -551,8 +617,24 @@ class ExecutionEngine:
                                     {"reason": "straggler"}))
         elif info.timer is None:
             self._arm_speculation_timer(state, tid, info)
-        self._pool.submit(self._attempt, state, tid, task, worker,
-                          state.attempts[tid])
+        try:
+            self._pool.submit(self._attempt, state, tid, task, worker,
+                              state.attempts[tid])
+        except RuntimeError:
+            # pool already shut down (engine closed between the run abort
+            # and this dispatch): the attempt will never execute, so its
+            # finally-block never frees the slot — roll the reservation
+            # back here or `_load`/`_mem` leak the bytes forever
+            self._load[worker.worker_id] = max(
+                0, self._load.get(worker.worker_id, 1) - 1)
+            self._mem[worker.worker_id] = max(
+                0, self._mem.get(worker.worker_id, 0)
+                - task.hints.memory_bytes)
+            info.workers.discard(worker.worker_id)
+            if not info.workers:
+                if info.timer is not None:
+                    info.timer.cancel()
+                state.inflight.pop(tid, None)
 
     # -- channel binding at dispatch time ----------------------------------
     def _bind_channels(self, state: _RunState, task,
@@ -597,6 +679,12 @@ class ExecutionEngine:
     # -- the attempt itself (pool thread, no engine lock) -------------------
     def _attempt(self, state: _RunState, tid: str, task,
                  worker: Worker, attempt: int) -> None:
+        if state.finished.is_set():
+            # the run was aborted (engine closed / failed) between dispatch
+            # and execution: skip the work, but still release the slot and
+            # memory `_launch` reserved
+            self._task_slot_freed(worker, task)
+            return
         t_start = time.perf_counter()
         # journal fsyncs happen on the pool thread, never under the engine
         # lock: N concurrent runs must not serialize on each other's disk I/O
@@ -651,7 +739,8 @@ class ExecutionEngine:
                 worker.transport.evict(handle)
                 return
             state.done.add(tid)
-            state.handles.put(tid, handle)
+            state.handles.put(tid, handle)   # overwrites a provisional
+            state.streaming.discard(tid)     # stream handle with the sealed one
             state.placements[tid] = worker.worker_id
             state.durations.append(duration)
             info = state.inflight.pop(tid, None)
@@ -668,6 +757,11 @@ class ExecutionEngine:
                     # partition into row-range sub-tasks before it dispatches
                     for rt in self._maybe_split_partition(state, child):
                         self._enqueue(state, rt)
+                elif (child not in state.inflight
+                      and self._ready_indegree(state, child) == 0):
+                    # last non-stream edge done; the remaining edge is a
+                    # live stream — pipelined dispatch
+                    self._enqueue(state, child)
             self._dispatch_ready()
             if state.remaining() == 0:
                 self._finalize(state)
@@ -772,6 +866,9 @@ class ExecutionEngine:
             if tid in state.done or state.finished.is_set():
                 return                  # a speculative twin already won
             task = state.plan.tasks[tid]
+            # a failed streaming attempt leaves a dead provisional handle
+            # behind — the retry republishes the stream from scratch
+            self._clear_streaming(state, tid)
             if state.attempts[tid] <= state.max_retries:
                 state.client.emit(Event("task_retry", tid, worker.worker_id,
                                         {"error": str(err)[:200],
@@ -797,6 +894,9 @@ class ExecutionEngine:
                 return
             state.client.emit(Event("input_lost", tid, worker.worker_id,
                                     {"producer": lost_parent}))
+            # tid may itself have streamed output chunks before its input
+            # died — its re-execution republishes the stream from scratch
+            self._clear_streaming(state, tid)
             info = state.inflight.pop(tid, None)
             if info is not None and info.timer is not None:
                 info.timer.cancel()
@@ -805,13 +905,14 @@ class ExecutionEngine:
                 self._invalidate(state, p)
             state.indegree[tid] = len([p for p in state.plan.parents[tid]
                                        if p not in state.done])
-            if state.indegree[tid] == 0:
+            if self._ready_indegree(state, tid) == 0:
                 self._enqueue(state, tid)
             self._dispatch_ready()
 
     def _invalidate(self, state: _RunState, tid: str) -> None:
         """Forget a completed task whose output buffers were lost; safe to
         re-execute because outputs are content-addressed & idempotent."""
+        self._clear_streaming(state, tid)
         if tid in state.done:
             state.done.discard(tid)
             state.handles.pop(tid)
@@ -830,7 +931,7 @@ class ExecutionEngine:
         # (indegree != 0) would then drop the task forever — a hung run
         state.indegree[tid] = len([p for p in state.plan.parents[tid]
                                    if p not in state.done])
-        if tid not in state.inflight and state.indegree[tid] == 0:
+        if tid not in state.inflight and self._ready_indegree(state, tid) == 0:
             self._enqueue(state, tid)
 
     def _fail_run(self, state: _RunState, tid: str, err: str) -> None:
@@ -846,6 +947,9 @@ class ExecutionEngine:
                 return
             if state in self._runs:
                 self._runs.remove(state)
+            if state.stream_cb is not None:
+                state.client.unsubscribe(state.stream_cb)
+                state.stream_cb = None
             if state.journal:
                 state.journal.close()
             state.result = RunResult(
@@ -870,6 +974,12 @@ class ExecutionEngine:
             info = state.inflight.get(tid)
             if (info is None or tid in state.done or info.speculated
                     or state.finished.is_set()):
+                return
+            if tid in state.streaming:
+                # a mid-stream producer's consumers may already be reading
+                # its live chunks — a speculative twin would fork the stream
+                # under the same key; re-arm instead
+                self._arm_speculation_timer(state, tid, info)
                 return
             if len(state.durations) < 2:
                 self._arm_speculation_timer(state, tid, info)

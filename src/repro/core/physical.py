@@ -23,6 +23,7 @@ import uuid
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.columnar.catalog import Catalog
+from repro.core import defaults
 from repro.core.logical import LogicalPlan, PlanError
 from repro.core.spec import ModelRef
 
@@ -151,6 +152,9 @@ class ScanTask:
     estimated_bytes: int
     hints: PlacementHint = dataclasses.field(default_factory=PlacementHint)
     kind: str = "scan"
+    # the producer may publish its output as a live row-chunk stream
+    # (chunked per file, re-sliced to plan.chunk_rows) instead of one table
+    streams_output: bool = False
 
 
 @dataclasses.dataclass
@@ -174,6 +178,13 @@ class FunctionTask:
     # dispatch whose contract disagrees with its loaded project (a
     # contract-only edit is invisible to code_hash)
     contract_id: str = ""
+    # streamability classification (planner): `streams_output` marks a
+    # rowwise task that may publish chunk-by-chunk; `stream_param` names the
+    # input edge whose producer streams — the engine dispatches this task on
+    # that producer's FIRST chunk instead of its completion, and the worker
+    # consumes the edge through get_stream
+    streams_output: bool = False
+    stream_param: str = ""
 
 
 @dataclasses.dataclass
@@ -324,6 +335,8 @@ class PhysicalPlan:
     order: List[str]
     targets: List[str]
     force_channel: Optional[str] = None     # benchmarking override
+    # row-chunk size for streamable producers (0 = streaming disabled)
+    chunk_rows: int = 0
     created_at: float = dataclasses.field(default_factory=time.time)
 
     def __post_init__(self):
@@ -406,12 +419,20 @@ class Planner:
                  shard_threshold_bytes: int = 64 << 20,
                  max_shards: Optional[int] = None,
                  edge_columns: Optional[Dict[Tuple[str, str],
-                                             Optional[Tuple[str, ...]]]] = None):
+                                             Optional[Tuple[str, ...]]]] = None,
+                 stream: bool = True,
+                 chunk_rows: int = defaults.STREAM_CHUNK_ROWS):
         self.catalog = catalog
         self.workers = list(workers)
         if force_channel is not None and force_channel not in CHANNELS:
             raise PlanError(f"unknown channel {force_channel}")
         self.force_channel = force_channel
+        # streaming data plane: when on, scans and rowwise chains are
+        # classified streamable (streams_output / stream_param) and the plan
+        # carries the chunk size; stream=False reproduces the fully
+        # materialized plan (the benchmark baseline)
+        self.stream = stream and chunk_rows > 0
+        self.chunk_rows = chunk_rows
         # cost model: only tables worth the gather overhead are sharded, and
         # never wider than the fleet (None = one shard per standing worker)
         self.shard_threshold_bytes = shard_threshold_bytes
@@ -587,7 +608,8 @@ class Planner:
                             files=tuple(f.key for f in chunk),
                             estimated_bytes=int(
                                 sum(f.size_bytes for f in chunk) * frac),
-                            hints=PlacementHint(shard_index=k, num_shards=n))
+                            hints=PlacementHint(shard_index=k, num_shards=n),
+                            streams_output=self.stream)
                         order.append(stid)
                         shard_tids.append(stid)
                         shard_keys[name].append(_key_hash(
@@ -600,7 +622,8 @@ class Planner:
                                           snapshot_id=snap.snapshot_id,
                                           columns=cols,
                                           files=tuple(f.key for f in files),
-                                          estimated_bytes=est)
+                                          estimated_bytes=est,
+                                          streams_output=self.stream)
                     order.append(tid)
             else:
                 spec = node.spec
@@ -838,6 +861,15 @@ class Planner:
                                            ref=ref_s)]
                         edges += [InputEdge(param=p, parent_task=bt, ref=r)
                                   for p, r, bt in bcast]
+                        # a partial may fold its shard chunk-by-chunk only
+                        # when the contract declares a state-closed merge
+                        # (merge_states) and the shard's producer streams
+                        can_stream = (
+                            self.stream
+                            and getattr(contract, "merge_states", None)
+                            is not None
+                            and getattr(tasks.get(ptid), "streams_output",
+                                        False))
                         tasks[stid] = FunctionTask(
                             task_id=stid, name=name, env_id=spec.env.env_id,
                             code_hash=spec.code_hash, cache_key=skey,
@@ -847,7 +879,8 @@ class Planner:
                             timeout_s=spec.resources.timeout_s,
                             hints=PlacementHint(shard_index=k, num_shards=n),
                             agg_phase="partial",
-                            contract_id=contract.contract_id)
+                            contract_id=contract.contract_id,
+                            stream_param=param_s if can_stream else "")
                         order.append(stid)
                         partial_tids.append(stid)
                     tid = f"func:{name}"
@@ -889,6 +922,11 @@ class Planner:
                         skey = _key_hash(cache_key, f"shard-{k}-{n}",
                                          shard_keys[ref.name][k])
                         shard_keys[name].append(skey)
+                        # rowwise chunk-through: stream the output, and when
+                        # the parent shard itself streams, start on its first
+                        # chunk (the pipelined-dispatch edge)
+                        parent_streams = getattr(tasks.get(ptid),
+                                                 "streams_output", False)
                         tasks[stid] = FunctionTask(
                             task_id=stid, name=name, env_id=spec.env.env_id,
                             code_hash=spec.code_hash,
@@ -899,7 +937,10 @@ class Planner:
                             estimated_bytes=max(est // n, 1),
                             memory_gb=spec.resources.memory_gb,
                             timeout_s=spec.resources.timeout_s,
-                            hints=PlacementHint(shard_index=k, num_shards=n))
+                            hints=PlacementHint(shard_index=k, num_shards=n),
+                            streams_output=self.stream,
+                            stream_param=(param if self.stream
+                                          and parent_streams else ""))
                         order.append(stid)
                         shard_tids.append(stid)
                     shard_map[name] = shard_tids
@@ -913,12 +954,24 @@ class Planner:
                                 else f"scan:{ref.name}")
                         inputs.append(InputEdge(param=param, parent_task=ptid,
                                                 ref=ref))
+                    # an unsharded rowwise chain still streams: chunk-through
+                    # output, and pipelined dispatch off a streaming parent.
+                    # materialize= stays whole-table (the catalog write wants
+                    # one table), so it only ever streams its INPUT.
+                    rowwise = (self.stream and getattr(spec, "rowwise", False)
+                               and len(inputs) == 1 and not spec.materialize)
+                    parent_streams = (rowwise and getattr(
+                        tasks.get(inputs[0].parent_task), "streams_output",
+                        False))
                     tasks[tid] = FunctionTask(
                         task_id=tid, name=name, env_id=spec.env.env_id,
                         code_hash=spec.code_hash, cache_key=cache_key,
                         inputs=inputs, materialize=spec.materialize,
                         estimated_bytes=est, memory_gb=spec.resources.memory_gb,
-                        timeout_s=spec.resources.timeout_s)
+                        timeout_s=spec.resources.timeout_s,
+                        streams_output=rowwise,
+                        stream_param=(inputs[0].param if parent_streams
+                                      else ""))
                     order.append(tid)
 
         for t in logical.targets:
@@ -928,7 +981,8 @@ class Planner:
         plan = PhysicalPlan(plan_id=_key_hash(run_id, *order), run_id=run_id,
                             branch=branch, tasks=tasks, order=order,
                             targets=list(logical.targets),
-                            force_channel=self.force_channel)
+                            force_channel=self.force_channel,
+                            chunk_rows=self.chunk_rows if self.stream else 0)
         self._compute_hints(plan)
         return plan
 

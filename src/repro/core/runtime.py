@@ -28,7 +28,8 @@ from typing import TYPE_CHECKING
 from repro.columnar import compute
 from repro.columnar.catalog import Catalog
 from repro.columnar.objectstore import ObjectStore
-from repro.columnar.table import ColumnTable
+from repro.columnar.table import ColumnTable, concat_tables
+from repro.core import defaults
 from repro.core.cache import ColumnarScanCache, IntermediateCache
 from repro.columnar.table import numeric_column
 from repro.core.channels import (DataTransport, ShardUnavailable, TableHandle,
@@ -80,11 +81,28 @@ class Client:
     def __init__(self, verbose: bool = False):
         self.verbose = verbose
         self.events: List[Event] = []     # guard: _lock
+        self._subs: List[Callable[[Event], None]] = []   # guard: _lock
         self._lock = threading.Lock()
+
+    def subscribe(self, cb: Callable[["Event"], None]) -> None:
+        """Register a live event listener (the engine uses this to learn
+        about stream_chunk events the moment a producer publishes them)."""
+        with self._lock:
+            self._subs.append(cb)
+
+    def unsubscribe(self, cb: Callable[["Event"], None]) -> None:
+        with self._lock:
+            if cb in self._subs:
+                self._subs.remove(cb)
 
     def emit(self, event: Event) -> None:
         with self._lock:
             self.events.append(event)
+            subs = list(self._subs)
+        # callbacks run outside the lock: the engine's handler takes its own
+        # lock and may dispatch tasks, which emit events right back here
+        for cb in subs:
+            cb(event)
         if self.verbose:
             p = event.payload
             line = p.get("line") or ", ".join(f"{k}={v}" for k, v in p.items())
@@ -158,13 +176,17 @@ class _StdoutRouter:
 class Worker:
     def __init__(self, profile: WorkerProfile, catalog: Catalog,
                  object_store: ObjectStore, scratch_root: str,
-                 package_store: PackageStore):
+                 package_store: PackageStore,
+                 transport_memory_bytes: Optional[int] = None):
         self.profile = profile
         self.worker_id = profile.worker_id
         self.catalog = catalog
         self.transport = DataTransport(
             spill_dir=f"{scratch_root}/{self.worker_id}/spill",
-            object_store=object_store)
+            object_store=object_store,
+            memory_budget_bytes=(transport_memory_bytes
+                                 if transport_memory_bytes is not None
+                                 else defaults.TRANSPORT_MEMORY_BYTES))
         self.scan_cache = ColumnarScanCache(
             catalog, scratch_dir=f"{scratch_root}/{self.worker_id}/scan")
         self.result_cache = IntermediateCache()
@@ -177,7 +199,9 @@ class Worker:
     def kill(self) -> None:
         """Simulate node loss: in-memory buffers are gone, new tasks refused."""
         self.alive = False
-        self.transport._shm.clear()
+        # drops resident tables AND aborts live streams, so a consumer
+        # blocked mid-stream sees a dead producer instead of hanging
+        self.transport.drop_memory()
         self.transport.flight.close()
 
     def _check_alive(self) -> None:
@@ -213,6 +237,18 @@ class Worker:
                                "partition_bytes": [p.nbytes
                                                    for p in handle.parts]}))
             return handle
+        if plan.chunk_rows > 0 and isinstance(task, ScanTask) \
+                and task.streams_output:
+            # streamed producers publish chunk-by-chunk and emit their own
+            # task_done — consumers with a stream edge dispatch on the
+            # first chunk instead of waiting for this return
+            return self._run_scan_stream(plan, task, client, put_channel, t0)
+        if plan.chunk_rows > 0 and isinstance(task, FunctionTask) \
+                and (task.streams_output or task.stream_param) \
+                and not task.materialize:
+            return self._run_function_stream(plan, task, handles, client,
+                                             project, edge_channels or {},
+                                             put_channel, t0)
         if isinstance(task, ScanTask):
             table = self._run_scan(task, client)
         elif isinstance(task, GatherTask):
@@ -250,6 +286,58 @@ class Worker:
                            "hits": after["hits"] - before["hits"],
                            "misses": after["misses"] - before["misses"]}))
         return table
+
+    # -- streamed execution (chunked data plane) ----------------------------
+    def _scan_chunks(self, snap, cols, task: ScanTask, chunk_rows: int):
+        """Per-file cache reads re-sliced to the plan's chunk size. The
+        chunk concatenation is byte-identical to the whole-snapshot read
+        (same file order, same per-file buffers)."""
+        keys = list(task.files)
+        if not keys:
+            # no data files: one empty chunk so the schema still travels
+            yield self.scan_cache.read_snapshot(snap, cols, file_keys=[])
+            return
+        for fk in keys:
+            part = self.scan_cache.read_snapshot(snap, cols, file_keys=[fk])
+            yield from compute.iter_table_chunks(part, chunk_rows)
+
+    def _run_scan_stream(self, plan: PhysicalPlan, task: ScanTask,
+                         client: Client, put_channel: str,
+                         t0: float) -> TableHandle:
+        """Streamed scan: publish the snapshot as fixed-size row chunks
+        under one handle. Each chunk lands in the transport the moment its
+        file slice is read; the engine dispatches stream-capable consumers
+        on the first `stream_chunk` event instead of on task_done."""
+        snap = self.catalog.get_snapshot(task.snapshot_id)
+        cols = list(task.columns) if task.columns else None
+        before = dict(self.scan_cache.stats)
+        key = f"{plan.run_id}:{task.task_id}"
+        writer = self.transport.open_stream(key, put_channel)
+        n = 0
+        try:
+            for chunk in self._scan_chunks(snap, cols, task, plan.chunk_rows):
+                self._check_alive()
+                writer.append(chunk)
+                client.emit(Event("stream_chunk", task.task_id,
+                                  self.worker_id,
+                                  {"chunk": n, "key": key,
+                                   "location": writer.location,
+                                   "rows": chunk.num_rows}))
+                n += 1
+            handle = writer.finish()
+        except BaseException:
+            writer.abort()
+            raise
+        after = self.scan_cache.stats
+        client.emit(Event("cache_probe", task.task_id, self.worker_id,
+                          {"kind": "scan",
+                           "hits": after["hits"] - before["hits"],
+                           "misses": after["misses"] - before["misses"]}))
+        client.emit(Event("task_done", task.task_id, self.worker_id,
+                          {"rows": handle.num_rows, "bytes": handle.nbytes,
+                           "seconds": round(time.perf_counter() - t0, 6),
+                           "channel": "stream", "chunks": n}))
+        return handle
 
     def _fetch_parts(self, plan: PhysicalPlan, task, handles,
                      columns=None, as_parts: bool = False):
@@ -356,6 +444,187 @@ class Worker:
                      if c not in keep and c in table.column_names]
             table = table.project(keep)
         return table
+
+    def _edge_chunks(self, plan: PhysicalPlan, edge, handles,
+                     via: Optional[str] = None):
+        """Chunk-wise `_deliver_edge`: resolve one input edge as a chunk
+        iterator with the edge's predicate/projection applied per chunk —
+        the full input table never materializes on this worker. A handle
+        that turns out non-streamable (producer cache hit, non-stream
+        retry) degrades to a whole fetch re-sliced locally. Lost chunks or
+        a dead producer map to HandleUnavailable(producer) exactly like a
+        whole-handle fetch, so per-chunk recovery re-executes exactly the
+        producer whose buffers died."""
+        handle = handles.get(edge.parent_task)
+        if handle is None:
+            raise HandleUnavailable(edge.parent_task)
+        pred = edge.ref.predicate()
+        need = None
+        if edge.ref.columns is not None:
+            need = list(edge.ref.columns)
+            for c in (pred.referenced_columns() if pred else []):
+                if c not in need:
+                    need.append(c)
+        try:
+            if handle.channel in ("stream", "chunked"):
+                chunks = self.transport.get_stream(handle, columns=need)
+            else:
+                whole = self.transport.get(handle, columns=need, via=via)
+                chunks = compute.iter_table_chunks(whole, plan.chunk_rows)
+            for chunk in chunks:
+                if pred is not None:
+                    chunk = compute.filter_table(chunk, pred)
+                if edge.ref.columns is not None:
+                    chunk = chunk.project(list(edge.ref.columns))
+                yield chunk
+        except (ShardUnavailable, OSError, ConnectionError, KeyError) as e:
+            raise HandleUnavailable(edge.parent_task) from e
+
+    def _run_function_stream(self, plan: PhysicalPlan, task: FunctionTask,
+                             handles, client: Client,
+                             project: Optional["Project"],
+                             edge_channels: Dict[str, str],
+                             put_channel: str, t0: float) -> TableHandle:
+        """Streamed function execution (plan.chunk_rows > 0). Two shapes,
+        both consuming the stream edge chunk-by-chunk:
+
+          * rowwise (`task.streams_output`): apply the model per chunk and
+            republish each output chunk immediately — this task's own
+            consumer can already be running (pipelined dispatch);
+          * `agg_phase="partial"` with a state-closed contract merge: fold
+            per-chunk partial states through `contract.merge_states` into
+            one state table with exactly the whole-shard partial's schema.
+
+        Emits its own task_done (like the shuffle-write path) because the
+        streamed output is published incrementally, not via the generic
+        put in `execute`."""
+        key = f"{plan.run_id}:{task.task_id}"
+        cached = self.result_cache.get(task.cache_key)
+        if cached is not None:
+            client.emit(Event("cache_hit", task.task_id, self.worker_id,
+                              {"cache_key": task.cache_key}))
+            handle = self.transport.put(key, cached, put_channel)
+            client.emit(Event("task_done", task.task_id, self.worker_id,
+                              {"rows": cached.num_rows,
+                               "bytes": cached.nbytes,
+                               "seconds": round(time.perf_counter() - t0, 6),
+                               "channel": put_channel}))
+            return handle
+        from repro.api import default_project
+        project = project or default_project()
+        spec = project.functions[task.name]
+        fn = spec.fn
+        contract = None
+        if getattr(task, "agg_phase", "") == "partial":
+            contract = spec.combinable
+            if contract is None or contract.merge_states is None:
+                raise TaskError(f"{task.name}: plan streams a combinable "
+                                f"partial but the project's contract has no "
+                                f"state-closed merge (stale plan or project "
+                                f"drift)")
+            fn = contract.partial
+        # the streamed edge: the declared stream_param, or the rowwise
+        # model's single input when the parent itself didn't stream
+        if task.stream_param:
+            stream_edge = next(e for e in task.inputs
+                               if e.param == task.stream_param)
+        else:
+            stream_edge = task.inputs[0]
+        # broadcast inputs (join build side, ...) resolve whole, up front
+        kwargs = {}
+        for edge in task.inputs:
+            if edge is stream_edge:
+                continue
+            via = (edge_channels.get(edge.parent_task) or edge.channel
+                   or "zerocopy")
+            kwargs[edge.param] = self._deliver_edge(edge, handles, via=via)
+        in_via = (edge_channels.get(stream_edge.parent_task)
+                  or stream_edge.channel or "zerocopy")
+        in_chunks = self._edge_chunks(plan, stream_edge, handles, via=in_via)
+        report = self.env_builder.build(spec.env, fresh=True)
+        client.emit(Event("env_built", task.task_id, self.worker_id,
+                          {"env_id": report.env_id,
+                           "seconds": round(report.duration_s, 6),
+                           "cache_hit": report.cache_hit}))
+        emit_log = lambda line: client.emit(Event("log", task.task_id,
+                                                  self.worker_id,
+                                                  {"line": line}))
+        router = _StdoutRouter.install()
+
+        def call_chunk(chunk: ColumnTable) -> ColumnTable:
+            # per-chunk user invocation: only the model body converts to
+            # TaskError — HandleUnavailable/WorkerFailure raised while the
+            # input iterator pulls the next chunk must keep propagating
+            # for per-shard recovery
+            try:
+                with router.route(emit_log):
+                    out = fn(**{stream_edge.param: chunk}, **kwargs)
+            except Exception as e:  # noqa: BLE001 — user code
+                raise TaskError(
+                    f"{task.name}: {type(e).__name__}: {e}\n"
+                    f"{traceback.format_exc()}") from e
+            return _coerce_output(task.name, out)
+
+        try:
+            if task.streams_output:
+                writer = self.transport.open_stream(key, put_channel)
+                n = 0
+                cache_parts: Optional[List[ColumnTable]] = []
+                cache_bytes = 0
+                try:
+                    for chunk in in_chunks:
+                        self._check_alive()
+                        out = call_chunk(chunk)
+                        writer.append(out)
+                        client.emit(Event("stream_chunk", task.task_id,
+                                          self.worker_id,
+                                          {"chunk": n, "key": key,
+                                           "location": writer.location,
+                                           "rows": out.num_rows}))
+                        n += 1
+                        if cache_parts is not None:
+                            cache_bytes += out.nbytes
+                            if cache_bytes <= defaults.STREAM_CACHE_MAX_BYTES:
+                                cache_parts.append(out)
+                            else:
+                                cache_parts = None  # too big: stream-only
+                    handle = writer.finish()
+                except BaseException:
+                    writer.abort()
+                    raise
+                if cache_parts is not None:
+                    self.result_cache.put(task.cache_key,
+                                          concat_tables(cache_parts))
+                client.emit(Event("task_done", task.task_id, self.worker_id,
+                                  {"rows": handle.num_rows,
+                                   "bytes": handle.nbytes,
+                                   "seconds": round(
+                                       time.perf_counter() - t0, 6),
+                                   "channel": "stream", "chunks": n}))
+                return handle
+            # partial fold: per-chunk states, merged once (one combine
+            # point keeps float accumulation order deterministic)
+            states = [call_chunk(chunk) for chunk in in_chunks]
+            self._check_alive()
+            try:
+                merged = compute.fold_partial_states(states,
+                                                     contract.merge_states)
+            except Exception as e:  # noqa: BLE001 — contract code
+                raise TaskError(f"{task.name} (state merge): "
+                                f"{type(e).__name__}: {e}\n"
+                                f"{traceback.format_exc()}") from e
+            merged = _coerce_output(task.name, merged)
+            merged = self.result_cache.put(task.cache_key, merged)
+            handle = self.transport.put(key, merged, put_channel)
+            client.emit(Event("task_done", task.task_id, self.worker_id,
+                              {"rows": merged.num_rows,
+                               "bytes": merged.nbytes,
+                               "seconds": round(time.perf_counter() - t0, 6),
+                               "channel": put_channel,
+                               "chunks": len(states)}))
+            return handle
+        finally:
+            self.env_builder.destroy(report)  # truly ephemeral
 
     # -- partition exchange (shuffle) ---------------------------------------
     def _run_shuffle_write(self, plan: PhysicalPlan, task: ShuffleWriteTask,
@@ -606,12 +875,16 @@ class LocalCluster:
                  scratch_root: str, n_workers: int = 2,
                  memory_gb: float = 4.0,
                  package_store: Optional[PackageStore] = None,
-                 engine_opts: Optional[Dict] = None):
+                 engine_opts: Optional[Dict] = None,
+                 transport_memory_bytes: Optional[int] = None):
         self.catalog = catalog
         self.object_store = object_store
         self.scratch_root = scratch_root
         self.package_store = package_store or PackageStore(
             f"{scratch_root}/pkgstore")
+        # per-worker DataTransport resident-byte budget (None = unlimited);
+        # benchmarks set this small to prove spill-under-budget correctness
+        self.transport_memory_bytes = transport_memory_bytes
         # forwarded to the lazily-created ExecutionEngine (mmap_spill_bytes,
         # skew_factor, ... — benchmarks tune these per scenario)
         self.engine_opts = dict(engine_opts or {})
@@ -623,7 +896,8 @@ class LocalCluster:
 
     def _add(self, profile: WorkerProfile) -> Worker:
         w = Worker(profile, self.catalog, self.object_store,
-                   self.scratch_root, self.package_store)
+                   self.scratch_root, self.package_store,
+                   transport_memory_bytes=self.transport_memory_bytes)
         with self._lock:
             self.workers[profile.worker_id] = w
             engine, n = self._engine, len(self.workers)
@@ -703,6 +977,8 @@ def submit_run(project: "Project", cluster,
                deadline_s: Optional[float] = None,
                validate: str = "off",
                lineage_pushdown: bool = True,
+               stream: bool = True,
+               chunk_rows: Optional[int] = None,
                **engine_kw):
     """Plan + submit a run to the cluster's shared engine; returns a
     RunHandle immediately so N invocations can execute concurrently.
@@ -739,6 +1015,11 @@ def submit_run(project: "Project", cluster,
         planner_kw["shard_threshold_bytes"] = shard_threshold_bytes
     if max_shards is not None:
         planner_kw["max_shards"] = max_shards
+    # stream=False forces the materialized data plane (whole-table handles);
+    # chunk_rows overrides defaults.STREAM_CHUNK_ROWS for this run
+    planner_kw["stream"] = stream
+    if chunk_rows is not None:
+        planner_kw["chunk_rows"] = chunk_rows
     if lineage_pushdown:
         # pass-1 column lineage: proven read sets for edges that declared
         # no columns= hint narrow scans and gathers. Inference is

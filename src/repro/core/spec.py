@@ -168,6 +168,13 @@ class CombineContract:
     # already carries their identity.
     keys: Tuple[str, ...] = ()
     aggs: Tuple[Tuple[str, Tuple[str, str]], ...] = ()
+    # optional state-closed merge: merge_states(list_of_states) -> state of
+    # the SAME schema (nothing finalized). When present, a partial task may
+    # consume its shard as a chunk stream — per-chunk partials fold through
+    # this merge, so the shard never materializes whole. Custom reducers
+    # without one fall back to whole-shard consumption. Not part of
+    # contract_id: it is derived from kind/fingerprint, never user identity.
+    merge_states: Optional[Callable] = None
 
     @property
     def contract_id(self) -> str:

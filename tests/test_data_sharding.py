@@ -57,8 +57,11 @@ def _proj(name="shard"):
 
 
 def _holder_of(cluster, task_id):
+    # streamed producers publish per-chunk keys ("<run>:<task_id>/cN"),
+    # materialized ones the whole key — match either form
     for wid, w in cluster.workers.items():
-        if any(k.endswith(task_id) for k in w.transport._shm):
+        if any(k.endswith(task_id) or f"{task_id}/c" in k
+               for k in w.transport._shm):
             return wid
     return None
 

@@ -260,7 +260,12 @@ def test_mmap_spill_readable_across_workers(cat, tmp_path):
 
     try:
         res = execute_run(proj, catalog=cat, cluster=cluster)
-        assert all(h.channel == "mmap" for h in res.handles.values())
+        # streamed producers seal a "chunked" handle whose parts carry the
+        # underlying channel; everything must still bottom out in mmap
+        assert all(h.channel == "mmap"
+                   or (h.channel == "chunked"
+                       and all(p.channel == "mmap" for p in h.parts))
+                   for h in res.handles.values())
         got = np.sort(res.read("join", cluster).column("a").to_numpy())
         np.testing.assert_array_equal(got, np.arange(1000.0))
     finally:
@@ -278,7 +283,10 @@ def test_force_channel_objectstore_end_to_end(cat, tmp_path):
     try:
         res = execute_run(proj, catalog=cat, cluster=cluster,
                           force_channel="objectstore")
-        assert all(h.channel == "objectstore" for h in res.handles.values())
+        assert all(h.channel == "objectstore"
+                   or (h.channel == "chunked"
+                       and all(p.channel == "objectstore" for p in h.parts))
+                   for h in res.handles.values())
         np.testing.assert_array_equal(
             res.read("doubled", cluster).column("a").to_numpy(),
             np.arange(1000.0) * 2)
@@ -303,7 +311,10 @@ def test_colocated_chain_binds_zerocopy(cat, tmp_path):
     try:
         res = execute_run(proj, catalog=cat, cluster=cluster)
         assert len(set(res.placements.values())) == 1
-        assert all(h.channel == "zerocopy" for h in res.handles.values())
+        assert all(h.channel == "zerocopy"
+                   or (h.channel == "chunked"
+                       and all(p.channel == "zerocopy" for p in h.parts))
+                   for h in res.handles.values())
     finally:
         cluster.close()
 

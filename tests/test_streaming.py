@@ -1,0 +1,406 @@
+"""Chunk-streaming data plane: streamed == materialized byte-for-byte over
+randomized chunk sizes / budgets / shard layouts, pipelined dispatch on the
+first chunk, per-chunk fault recovery mapping to exactly the lost producer,
+and the transport's LRU memory budget (spill to mmap colfiles, transparent
+restore, locked counters).
+
+Integer-valued columns keep every chunked fold exact, so "identical" means
+identical buffers — the same acceptance bar as the sharded data plane."""
+import json
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import repro as bp
+from repro.columnar import Catalog, ColumnTable, ObjectStore
+from repro.columnar.table import concat_tables
+from repro.core import Client, LocalCluster
+from repro.core import channels
+from repro.core.channels import (DataTransport, FlightServer, ShardUnavailable,
+                                 TableHandle, flight_get)
+from repro.core.runtime import execute_run, submit_run
+
+N_ROWS = 20_000
+
+
+def _tables_equal(a, b) -> bool:
+    return (a.column_names == b.column_names
+            and a.num_rows == b.num_rows
+            and all(a.column(c).data.tobytes() == b.column(c).data.tobytes()
+                    for c in a.column_names))
+
+
+def _make_catalog(tmp_path, n_rows=N_ROWS, n_files=8, seed=3):
+    rng = np.random.default_rng(seed)
+    c = Catalog(ObjectStore(str(tmp_path / "s3")))
+    c.write_table("src", ColumnTable.from_pydict({
+        "k": rng.integers(0, 13, n_rows).astype(np.float64),
+        "a": rng.integers(-500, 500, n_rows).astype(np.float64),
+        "b": rng.integers(0, 900, n_rows),
+    }), rows_per_file=max(n_rows // n_files, 1))
+    return c
+
+
+def _chain_project(name="chain"):
+    proj = bp.Project(name)
+
+    @proj.model(rowwise=True)
+    def mapped(data=bp.Model("src", columns=["k", "a", "b"])):
+        return {"k": np.asarray(data.column("k").to_numpy()),
+                "a": np.asarray(data.column("a").to_numpy()) * 2.0 + 1.0,
+                "b": np.asarray(data.column("b").to_numpy())}
+
+    @proj.model(rowwise=True)
+    def filtered(data=bp.Model("mapped", filter="b >= 100")):
+        return {"k": np.asarray(data.column("k").to_numpy()),
+                "a": np.asarray(data.column("a").to_numpy()) + 3.0}
+
+    @proj.model()
+    def sink(data=bp.Model("filtered")):
+        a = np.asarray(data.column("a").to_numpy())
+        return {"k": np.asarray(data.column("k").to_numpy()), "a": a}
+
+    return proj
+
+
+def _agg_project(name="agg"):
+    proj = bp.Project(name)
+
+    @proj.model(combinable=bp.GroupByCombine(
+        ["k"], {"total": ("a", "sum"), "avg": ("a", "mean"),
+                "n": ("b", "count"), "hi": ("b", "max")}))
+    def grouped(data=bp.Model("src", columns=["k", "a", "b"])):
+        raise AssertionError("combinable partial/combine replace the body")
+
+    return proj
+
+
+def _run(proj, cat, tmp_path, tag, target, *, stream, chunk_rows=None,
+         budget=None, **kw):
+    cluster = LocalCluster(cat, cat.store, str(tmp_path / f"dp-{tag}"),
+                           n_workers=2, transport_memory_bytes=budget)
+    try:
+        res = execute_run(proj, cluster=cluster, stream=stream,
+                          chunk_rows=chunk_rows, speculation_min_s=1e9, **kw)
+        return res.read(target, cluster), res, cluster
+    finally:
+        cluster.close()
+
+
+# ---------------------------------------------------------------------------
+# property harness: streamed == materialized, byte for byte
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("chunk_rows,n_files", [
+    (777, 8),          # odd chunk size vs even file size
+    (2_500, 8),        # chunk == file slice
+    (50_000, 3),       # one chunk per run (chunk > table)
+    (1_000, 1),        # single file, many chunks
+])
+def test_streamed_chain_matches_materialized(tmp_path, chunk_rows, n_files):
+    cat = _make_catalog(tmp_path, n_files=n_files)
+    base, _, _ = _run(_chain_project(), cat, tmp_path, f"m{chunk_rows}",
+                      "sink", stream=False)
+    got, res, _ = _run(_chain_project(), cat, tmp_path, f"s{chunk_rows}",
+                       "sink", stream=True, chunk_rows=chunk_rows)
+    assert _tables_equal(base, got)
+    assert res.client.of_kind("stream_chunk")      # streaming actually ran
+
+
+@pytest.mark.parametrize("seed,chunk_rows,budget_frac", [
+    (1, 333, 0.3), (2, 4_096, 0.5), (3, 9_999, 0.15)])
+def test_streamed_chain_under_random_budget(tmp_path, seed, chunk_rows,
+                                            budget_frac):
+    """Randomized budgets force spill mid-pipeline; results stay identical."""
+    cat = _make_catalog(tmp_path, seed=seed)
+    base, _, _ = _run(_chain_project(), cat, tmp_path, f"b{seed}m", "sink",
+                      stream=False)
+    budget = int(N_ROWS * 8 * 3 * budget_frac)
+    got, res, cluster = _run(_chain_project(), cat, tmp_path, f"b{seed}s",
+                             "sink", stream=True, chunk_rows=chunk_rows,
+                             budget=budget)
+    assert _tables_equal(base, got)
+
+
+def test_streamed_sharded_scan_matches(tmp_path):
+    """Sharded scans stream per shard; the gather reassembles identically."""
+    cat = _make_catalog(tmp_path)
+    base, _, _ = _run(_chain_project(), cat, tmp_path, "shm", "sink",
+                      stream=False, shard_threshold_bytes=1, max_shards=4)
+    got, res, _ = _run(_chain_project(), cat, tmp_path, "shs", "sink",
+                       stream=True, chunk_rows=1_024,
+                       shard_threshold_bytes=1, max_shards=4)
+    assert _tables_equal(base, got)
+
+
+def test_streamed_partial_agg_matches(tmp_path):
+    """agg_phase="partial" consumes its shard chunk-by-chunk and folds the
+    per-chunk states through the contract's state-closed merge — the final
+    combine must be byte-identical to the materialized plan's."""
+    cat = _make_catalog(tmp_path)
+    base, _, _ = _run(_agg_project(), cat, tmp_path, "am", "grouped",
+                      stream=False, shard_threshold_bytes=1, max_shards=4)
+    got, res, _ = _run(_agg_project(), cat, tmp_path, "as", "grouped",
+                       stream=True, chunk_rows=1_111,
+                       shard_threshold_bytes=1, max_shards=4)
+    assert _tables_equal(base, got)
+    assert res.client.of_kind("stream_chunk")
+
+
+# ---------------------------------------------------------------------------
+# pipelined dispatch: consumers start on the FIRST chunk
+# ---------------------------------------------------------------------------
+
+
+def test_consumer_dispatches_before_producer_finishes(tmp_path):
+    """With a slow streaming producer, the consumer's task_start must land
+    before the producer's task_done — the deterministic signature of
+    pipelined dispatch (no wall-clock thresholds)."""
+    cat = _make_catalog(tmp_path)
+    proj = bp.Project("overlap")
+
+    @proj.model(rowwise=True)
+    def slow(data=bp.Model("src", columns=["a"])):
+        time.sleep(0.05)         # per-chunk latency (releases the GIL)
+        return {"a": np.asarray(data.column("a").to_numpy()) + 1.0}
+
+    @proj.model(rowwise=True)
+    def fast(data=bp.Model("slow")):
+        return {"a": np.asarray(data.column("a").to_numpy()) * 2.0}
+
+    cluster = LocalCluster(cat, cat.store, str(tmp_path / "dp"), n_workers=1)
+    try:
+        res = execute_run(proj, cluster=cluster, stream=True,
+                          chunk_rows=N_ROWS // 8, speculation_min_s=1e9)
+        starts = {e.task_id: e.ts for e in res.client.of_kind("task_start")}
+        dones = {e.task_id: e.ts for e in res.client.of_kind("task_done")}
+        assert starts["func:fast"] < dones["func:slow"]
+        rng = np.random.default_rng(3)
+        rng.integers(0, 13, N_ROWS)          # catalog draws k before a
+        expect = (rng.integers(-500, 500, N_ROWS).astype(np.float64)
+                  + 1.0) * 2.0
+        np.testing.assert_array_equal(
+            res.read("fast", cluster).column("a").to_numpy(), expect)
+    finally:
+        cluster.close()
+
+
+# ---------------------------------------------------------------------------
+# per-chunk fault recovery
+# ---------------------------------------------------------------------------
+
+
+def test_mid_stream_worker_kill_recovers_producer(tmp_path):
+    """Killing the worker mid-stream (after its first chunk event) aborts
+    the live stream; the consumer maps the dead chunk to exactly that
+    producer, which re-executes — and the run completes identically."""
+    cat = _make_catalog(tmp_path)
+    base, _, _ = _run(_chain_project(), cat, tmp_path, "km", "sink",
+                      stream=False)
+    proj = _chain_project("kill")
+    cluster = LocalCluster(cat, cat.store, str(tmp_path / "dp-kill"),
+                           n_workers=2)
+    killed = {}
+    lock = threading.Lock()
+    client = Client()
+
+    def on_event(ev):
+        if ev.kind != "stream_chunk" or ev.task_id != "func:mapped":
+            return
+        with lock:
+            if not killed:
+                killed["worker"] = ev.worker
+                time.sleep(0.01)     # let the chunk land, then lose the node
+                cluster.kill_worker(ev.worker)
+
+    client.subscribe(on_event)
+    try:
+        handle = submit_run(proj, cluster, client=client, stream=True,
+                            chunk_rows=N_ROWS // 16, speculation_min_s=1e9)
+        res = handle.wait(timeout=120)
+        assert killed, "producer never streamed"
+        assert res.task_attempts["func:mapped"] >= 2     # re-executed
+        got = res.read("sink", cluster)
+        assert _tables_equal(base, got)
+    finally:
+        cluster.close()
+
+
+def test_stream_abort_wakes_blocked_consumer(tmp_path):
+    """A consumer blocked on next_chunk must see ShardUnavailable when the
+    producer aborts — never a hang."""
+    transport = DataTransport(spill_dir=str(tmp_path / "spill"))
+    try:
+        writer = transport.open_stream("run:t1")
+        writer.append(ColumnTable.from_pydict({"x": np.arange(4.0)}))
+        provisional = TableHandle("run:t1", "stream", 0, 0,
+                                  location=writer.location)
+        got, err = [], []
+
+        def consume():
+            try:
+                for chunk in transport.get_stream(provisional):
+                    got.append(chunk)
+            except ShardUnavailable as e:
+                err.append(e)
+
+        t = threading.Thread(target=consume)
+        t.start()
+        time.sleep(0.1)          # consumer drains chunk 0, blocks on chunk 1
+        writer.abort()
+        t.join(timeout=5)
+        assert not t.is_alive()
+        assert err and err[0].key == "run:t1"
+    finally:
+        transport.close()
+
+
+# ---------------------------------------------------------------------------
+# transport memory budget: LRU spill + transparent restore
+# ---------------------------------------------------------------------------
+
+
+def test_transport_budget_spills_lru_and_restores(tmp_path):
+    rng = np.random.default_rng(5)
+    tables = [ColumnTable.from_pydict(
+        {"x": rng.integers(0, 99, 1_000).astype(np.float64)})
+        for _ in range(6)]
+    per = tables[0].nbytes
+    transport = DataTransport(spill_dir=str(tmp_path / "spill"),
+                              memory_budget_bytes=int(per * 2.5))
+    try:
+        handles = [transport.put(f"r:t{i}", t, "zerocopy")
+                   for i, t in enumerate(tables)]
+        stats = dict(transport.stats)
+        assert stats["resident_bytes"] <= per * 2.5
+        assert stats["spilled_bytes"] > 0
+        # cold keys spilled but stayed locally resolvable
+        assert all(transport.has_local(f"r:t{i}") for i in range(6))
+        for i, h in enumerate(handles):      # oldest first: all spilled ones
+            assert _tables_equal(transport.get(h), tables[i])
+        assert transport.stats["restored_bytes"] > 0
+        # spill files are real mmap colfiles on disk
+        assert any(n.startswith("spill-") for n in
+                   os.listdir(str(tmp_path / "spill")))
+    finally:
+        transport.close()
+
+
+def test_budget_never_spills_hottest_key(tmp_path):
+    """The just-admitted key must survive even when it alone exceeds the
+    budget (a table bigger than the budget must still be servable)."""
+    big = ColumnTable.from_pydict({"x": np.arange(50_000.0)})
+    transport = DataTransport(spill_dir=str(tmp_path / "spill"),
+                              memory_budget_bytes=1_000)
+    try:
+        h = transport.put("r:big", big, "zerocopy")
+        assert _tables_equal(transport.get(h), big)
+    finally:
+        transport.close()
+
+
+def test_spilled_chunk_streams_back_byte_identical(tmp_path):
+    """A sealed chunk stream whose chunks all spilled must stream back
+    identical chunks (restore happens per chunk, never a full concat)."""
+    rng = np.random.default_rng(9)
+    chunks = [ColumnTable.from_pydict(
+        {"x": rng.integers(0, 7, 500).astype(np.float64)})
+        for _ in range(5)]
+    transport = DataTransport(spill_dir=str(tmp_path / "spill"),
+                              memory_budget_bytes=chunks[0].nbytes)
+    try:
+        writer = transport.open_stream("r:s")
+        for c in chunks:
+            writer.append(c)
+        handle = writer.finish()
+        assert handle.channel == "chunked" and len(handle.parts) == 5
+        back = list(transport.get_stream(handle))
+        assert len(back) == 5
+        assert all(_tables_equal(a, b) for a, b in zip(chunks, back))
+        assert transport.stats["spilled_bytes"] > 0
+        assert transport.stats["stream_gets"] == 1
+        assert transport.stats["stream_chunks"] == 5
+    finally:
+        transport.close()
+
+
+# ---------------------------------------------------------------------------
+# flight framing: whole-table gets travel as chunk frames
+# ---------------------------------------------------------------------------
+
+
+def test_flight_legacy_get_reuses_chunk_frames(tmp_path):
+    """The legacy whole-table flight path now sends per-chunk frames — a
+    small server chunk size must yield multiple stream chunks while
+    flight_get still reassembles the identical table."""
+    table = ColumnTable.from_pydict({"x": np.arange(10_000.0),
+                                     "y": np.arange(10_000.0) * 3.0})
+    transport = DataTransport(spill_dir=str(tmp_path / "spill"),
+                              flight=FlightServer(chunk_rows=1_024))
+    try:
+        transport.put("r:t", table, "zerocopy")
+        host, port = transport.flight.host, transport.flight.port
+        got = flight_get(host, port, "r:t")
+        assert _tables_equal(got, table)
+        # replay the wire protocol raw: the trailing {"end": n} header
+        # reports how many chunk frames the server sent
+        sock = channels._flight_request(host, port, "r:t", None)
+        try:
+            frames = []
+            while True:
+                header = json.loads(channels._recv_frame(sock).decode())
+                if "end" in header:
+                    assert header["end"] == 10      # ceil(10000 / 1024)
+                    break
+                frames.append(channels._recv_table_chunk(sock, header))
+        finally:
+            sock.close()
+        assert len(frames) == 10
+        assert _tables_equal(concat_tables(frames), table)
+        with pytest.raises(KeyError):
+            flight_get(host, port, "r:missing")
+    finally:
+        transport.close()
+
+
+# ---------------------------------------------------------------------------
+# engine accounting: a cancelled run releases its reserved bytes
+# ---------------------------------------------------------------------------
+
+
+def test_engine_close_releases_inflight_accounting(tmp_path):
+    cat = _make_catalog(tmp_path)
+    proj = bp.Project("cancel")
+    started = threading.Event()
+
+    @proj.model(rowwise=True)
+    def slow(data=bp.Model("src", columns=["a"])):
+        started.set()
+        time.sleep(0.2)
+        return {"a": np.asarray(data.column("a").to_numpy())}
+
+    cluster = LocalCluster(cat, cat.store, str(tmp_path / "dp"), n_workers=2)
+    try:
+        engine = cluster.engine()
+        handle = submit_run(proj, cluster, stream=True,
+                            chunk_rows=N_ROWS // 8, speculation_min_s=1e9)
+        assert started.wait(timeout=30)
+        engine.close()
+        with pytest.raises(Exception, match="aborted|closed"):
+            handle.wait(timeout=60)
+        deadline = time.time() + 30
+        while time.time() < deadline:
+            with engine._lock:
+                if (all(v == 0 for v in engine._mem.values())
+                        and all(v == 0 for v in engine._load.values())):
+                    break
+            time.sleep(0.05)
+        with engine._lock:
+            assert all(v == 0 for v in engine._mem.values()), engine._mem
+            assert all(v == 0 for v in engine._load.values()), engine._load
+    finally:
+        cluster.close()
