@@ -30,7 +30,8 @@ bench-shuffle:
 	$(PYTHON) -m benchmarks.shuffle_exchange --json shuffle_exchange.json
 
 bench-serving:
-	$(PYTHON) -m benchmarks.serving_gateway --json BENCH_serving.json
+	$(PYTHON) -m benchmarks.serving_gateway --json BENCH_serving.json \
+		--metrics-json BENCH_serving_metrics.json
 
 bench-streaming:
 	$(PYTHON) -m benchmarks.streaming_chain --json BENCH_streaming.json

@@ -24,7 +24,22 @@ AdmissionError (callers see sub-millisecond rejections, not timeouts),
 and the p99 of ADMITTED requests stays bounded instead of growing with
 offered load.
 
-    PYTHONPATH=src python -m benchmarks.serving_gateway [--smoke] [--json PATH]
+A fourth phase overloads a slow endpoint with SLOs it cannot meet and
+verifies deadline ENFORCEMENT: expired runs are cancelled by the engine
+(DeadlineExceeded near the deadline, not a late success after the full
+model latency), requests that meet their SLO still succeed, and the
+measured deadline-miss rate is exported through `Gateway.metrics()`.
+
+A fifth phase streams a large response: `Ticket.iter_result()`'s first
+chunk must arrive well before `result()` can materialize the whole
+table, byte-identical when concatenated.
+
+Every serving phase also asserts the catalog ends with exactly the
+branches it started with — per-batch throwaway branches must not leak.
+The final gateway metrics snapshots are archived via --metrics-json.
+
+    PYTHONPATH=src python -m benchmarks.serving_gateway [--smoke] \
+        [--json PATH] [--metrics-json PATH]
 """
 from __future__ import annotations
 
@@ -82,7 +97,7 @@ def _identical(a, b) -> bool:
 def _serve(tmp: str, tag: str, requests, max_batch_requests: int,
            max_pending: int = 4096):
     """Run the whole stream through one warm gateway; returns
-    (outputs, wall_s, latencies, stats)."""
+    (outputs, wall_s, latencies, stats, metrics_snapshot)."""
     store = ObjectStore(f"{tmp}/s3-{tag}")
     catalog = Catalog(store)
     catalog.write_table("requests",
@@ -99,9 +114,16 @@ def _serve(tmp: str, tag: str, requests, max_batch_requests: int,
         outs = [t.result(timeout=600) for t in tickets]
         wall = time.perf_counter() - t0
         lats = [t.latency_s for t in tickets]
-        return outs, wall, lats, gw.stats()
+        return outs, wall, lats, gw.stats(), gw.metrics()
     finally:
         gw.close()
+        _assert_no_branch_leak(catalog, tag)
+
+
+def _assert_no_branch_leak(catalog, tag: str) -> None:
+    branches = catalog.list_branches()
+    if branches != ["main"]:
+        raise SystemExit(f"phase {tag!r} leaked catalog branches: {branches}")
 
 
 def _overload(tmp: str, requests, max_pending: int) -> dict:
@@ -128,6 +150,7 @@ def _overload(tmp: str, requests, max_pending: int) -> dict:
             max_seen_pending = max(max_seen_pending,
                                    gw.stats()["admission"]["pending"])
         lats = [t.result(timeout=600) and t.latency_s for t in admitted]
+        metrics = gw.metrics()
         return {"offered": len(requests), "admitted": len(admitted),
                 "rejected": len(reject_s),
                 "max_pending_seen": max_seen_pending,
@@ -135,9 +158,135 @@ def _overload(tmp: str, requests, max_pending: int) -> dict:
                 "bounded": bool(max_seen_pending <= max_pending),
                 "reject_p99_ms": round(_pct(reject_s, 99) * 1e3, 3)
                 if reject_s else 0.0,
-                "admitted_p99_s": round(_pct(lats, 99), 4)}
+                "admitted_p99_s": round(_pct(lats, 99), 4),
+                "shed_counter": metrics["counters"].get(
+                    "shed_requests", {}).get("ep", 0)}
     finally:
         gw.close()
+        _assert_no_branch_leak(catalog, "overload")
+
+
+def _deadline_overload(tmp: str, n_ok: int, n_tight: int) -> dict:
+    """A slow endpoint (model latency ~MODEL_S) serves a stream where a
+    fraction of requests carries an SLO deadline the model can never
+    meet. Enforcement must CANCEL those runs near the deadline — not let
+    them finish late — while generous-SLO requests keep succeeding, and
+    the gateway must export the measured miss rate."""
+    MODEL_S = 0.30
+    store = ObjectStore(f"{tmp}/s3-deadline")
+    catalog = Catalog(store)
+    catalog.write_table("requests",
+                        ColumnTable.from_pydict({"x": np.asarray([0.0])}))
+
+    proj = bp.Project("serve-slow")
+
+    @proj.model(rowwise=True, materialize=True)
+    def slow(data=bp.Model("requests", columns=["x"])):
+        time.sleep(MODEL_S)
+        return {"x": np.asarray(data.column("x").to_numpy()) * 2.0}
+
+    ok_slo = bp.SLOClass("roomy", priority=0, deadline_s=30.0, max_wait_s=0.0)
+    tight = bp.SLOClass("tight", priority=10, deadline_s=MODEL_S / 3,
+                        max_wait_s=0.0)
+    gw = Gateway(catalog, f"{tmp}/dp-deadline", n_workers=N_WORKERS,
+                 max_batch_requests=1, max_pending=4096,
+                 tenant_rate=1e9, tenant_burst=1e9, validate="off")
+    try:
+        gw.register("ep", proj, "requests")
+        gw.invoke("ep", ColumnTable.from_pydict({"x": np.asarray([1.0])}))
+        tickets = []
+        for i in range(n_ok + n_tight):
+            slo = tight if i % ((n_ok + n_tight) // n_tight) == 0 else ok_slo
+            tickets.append((slo.name, gw.submit(
+                "ep", ColumnTable.from_pydict({"x": np.asarray([float(i)])}),
+                slo=slo)))
+        served, cancelled, cancel_lat = 0, 0, []
+        for name, t in tickets:
+            try:
+                t.result(timeout=600)
+                served += 1
+                if name == "tight":
+                    raise SystemExit("impossible SLO finished 'on time' — "
+                                     "deadline enforcement is not firing")
+            except bp.DeadlineExceeded:
+                cancelled += 1
+                cancel_lat.append(t.latency_s)
+        metrics = gw.metrics()
+        counters = metrics["counters"]
+        misses = counters.get("deadline_misses", {}).get("ep", 0)
+        cancelled_runs = counters.get("deadline_cancelled_runs", {}).get("ep", 0)
+        return {"model_s": MODEL_S, "offered": len(tickets),
+                "served": served, "cancelled": cancelled,
+                "deadline_s": tight.deadline_s,
+                # cancellation must land near the deadline, NOT after the
+                # model's full latency (that would be "finished late")
+                "cancel_p99_s": round(_pct(cancel_lat, 99), 4),
+                "metric_deadline_misses": misses,
+                "metric_cancelled_runs": cancelled_runs,
+                "miss_rate": round(misses / len(tickets), 4),
+                "metrics": metrics}
+    finally:
+        gw.close()
+        _assert_no_branch_leak(catalog, "deadline")
+
+
+def _streaming_phase(tmp: str, rows: int) -> dict:
+    """First-chunk latency of iter_result() vs whole-table result() on a
+    large response, byte-identity checked. Both paths are measured on the
+    SAME run (the lazy loader fetches + concatenates on first result()
+    call), so the engine's task cache cannot hand either side a
+    pre-assembled table and skew the comparison."""
+    store = ObjectStore(f"{tmp}/s3-stream")
+    catalog = Catalog(store)
+    catalog.write_table("requests",
+                        ColumnTable.from_pydict({"x": np.asarray([0.0])}))
+
+    proj = bp.Project("serve-stream")
+
+    @proj.model(rowwise=True)
+    def scaled(data=bp.Model("requests", columns=["x"])):
+        x = np.asarray(data.column("x").to_numpy())
+        return {"x": x * 2.0}
+
+    gw = Gateway(catalog, f"{tmp}/dp-stream", n_workers=N_WORKERS,
+                 max_batch_requests=1, max_pending=4096,
+                 tenant_rate=1e9, tenant_burst=1e9, validate="off")
+    try:
+        gw.register("ep", proj, "requests", chunk_rows=1 << 16)
+        gw.invoke("ep", ColumnTable.from_pydict({"x": np.asarray([1.0])}))
+        big = ColumnTable.from_pydict(
+            {"x": np.arange(rows, dtype=np.float64)})
+
+        t = gw.submit("ep", big)
+        t._done.wait(600)
+        t0 = time.perf_counter()
+        chunks = []
+        first_s = None
+        for chunk in t.iter_result():
+            if first_s is None:
+                first_s = time.perf_counter() - t0
+            chunks.append(chunk)
+        stream_s = time.perf_counter() - t0
+
+        # same ticket, same run: result() materializes through the lazy
+        # loader (full fetch + concat), streaming already warmed every
+        # part — if anything this UNDERSTATES the first-chunk advantage
+        t0 = time.perf_counter()
+        whole = t.result()
+        whole_s = time.perf_counter() - t0
+
+        got = np.concatenate([c.column("x").to_numpy() for c in chunks])
+        if not np.array_equal(got, whole.column("x").to_numpy()):
+            raise SystemExit("streamed response differs from result()")
+        return {"rows": rows, "chunks": len(chunks),
+                "first_chunk_ms": round(first_s * 1e3, 4),
+                "stream_total_ms": round(stream_s * 1e3, 4),
+                "whole_table_ms": round(whole_s * 1e3, 4),
+                "first_chunk_speedup": round(whole_s / max(first_s, 1e-9), 2),
+                "identical": True}
+    finally:
+        gw.close()
+        _assert_no_branch_leak(catalog, "streaming")
 
 
 def _pct(xs, p: float) -> float:
@@ -147,13 +296,15 @@ def _pct(xs, p: float) -> float:
     return xs[min(int(len(xs) * p / 100.0), len(xs) - 1)]
 
 
-def run(n_requests: int = 80, json_path: str = None) -> dict:
+def run(n_requests: int = 80, json_path: str = None,
+        metrics_json_path: str = None, stream_rows: int = 1 << 21,
+        n_deadline_ok: int = 12, n_deadline_tight: int = 4) -> dict:
     tmp = tempfile.mkdtemp(prefix="bench_serving_")
     requests = _requests(n_requests)
 
-    base_out, base_wall, base_lat, base_stats = _serve(
+    base_out, base_wall, base_lat, base_stats, _ = _serve(
         tmp, "base", requests, max_batch_requests=1)
-    bat_out, bat_wall, bat_lat, bat_stats = _serve(
+    bat_out, bat_wall, bat_lat, bat_stats, bat_metrics = _serve(
         tmp, "batched", requests, max_batch_requests=8)
 
     identical = all(_identical(a, b) for a, b in zip(base_out, bat_out))
@@ -174,6 +325,20 @@ def run(n_requests: int = 80, json_path: str = None) -> dict:
            f"<= {over['max_pending_seen']}/{over['bound']}, "
            f"reject p99 {over['reject_p99_ms']}ms")
 
+    deadline = _deadline_overload(tmp, n_deadline_ok, n_deadline_tight)
+    deadline_metrics = deadline.pop("metrics")
+    report("serving/deadline", deadline["cancel_p99_s"],
+           f"{deadline['cancelled']}/{deadline['offered']} cancelled, "
+           f"miss rate {deadline['miss_rate']:.2f}, "
+           f"{deadline['metric_cancelled_runs']} runs engine-cancelled")
+
+    streaming = _streaming_phase(tmp, rows=stream_rows)
+    report("serving/streaming", streaming["first_chunk_ms"] / 1e3,
+           f"{streaming['rows']} rows in {streaming['chunks']} chunks, "
+           f"first chunk {streaming['first_chunk_ms']}ms vs whole "
+           f"{streaming['whole_table_ms']}ms "
+           f"(x{streaming['first_chunk_speedup']})")
+
     result = {
         "n_workers": N_WORKERS, "n_requests": n_requests,
         "light_rows": LIGHT_ROWS, "heavy_rows": HEAVY_ROWS,
@@ -191,14 +356,38 @@ def run(n_requests: int = 80, json_path: str = None) -> dict:
         "speedup_req_per_s": round(speedup, 3),
         "identical": bool(identical),
         "overload": over,
+        "deadline": deadline,
+        "streaming": streaming,
     }
     if json_path:
         with open(json_path, "w") as f:
             json.dump(result, f, indent=2)
+    if metrics_json_path:
+        with open(metrics_json_path, "w") as f:
+            json.dump({"batched": bat_metrics,
+                       "deadline": deadline_metrics}, f, indent=2,
+                      sort_keys=True)
     if not identical:
         raise SystemExit("batched responses differ from per-request serving")
     if not over["bounded"]:
         raise SystemExit("admission bound exceeded under overload")
+    # the acceptance gates: live metrics exported, expired runs cancelled
+    hists = bat_metrics["histograms"]
+    if not hists.get("queue_wait_s", {}).get("ep", {}).get("count"):
+        raise SystemExit("queue-wait histogram is empty")
+    if not hists.get("batch_occupancy", {}).get("ep", {}).get("count"):
+        raise SystemExit("batch-occupancy histogram is empty")
+    if not over["shed_counter"]:
+        raise SystemExit("shed counter not exported under overload")
+    if deadline["cancelled"] != n_deadline_tight:
+        raise SystemExit("not every impossible-SLO request was cancelled")
+    if deadline["metric_cancelled_runs"] < 1:
+        raise SystemExit("no run was engine-cancelled under overload")
+    if deadline["metric_deadline_misses"] != deadline["cancelled"]:
+        raise SystemExit("deadline-miss metric disagrees with observed misses")
+    if streaming["first_chunk_speedup"] <= 1.0:
+        raise SystemExit("iter_result first chunk was not faster than "
+                         "materializing the whole response")
     return result
 
 
@@ -207,8 +396,14 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="small sizes for CI (correctness + plumbing)")
     ap.add_argument("--json", default=None, help="write results JSON here")
+    ap.add_argument("--metrics-json", default=None,
+                    help="archive gateway metrics snapshots here")
     args = ap.parse_args()
-    out = run(n_requests=24 if args.smoke else 80, json_path=args.json)
+    out = run(n_requests=24 if args.smoke else 80,
+              json_path=args.json, metrics_json_path=args.metrics_json,
+              stream_rows=1 << 19 if args.smoke else 1 << 21,
+              n_deadline_ok=6 if args.smoke else 12,
+              n_deadline_tight=2 if args.smoke else 4)
     print(json.dumps(out))
 
 

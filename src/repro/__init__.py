@@ -21,8 +21,8 @@ from repro.api import (GroupByCombine, GroupByExchange, JoinCombine,
                        StatsCombine, check, combinable, default_project,
                        exchangeable, model, python, resources, run, serve,
                        submit)
-from repro.core.errors import (BauplanError, ContractError, LintError,
-                               PlanError)
+from repro.core.errors import (BauplanError, ContractError, DeadlineExceeded,
+                               LintError, PlanError)
 from repro.core.spec import (CombineContract, EnvSpec, ExchangeContract,
                              ModelRef, ResourceHint)
 from repro.serving import (AdmissionError, Gateway, GatewayError, SLOClass)
@@ -37,5 +37,6 @@ __all__ = [
     "ExchangeContract", "GroupByExchange", "JoinExchange", "SortExchange",
     "exchangeable",
     "BauplanError", "PlanError", "ContractError", "LintError",
+    "DeadlineExceeded",
     "serve", "Gateway", "GatewayError", "AdmissionError", "SLOClass",
 ]

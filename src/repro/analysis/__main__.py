@@ -36,7 +36,7 @@ from repro.analysis.locklint import lint_files
 _INTERNAL_MODULES = ("core/engine.py", "core/runtime.py", "core/remote.py",
                      "core/channels.py",
                      "serving/gateway.py", "serving/admission.py",
-                     "serving/batcher.py")
+                     "serving/batcher.py", "serving/metrics.py")
 
 
 def _iter_py_files(paths) -> List[str]:

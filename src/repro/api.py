@@ -465,20 +465,26 @@ def run(project: Optional[Project] = None, *, catalog=None, cluster=None,
 def serve(project: Optional[Project] = None, *, catalog, scratch_root=None,
           cluster=None, source_table: Optional[str] = None,
           target: Optional[str] = None, endpoint: str = "default",
-          branch: str = "main", validate: str = "warn", **gateway_kw):
+          branch: str = "main", validate: str = "warn",
+          idempotent: bool = False, chunk_rows: Optional[int] = None,
+          **gateway_kw):
     """Stand up a serving Gateway with this project registered as one
     endpoint — the request-level front door (micro-batching, SLO classes,
-    admission control) over a warm cluster.
+    admission control, deadline enforcement, live metrics) over a warm
+    cluster.
 
         gw = bp.serve(project, catalog=catalog, scratch_root="/tmp/bp",
                       source_table="requests")
         ticket = gw.submit("default", request_table, slo="interactive")
-        response = ticket.result()
+        response = ticket.result()        # or: for chunk in ticket.iter_result()
 
     ``source_table`` is the request seam (defaults to the project's single
-    source table when unambiguous); extra keyword args are Gateway knobs
-    (max_batch_requests, max_pending, tenant_rate, ...). Remember to
-    ``gw.close()`` (or use it as a context manager)."""
+    source table when unambiguous); ``idempotent=True`` enables the
+    gateway result cache for this endpoint and ``chunk_rows`` makes its
+    responses chunk-streamable via ``Ticket.iter_result``; extra keyword
+    args are Gateway knobs (max_batch_requests, max_pending, tenant_rate,
+    result_cache, ...). Remember to ``gw.close()`` (or use it as a
+    context manager)."""
     from repro.serving import Gateway
 
     project = project or _default_project
@@ -493,7 +499,8 @@ def serve(project: Optional[Project] = None, *, catalog, scratch_root=None,
                  **gateway_kw)
     try:
         gw.register(endpoint, project, source_table, target=target,
-                    branch=branch)
+                    branch=branch, idempotent=idempotent,
+                    chunk_rows=chunk_rows)
     except BaseException:
         gw.close()
         raise

@@ -125,6 +125,20 @@ class Catalog:
     def create_branch(self, branch: str, from_branch: str = "main") -> None:
         self._write_branch(branch, self._read_branch(from_branch))
 
+    def delete_branch(self, branch: str) -> None:
+        """Drop a branch pointer. Commits and snapshots it referenced are
+        content-addressed and may be shared with other branches, so only
+        the pointer file goes — readers holding a commit id keep working.
+        Raises KeyError for an unknown branch; refuses to delete "main"
+        (every catalog is born with it and serving forks from it)."""
+        if branch == "main":
+            raise ValueError("refusing to delete branch 'main'")
+        with self._commit_lock:
+            key = self._branch_key(branch)
+            if not self.store.exists(key):
+                raise KeyError(f"unknown branch {branch!r}")
+            self.store.delete(key)
+
     def merge(self, from_branch: str, into_branch: str) -> str:
         """Fast-forward-style merge: replay source tables into target."""
         src_tables = self._tables_at(self._read_branch(from_branch))

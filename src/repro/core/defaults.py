@@ -65,3 +65,6 @@ SERVE_MAX_PENDING = 64
 SERVE_TENANT_RATE = 200.0
 SERVE_TENANT_BURST = 64
 SERVE_MAX_INFLIGHT_BATCHES = 8
+# response tables cached per gateway for endpoints registered
+# idempotent=True, keyed (endpoint, request-table content hash); LRU
+SERVE_RESULT_CACHE = 256

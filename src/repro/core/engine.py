@@ -41,6 +41,7 @@ from typing import Dict, List, Optional, Set, Tuple, TYPE_CHECKING
 
 from repro.core import defaults
 from repro.core.channels import TableHandle
+from repro.core.errors import DeadlineExceeded
 from repro.core.journal import RunJournal
 from repro.core.physical import (FunctionTask, InputEdge, PartitionTask,
                                  PhysicalPlan, PlacementHint,
@@ -145,6 +146,38 @@ class RunResult:
             return self._read_handle(tid, cluster)
         raise KeyError(f"no output named {name!r} in run {self.run_id}")
 
+    def open_stream(self, name: str, cluster: "ClusterLike"):
+        """Chunk-streaming access to a produced dataframe: returns
+        ``(handle, opener)`` where ``opener()`` yields the output's row
+        chunks in order via the transport's ``get_stream`` — the first
+        chunk is available before the table is assembled, which is what
+        the serving gateway's ``Ticket.iter_result`` rides. Returns None
+        when the output needs multi-handle assembly (sharded producers,
+        exchange partitions, projected gathers) — callers fall back to
+        the materializing ``read``."""
+        tid = f"func:{name}" if f"func:{name}" in self.handles else f"scan:{name}"
+        if tid not in self.handles:
+            return None
+        task = self.plan.tasks.get(tid)
+        if (getattr(task, "kind", "") == "gather"
+                and getattr(task, "columns", None) is not None
+                and tid.startswith("func:")):
+            return None         # projected gather: read() reassembles shards
+        handle = self.handles[tid]
+        if handle.channel in ("partitioned", "shuffle", "stream"):
+            return None
+        placed_id = self.placements.get(tid, "")
+        workers = sorted(cluster.healthy_workers(),
+                         key=lambda w: w.worker_id != placed_id)
+        if not workers:
+            raise TaskError(f"no healthy workers left to stream {tid!r}")
+        transport = workers[0].transport
+
+        def opener(columns=None):
+            return transport.get_stream(handle, columns)
+
+        return handle, opener
+
     def _read_handle(self, tid: str, cluster: "ClusterLike"):
         """Read one task's buffers, degrading across the fleet: the recorded
         placement first, then any healthy worker (mmap/objectstore handles
@@ -196,8 +229,12 @@ class _RunState:
         self.spec_min_s = spec_min_s
         self.priority = priority
         # absolute perf_counter time this run's SLO expires (None = no SLO);
-        # the ready heap prefers earlier deadlines among equal priorities
+        # the ready heap prefers earlier deadlines among equal priorities,
+        # and cancel_expired kills the whole run once the moment passes
         self.deadline = deadline
+        self.deadline_exceeded = False
+        self.deadline_waited_s: Optional[float] = None
+        self.deadline_timer: Optional[threading.Timer] = None
         self.handles = HandleMap()
         # producers currently publishing a live chunk stream: their
         # stream-capable consumers dispatch on the first chunk (pipelined
@@ -241,6 +278,11 @@ class RunHandle:
         if not self._state.finished.wait(timeout):
             raise TimeoutError(f"run {self.run_id} still executing")
         if self._state.error is not None:
+            if self._state.deadline_exceeded:
+                raise DeadlineExceeded(
+                    self._state.error,
+                    waited_s=self._state.deadline_waited_s,
+                    run_id=self.run_id)
             raise TaskError(self._state.error)
         return self._state.result
 
@@ -377,6 +419,15 @@ class ExecutionEngine:
                 if state.indegree[tid] == 0:
                     self._enqueue(state, tid)
             self._dispatch_ready()
+        if deadline_s is not None:
+            # deadline enforcement, not just ordering: when the SLO moment
+            # passes the run is cancelled (cancel_expired), never finished
+            # late. Small epsilon so the timer fires strictly after the
+            # deadline comparison in cancel_expired can see it expired.
+            timer = threading.Timer(deadline_s + 0.002, self.cancel_expired)
+            timer.daemon = True
+            state.deadline_timer = timer
+            timer.start()
         if not state.plan.order:
             self._finalize(state)
         return RunHandle(self, state)
@@ -384,6 +435,56 @@ class ExecutionEngine:
     def run(self, plan: PhysicalPlan, project=None,
             client: Optional[Client] = None, **kw) -> RunResult:
         return self.submit(plan, project, client, **kw).wait()
+
+    def cancel_expired(self) -> List[str]:
+        """Cancel every run whose absolute SLO deadline has passed.
+
+        Reuses the close() cancel plumbing: queued heap entries of a
+        finalized run are dropped by the stale-entry guard in
+        `_dispatch_ready`, `_attempt` refuses to execute for a finished
+        run, and `_on_done` evicts late completions — so marking the run
+        failed + finalizing is sufficient for ready/queued tasks; inflight
+        remote tasks additionally get a best-effort `worker.cancel`.
+        Each run's deadline timer calls this, and callers (the serving
+        gateway, tests) may invoke it directly. Returns the cancelled
+        run_ids."""
+        to_cancel: List[Tuple[object, str, str]] = []
+        expired: List[str] = []
+        with self._lock:
+            now = time.perf_counter()
+            for state in list(self._runs):
+                if (state.deadline is None or state.finished.is_set()
+                        or now < state.deadline):
+                    continue
+                waited = now - state.t0
+                state.deadline_exceeded = True
+                state.deadline_waited_s = waited
+                for tid, info in state.inflight.items():
+                    if info.timer is not None:
+                        info.timer.cancel()
+                    for wid in info.workers:
+                        w = self.cluster.workers.get(wid)
+                        if w is not None and hasattr(w, "cancel"):
+                            to_cancel.append((w, state.plan.run_id, tid))
+                state.client.emit(Event(
+                    "deadline_exceeded", "", "",
+                    {"run_id": state.plan.run_id, "waited_s": waited,
+                     "tasks_done": len(state.done),
+                     "tasks_remaining": state.remaining()}))
+                state.error = (f"run {state.plan.run_id} deadline exceeded "
+                               f"after {waited:.3f}s "
+                               f"({len(state.done)}/{len(state.plan.order)} "
+                               "tasks done); cancelled")
+                expired.append(state.plan.run_id)
+                self._finalize(state)
+        # best-effort, off-lock (same discipline as close()): a dead or
+        # slow worker must not stall deadline enforcement for other runs
+        for w, run_id, tid in to_cancel:
+            try:
+                w.cancel(run_id, tid)
+            except Exception:  # noqa: BLE001 — run is already cancelled
+                pass
+        return expired
 
     def close(self) -> None:
         to_cancel: List[Tuple[object, str, str]] = []
@@ -945,6 +1046,10 @@ class ExecutionEngine:
         with self._lock:
             if state.finished.is_set():
                 return
+            if state.deadline_timer is not None:
+                # no-op when called from the timer's own thread
+                state.deadline_timer.cancel()
+                state.deadline_timer = None
             if state in self._runs:
                 self._runs.remove(state)
             if state.stream_cb is not None:

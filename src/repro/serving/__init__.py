@@ -4,15 +4,19 @@
 so gateway-only users never pay the jax import.
 """
 
+from repro.core.errors import DeadlineExceeded
+
 from .admission import AdmissionController, AdmissionError, TokenBucket
 from .batcher import MicroBatcher, PendingRequest
 from .gateway import Endpoint, Gateway, GatewayError, Ticket
+from .metrics import MetricsRegistry
 from .slo import BATCH, INTERACTIVE, SLO_CLASSES, STANDARD, SLOClass, resolve_slo
 
 __all__ = [
     "AdmissionController", "AdmissionError", "TokenBucket",
     "MicroBatcher", "PendingRequest",
     "Endpoint", "Gateway", "GatewayError", "Ticket",
+    "DeadlineExceeded", "MetricsRegistry",
     "BATCH", "INTERACTIVE", "STANDARD", "SLO_CLASSES", "SLOClass",
     "resolve_slo",
     "DecodeService",

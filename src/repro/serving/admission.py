@@ -68,12 +68,14 @@ class AdmissionController:
     """Bounded outstanding-request count + per-tenant token buckets."""
 
     def __init__(self, max_pending: int, tenant_rate: float,
-                 tenant_burst: float):
+                 tenant_burst: float, metrics=None):
         if max_pending <= 0:
             raise ValueError("max_pending must be positive")
         self.max_pending = max_pending
         self.tenant_rate = tenant_rate
         self.tenant_burst = tenant_burst
+        # optional serving MetricsRegistry: refusals counted by reason
+        self.metrics = metrics
         self._lock = threading.Lock()
         self._pending = 0              # guard: _lock
         self._buckets: Dict[str, TokenBucket] = {}  # guard: _lock
@@ -87,6 +89,8 @@ class AdmissionController:
         with self._lock:
             if self._pending >= self.max_pending:
                 self._rejected["queue_full"] = self._rejected.get("queue_full", 0) + 1
+                if self.metrics is not None:
+                    self.metrics.inc("admission_rejected", "queue_full")
                 raise AdmissionError("queue_full", tenant=tenant)
             bucket = self._buckets.get(tenant)
             if bucket is None:
@@ -96,6 +100,8 @@ class AdmissionController:
             if wait is not None:
                 self._rejected["tenant_throttled"] = (
                     self._rejected.get("tenant_throttled", 0) + 1)
+                if self.metrics is not None:
+                    self.metrics.inc("admission_rejected", "tenant_throttled")
                 raise AdmissionError("tenant_throttled", tenant=tenant,
                                      retry_after_s=wait)
             self._pending += 1

@@ -27,20 +27,27 @@ class PendingRequest:
     """One admitted request waiting in a batching queue."""
 
     def __init__(self, ticket, endpoint: str, slo: SLOClass, table,
-                 enqueued: float):
+                 enqueued: float, fingerprint: Optional[str] = None):
         self.ticket = ticket
         self.endpoint = endpoint
         self.slo = slo
         self.table = table
         self.enqueued = enqueued
+        # content hash of the request table (idempotent endpoints only);
+        # the gateway caches this request's response under it
+        self.fingerprint = fingerprint
 
 
 class MicroBatcher:
-    def __init__(self, max_batch_requests: int, max_batch_rows: int):
+    def __init__(self, max_batch_requests: int, max_batch_rows: int,
+                 metrics=None):
         if max_batch_requests < 1:
             raise ValueError("max_batch_requests must be >= 1")
         self.max_batch_requests = max_batch_requests
         self.max_batch_rows = max_batch_rows
+        # optional serving MetricsRegistry: the batcher keeps the
+        # queue_depth gauge live on every add/flush
+        self.metrics = metrics
         self._lock = threading.Lock()
         self._ready = threading.Condition(self._lock)
         # guard: _lock
@@ -55,6 +62,9 @@ class MicroBatcher:
                 raise RuntimeError("batcher is closed")
             self._queues.setdefault(key, []).append(req)
             self._slos[key] = req.slo
+            if self.metrics is not None:
+                self.metrics.gauge("queue_depth",
+                                   sum(len(q) for q in self._queues.values()))
             self._ready.notify()
 
     def _rows(self, queue: List[PendingRequest]) -> int:
@@ -112,6 +122,10 @@ class MicroBatcher:
                             break
                         batch.append(queue.pop(0))
                         rows += nxt.table.num_rows
+                    if self.metrics is not None:
+                        self.metrics.gauge(
+                            "queue_depth",
+                            sum(len(q) for q in self._queues.values()))
                     return batch
                 wait = self._next_deadline(now)
                 if end is not None:

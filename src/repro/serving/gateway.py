@@ -13,14 +13,28 @@ gateway closes that gap:
    backpressure at the front door instead of fleet OOM.
 2. **micro-batching** — admitted requests land in per-(endpoint, SLO)
    queues and coalesce into one pipeline run per batch: the request
-   tables concat into one source table on a throwaway catalog branch,
-   the pipeline runs once, and the output splits back into per-request
-   row ranges. Amortizes every per-run cost across the batch.
-3. **SLO scheduling** — the batch's run is submitted with its SLO
-   class's static priority and deadline; the engine's shared ready heap
-   orders by effective priority (static + aging), then deadline, then
-   FIFO, so interactive batches preempt background runs on contended
-   slots without starving them.
+   tables concat into one source table on a throwaway catalog branch
+   (deleted when the batch resolves — success or failure — so serving
+   never grows the catalog), the pipeline runs once, and the output
+   splits back into per-request row ranges. Amortizes every per-run
+   cost across the batch.
+3. **SLO scheduling + deadline enforcement** — the batch's run is
+   submitted with its SLO class's static priority; its deadline is
+   measured from *request arrival*, so admission + queue wait is
+   subtracted from ``slo.deadline_s`` before the engine sees it. A
+   request whose deadline expired while queued fails immediately with
+   DeadlineExceeded (never runs); a run that outlives the remaining
+   budget is cancelled by ``engine.cancel_expired`` instead of
+   finishing late and burning the fleet.
+4. **observability** — every hook (front door, batcher, admission,
+   batch executor, and the engine's run-lifecycle event stream via the
+   per-batch ``Client.subscribe``) feeds one MetricsRegistry, surfaced
+   as ``Gateway.metrics()`` / ``metrics_snapshot()``.
+5. **response streaming + caching** — ``Ticket.iter_result()`` follows
+   the target's chunked TableHandle via the transport's ``get_stream``,
+   so the first response rows arrive before the whole table is fetched
+   and concatenated; endpoints registered ``idempotent=True`` get
+   result caching keyed on (endpoint, request-table content hash).
 
 Coalescing is only sound when the pipeline is row-preserving: every
 model downstream of the request source table must be declared
@@ -33,22 +47,51 @@ count must equal the input row count or the whole batch fails loudly
 with GatewayError (never silently mis-split).
 """
 
+import hashlib
+import json
 import sys
 import threading
 import time
+from collections import OrderedDict
 from concurrent.futures import ThreadPoolExecutor
-from typing import Dict, List, Optional, Union
+from typing import Dict, Iterator, List, Optional, Tuple, Union
+
+import numpy as np
 
 from repro.core import defaults
+from repro.core.errors import DeadlineExceeded
 
 from .admission import AdmissionController, AdmissionError  # noqa: F401
 from .batcher import MicroBatcher, PendingRequest
+from .metrics import MetricsRegistry
 from .slo import SLOClass, resolve_slo
 
 
 class GatewayError(RuntimeError):
     """A request failed inside the gateway after admission (run failure,
     row-count contract violation, unknown endpoint, shutdown)."""
+
+
+def _table_fingerprint(table) -> str:
+    """Content hash of a request table: column names, kinds, dtypes and
+    value bytes (offset-normalized for utf8 so slices hash by logical
+    content). Equal fingerprints imply equal logical tables — the cache
+    key for idempotent endpoints."""
+    h = hashlib.blake2b(digest_size=16)
+    for name in sorted(table.column_names):
+        col = table.column(name)
+        h.update(name.encode())
+        h.update(col.kind.encode())
+        h.update(str(col.data.dtype).encode())
+        if col.kind == "utf8":
+            off = col.offsets
+            h.update(col.data[off[0]:off[-1]].tobytes())
+            h.update((off - off[0]).tobytes())
+        else:
+            h.update(np.ascontiguousarray(col.data).tobytes())
+        if col.validity is not None:
+            h.update(np.asarray(col.validity).tobytes())
+    return h.hexdigest()
 
 
 class Ticket:
@@ -63,6 +106,9 @@ class Ticket:
         self._table = None
         self._error: Optional[BaseException] = None
         self._resolved_at: Optional[float] = None
+        self._stream: Optional[Tuple] = None  # (opener, start, num_rows)
+        self._loader = None                   # lazy materializer
+        self._loader_lock = threading.Lock()
         self.batched_with = 0   # co-riders in this request's micro-batch
 
     def _resolve(self, table) -> None:
@@ -70,10 +116,23 @@ class Ticket:
         self._resolved_at = time.perf_counter()
         self._done.set()
 
+    def _resolve_lazy(self, loader) -> None:
+        """Resolve with the response's rows still on the workers: the
+        ticket is done (latency clock stops) but ``result()`` fetches on
+        first call — streaming-registered endpoints only, so
+        ``iter_result()`` callers never pay a whole-table fetch they
+        won't read."""
+        self._loader = loader
+        self._resolved_at = time.perf_counter()
+        self._done.set()
+
     def _fail(self, exc: BaseException) -> None:
         self._error = exc
         self._resolved_at = time.perf_counter()
         self._done.set()
+
+    def _attach_stream(self, opener, start: int, num_rows: int) -> None:
+        self._stream = (opener, start, num_rows)
 
     def done(self) -> bool:
         return self._done.is_set()
@@ -86,7 +145,43 @@ class Ticket:
                                "in flight")
         if self._error is not None:
             raise self._error
+        if self._loader is not None:
+            with self._loader_lock:
+                if self._loader is not None:
+                    self._table = self._loader()
+                    self._loader = None
         return self._table
+
+    def iter_result(self, timeout: Optional[float] = None) -> Iterator:
+        """Stream the response chunk by chunk.
+
+        Follows the target's chunked TableHandle over the zero-copy
+        transport, so the first rows arrive after fetching ONE chunk
+        instead of fetching + concatenating the whole table the way
+        ``result()`` does. Chunks cover exactly this request's row range
+        of the coalesced output (sliced across chunk boundaries);
+        concatenating them is byte-identical to ``result()``. Falls back
+        to yielding the whole table as one chunk when the target's
+        output isn't chunk-addressable (materialized / single-buffer /
+        cache-served responses)."""
+        if not self._done.wait(timeout):
+            raise TimeoutError(f"request against {self.endpoint!r} still "
+                               "in flight")
+        if self._error is not None:
+            raise self._error
+        if self._stream is None:
+            yield self._table
+            return
+        opener, start, num_rows = self._stream
+        end = start + num_rows
+        pos = 0
+        for chunk in opener():
+            lo, hi = max(start, pos), min(end, pos + chunk.num_rows)
+            if lo < hi:
+                yield chunk.slice(lo - pos, hi - lo)
+            pos += chunk.num_rows
+            if pos >= end:
+                return
 
     @property
     def latency_s(self) -> Optional[float]:
@@ -100,7 +195,9 @@ class Endpoint:
     """One registered pipeline: project + the request-table seam."""
 
     def __init__(self, name: str, project, source_table: str, target: str,
-                 branch: str, coalescible: bool, why_not: str = ""):
+                 branch: str, coalescible: bool, why_not: str = "",
+                 idempotent: bool = False,
+                 chunk_rows: Optional[int] = None):
         self.name = name
         self.project = project
         self.source_table = source_table
@@ -108,6 +205,12 @@ class Endpoint:
         self.branch = branch
         self.coalescible = coalescible
         self.why_not = why_not  # human-readable reason coalescing is off
+        # idempotent: same request table -> same response, so responses
+        # may be served from the gateway's result cache
+        self.idempotent = idempotent
+        # chunk_rows: forwarded to submit_run so a rowwise, non-materialized
+        # target publishes a chunked handle iter_result() can stream
+        self.chunk_rows = chunk_rows
 
 
 def _downstream_of(project, source_table: str) -> List:
@@ -163,6 +266,7 @@ class Gateway:
                  tenant_rate: float = defaults.SERVE_TENANT_RATE,
                  tenant_burst: float = defaults.SERVE_TENANT_BURST,
                  max_inflight_batches: int = defaults.SERVE_MAX_INFLIGHT_BATCHES,
+                 result_cache: int = defaults.SERVE_RESULT_CACHE,
                  validate: str = "warn"):
         if validate not in ("off", "warn", "strict"):
             raise ValueError(f"validate must be off/warn/strict, "
@@ -178,9 +282,12 @@ class Gateway:
             cluster = LocalCluster(catalog, catalog.store, scratch_root,
                                    n_workers=n_workers, memory_gb=memory_gb)
         self.cluster = cluster
+        self.metrics_registry = MetricsRegistry()
         self.admission = AdmissionController(max_pending, tenant_rate,
-                                             tenant_burst)
-        self._batcher = MicroBatcher(max_batch_requests, max_batch_rows)
+                                             tenant_burst,
+                                             metrics=self.metrics_registry)
+        self._batcher = MicroBatcher(max_batch_requests, max_batch_rows,
+                                     metrics=self.metrics_registry)
         self._pool = ThreadPoolExecutor(max_workers=max_inflight_batches,
                                         thread_name_prefix="gw-batch")
         self._lock = threading.Lock()
@@ -189,6 +296,11 @@ class Gateway:
         self._closed = False          # guard: _lock
         self._stats = {"requests": 0, "batches": 0, "runs": 0,
                        "coalesced_requests": 0}  # guard: _lock
+        # LRU of response tables for idempotent endpoints, keyed
+        # (endpoint, request-table fingerprint)
+        self._result_cache: "OrderedDict[Tuple[str, str], object]" = \
+            OrderedDict()             # guard: _lock
+        self._result_cache_cap = max(int(result_cache), 0)
         self._dispatcher = threading.Thread(target=self._dispatch_loop,
                                             name="gw-dispatch", daemon=True)
         self._dispatcher.start()
@@ -197,13 +309,20 @@ class Gateway:
 
     def register(self, name: str, project, source_table: str,
                  target: Optional[str] = None,
-                 branch: str = "main") -> Endpoint:
+                 branch: str = "main", idempotent: bool = False,
+                 chunk_rows: Optional[int] = None) -> Endpoint:
         """Bind a pipeline as a serving endpoint.
 
         ``source_table`` is the request seam: each request's table is
         written under that name (on a per-batch branch) before the run.
         ``target`` is the model whose output answers the request; when
         omitted it must be unambiguous — the project's single sink model.
+        ``idempotent=True`` declares that equal request tables always
+        produce equal responses, enabling the gateway result cache (do
+        NOT set it for pipelines that read mutable base tables and must
+        observe their latest commit). ``chunk_rows`` asks the run to
+        publish the target as a chunked handle of at most that many rows
+        per chunk so ``Ticket.iter_result`` streams real chunks.
         Registration runs the static analyzer per the gateway's
         ``validate`` mode, so a broken project fails at deploy time, not
         on its first request.
@@ -237,7 +356,8 @@ class Gateway:
 
         ok, why = _coalescible(project, source_table, target)
         ep = Endpoint(name, project, source_table, target, branch,
-                      coalescible=ok, why_not=why)
+                      coalescible=ok, why_not=why, idempotent=idempotent,
+                      chunk_rows=chunk_rows)
         with self._lock:
             if self._closed:
                 raise GatewayError("gateway is closed")
@@ -252,7 +372,9 @@ class Gateway:
 
         Raises AdmissionError (front door refused — nothing ran) or
         GatewayError (unknown endpoint / closed). The admission slot is
-        held until the ticket resolves or fails.
+        held until the ticket resolves or fails. Idempotent endpoints
+        may resolve instantly from the result cache, bypassing admission
+        entirely (a cached response costs the fleet nothing).
         """
         with self._lock:
             if self._closed:
@@ -263,10 +385,28 @@ class Gateway:
             raise GatewayError(f"unknown endpoint {endpoint!r}; registered: "
                                f"{registered}")
         slo_cls = resolve_slo(slo)
-        self.admission.admit(tenant)  # raises AdmissionError
+        m = self.metrics_registry
+        m.inc("requests", endpoint)
+        fingerprint = None
+        if ep.idempotent:
+            fingerprint = _table_fingerprint(table)
+            with self._lock:
+                cached = self._result_cache.get((endpoint, fingerprint))
+                if cached is not None:
+                    self._result_cache.move_to_end((endpoint, fingerprint))
+            if cached is not None:
+                m.inc("result_cache_hits", endpoint)
+                ticket = Ticket(endpoint, slo_cls, tenant)
+                ticket._resolve(cached)
+                return ticket
+        try:
+            self.admission.admit(tenant)  # raises AdmissionError
+        except AdmissionError:
+            m.inc("shed_requests", endpoint)
+            raise
         ticket = Ticket(endpoint, slo_cls, tenant)
         req = PendingRequest(ticket, endpoint, slo_cls, table,
-                             time.perf_counter())
+                             time.perf_counter(), fingerprint=fingerprint)
         with self._lock:
             self._stats["requests"] += 1
         try:
@@ -277,8 +417,14 @@ class Gateway:
                 self._pool.submit(self._run_batch, [req])
         except BaseException as e:
             self.admission.release()
+            if (isinstance(e, RuntimeError)
+                    and not isinstance(e, GatewayError)):
+                # a racing close() shut the batcher/pool between our
+                # _closed check and the enqueue: surface the gateway
+                # state, not the internal component's error
+                e = GatewayError("gateway closed during submit")
             ticket._fail(e)
-            raise
+            raise e
         return ticket
 
     def invoke(self, endpoint: str, table, **kw):
@@ -302,6 +448,33 @@ class Gateway:
             self._seq += 1
             return self._seq
 
+    def _engine_listener(self, endpoint: str):
+        """Per-batch Client.subscribe hook: fold the engine's
+        run-lifecycle events into the serving metrics."""
+        m = self.metrics_registry
+        kinds = {"task_done": "engine_tasks_done",
+                 "cache_hit": "engine_cache_hits",
+                 "task_retry": "engine_task_retries",
+                 "worker_lost": "engine_workers_lost",
+                 "stream_chunk": "engine_stream_chunks"}
+
+        def _on_event(ev) -> None:
+            name = kinds.get(ev.kind)
+            if name is not None:
+                m.inc(name, endpoint)
+            elif ev.kind == "deadline_exceeded":
+                m.inc("deadline_cancelled_runs", endpoint)
+        return _on_event
+
+    def _cache_put(self, ep: Endpoint, req: PendingRequest, table) -> None:
+        if req.fingerprint is None or self._result_cache_cap == 0:
+            return
+        with self._lock:
+            self._result_cache[(ep.name, req.fingerprint)] = table
+            self._result_cache.move_to_end((ep.name, req.fingerprint))
+            while len(self._result_cache) > self._result_cache_cap:
+                self._result_cache.popitem(last=False)
+
     def _run_batch(self, batch: List[PendingRequest]) -> None:
         """Coalesce -> one run on a throwaway branch -> split -> resolve."""
         from repro.columnar.table import concat_tables
@@ -310,37 +483,90 @@ class Gateway:
         with self._lock:
             ep = self._endpoints[batch[0].endpoint]
         slo = batch[0].slo
+        m = self.metrics_registry
+        now = time.perf_counter()
+        for req in batch:
+            m.observe("queue_wait_s", now - req.enqueued, ep.name)
+        m.observe("batch_occupancy", len(batch), ep.name)
         seq = self._next_seq()
         run_id = f"gw-{ep.name}-{seq:06d}"
         branch = f"serve/{ep.name}/{seq:06d}"
+        branch_created = False
         try:
+            deadline_s = slo.deadline_s
+            if deadline_s is not None:
+                # the SLO clock started at request ARRIVAL: what the
+                # engine gets is the remainder after queue wait, and a
+                # batch already past its deadline fails without running
+                waited = now - min(r.enqueued for r in batch)
+                deadline_s = slo.deadline_s - waited
+                if deadline_s <= 0:
+                    raise DeadlineExceeded(
+                        f"request expired in queue after {waited:.3f}s "
+                        f"(SLO {slo.name!r} allows {slo.deadline_s}s from "
+                        "arrival); not submitted", waited_s=waited)
             coalesced = (batch[0].table if len(batch) == 1
                          else concat_tables([r.table for r in batch]))
             # the per-batch branch copies the base branch's commit chain,
             # so base tables stay visible and the request table vanishes
             # with the branch — main is never polluted by request data
             self.catalog.create_branch(branch, from_branch=ep.branch)
+            branch_created = True
             self.catalog.write_table(ep.source_table, coalesced,
                                      branch=branch,
                                      message=f"serve batch {run_id}")
+            client = Client()
+            client.subscribe(self._engine_listener(ep.name))
             handle = submit_run(ep.project, self.cluster, branch=branch,
-                                targets=[ep.target], client=Client(),
+                                targets=[ep.target], client=client,
                                 run_id=run_id, priority=slo.priority,
-                                deadline_s=slo.deadline_s)
+                                deadline_s=deadline_s,
+                                chunk_rows=ep.chunk_rows)
+            t_run = time.perf_counter()
             result = handle.wait()
-            out = result.read(ep.target, self.cluster)
+            m.observe("run_latency_s", time.perf_counter() - t_run, ep.name)
+            # chunk-streaming view of the output, when the handle is
+            # chunk-addressable (None -> iter_result falls back to result)
+            stream = result.open_stream(ep.target, self.cluster)
+            opener = stream[1] if stream is not None else None
+            # lazy response path: a streaming-registered endpoint resolves
+            # its tickets with the rows still on the workers — the
+            # row-count contract checks against the handle's row count,
+            # iter_result()'s first chunk never waits on a whole-table
+            # fetch, and result() materializes on first call. Idempotent
+            # endpoints stay eager (the cache needs the bytes now).
+            lazy = (opener is not None and ep.chunk_rows is not None
+                    and not ep.idempotent)
+            mat_lock = threading.Lock()
+            out = None if lazy else result.read(ep.target, self.cluster)
+            out_rows = out.num_rows if out is not None else stream[0].num_rows
+
+            def materialize():
+                nonlocal out
+                with mat_lock:
+                    if out is None:
+                        out = result.read(ep.target, self.cluster)
+                    return out
             if not ep.coalescible:
                 # one request per run: no split, no row-preservation
                 # contract — the pipeline may aggregate freely
                 with self._lock:
                     self._stats["batches"] += 1
                     self._stats["runs"] += 1
-                batch[0].ticket._resolve(out)
+                m.inc("batches", ep.name)
+                m.inc("runs", ep.name)
+                if opener is not None:
+                    batch[0].ticket._attach_stream(opener, 0, out_rows)
+                if lazy:
+                    batch[0].ticket._resolve_lazy(materialize)
+                else:
+                    self._cache_put(ep, batch[0], out)
+                    batch[0].ticket._resolve(out)
                 return
-            if out.num_rows != coalesced.num_rows:
+            if out_rows != coalesced.num_rows:
                 raise GatewayError(
                     f"endpoint {ep.name!r}: target {ep.target!r} returned "
-                    f"{out.num_rows} rows for {coalesced.num_rows} request "
+                    f"{out_rows} rows for {coalesced.num_rows} request "
                     "rows — the pipeline is not row-preserving, so the "
                     "batch cannot be split back per-request (register with "
                     "rowwise models or a non-coalescible endpoint)")
@@ -349,36 +575,104 @@ class Gateway:
                 self._stats["runs"] += 1
                 if len(batch) > 1:
                     self._stats["coalesced_requests"] += len(batch)
+            m.inc("batches", ep.name)
+            m.inc("runs", ep.name)
+            if len(batch) > 1:
+                m.inc("coalesced_requests", ep.name, len(batch))
             start = 0
             for req in batch:
                 n = req.table.num_rows
                 req.ticket.batched_with = len(batch) - 1
-                req.ticket._resolve(out.slice(start, n))
+                if opener is not None:
+                    req.ticket._attach_stream(opener, start, n)
+                if lazy:
+                    req.ticket._resolve_lazy(
+                        lambda s=start, ln=n: materialize().slice(s, ln))
+                else:
+                    piece = out.slice(start, n)
+                    self._cache_put(ep, req, piece)
+                    req.ticket._resolve(piece)
                 start += n
         except BaseException as e:
-            for req in batch:
-                req.ticket._fail(e)
+            if isinstance(e, DeadlineExceeded):
+                m.inc("deadline_misses", ep.name, len(batch))
+                done = time.perf_counter()
+                for req in batch:
+                    req.ticket._fail(DeadlineExceeded(
+                        str(e), waited_s=done - req.enqueued,
+                        run_id=e.run_id))
+            else:
+                m.inc("batch_failures", ep.name)
+                for req in batch:
+                    req.ticket._fail(e)
         finally:
+            # slots free before the branch cleanup below: a caller whose
+            # ticket just resolved must be admittable again immediately
             for _ in batch:
                 self.admission.release()
+            if branch_created:
+                # success or failure, the throwaway branch must go: a
+                # 50k-request day must not leave 50k/batch_size branches
+                # of committed request data in the catalog
+                try:
+                    self.catalog.delete_branch(branch)
+                except KeyError:
+                    pass
 
     # -- introspection / lifecycle -----------------------------------------
 
     def stats(self) -> dict:
         with self._lock:
             out = dict(self._stats)
+            out["result_cache_entries"] = len(self._result_cache)
         out["admission"] = self.admission.stats()
         out["queued"] = self._batcher.depth()
         return out
 
+    def metrics(self) -> dict:
+        """Live metrics snapshot (plain JSON): counters, gauges and
+        sliding-window histograms from every serving hook — see
+        serving/metrics.py for the schema."""
+        m = self.metrics_registry
+        m.gauge("queue_depth", self._batcher.depth())
+        m.gauge("admission_pending", self.admission.stats()["pending"])
+        with self._lock:
+            m.gauge("result_cache_entries", len(self._result_cache))
+        return m.snapshot()
+
+    def metrics_snapshot(self, path: Optional[str] = None) -> dict:
+        """``metrics()`` plus the legacy ``stats()`` block; when ``path``
+        is given the snapshot is also written there as a JSON artifact
+        (benchmarks archive it next to their timing JSON)."""
+        snap = self.metrics()
+        snap["stats"] = self.stats()
+        if path is not None:
+            with open(path, "w") as f:
+                json.dump(snap, f, indent=2, sort_keys=True)
+        return snap
+
     def close(self) -> None:
-        """Drain queued requests, then stop. Idempotent."""
+        """Drain queued requests, then stop. Idempotent.
+
+        Requests admitted concurrently with close() can land in the
+        batcher after the dispatcher thread exited; the drain sweep
+        fails those tickets with GatewayError instead of stranding
+        their callers on a result() that never resolves."""
         with self._lock:
             if self._closed:
                 return
             self._closed = True
         self._batcher.close()
         self._dispatcher.join(timeout=30)
+        while True:
+            stranded = self._batcher.next_batch(timeout=0)
+            if not stranded:
+                break
+            for req in stranded:
+                self.metrics_registry.inc("stranded_at_close", req.endpoint)
+                req.ticket._fail(GatewayError(
+                    "gateway closed before the request was scheduled"))
+                self.admission.release()
         self._pool.shutdown(wait=True)
         if self._owns_cluster:
             self.cluster.close()

@@ -1,0 +1,137 @@
+"""Serving observability: the gateway's live metrics registry.
+
+PR 8's gateway coalesced and SLO-scheduled but flew blind — operators
+could not see queue wait, batch occupancy, shed rate or deadline misses
+without scraping per-run event logs. This registry is the one aggregation
+point all the serving hooks feed:
+
+  * the gateway front door (requests, result-cache hits, shed requests,
+    admission rejects by reason, stranded-at-close),
+  * the batch executor (queue-wait and batch-occupancy distributions,
+    deadline misses, batch/run failures),
+  * the engine's run-lifecycle event stream, via the per-batch
+    ``Client.subscribe`` hook (tasks done, engine cache hits, retries,
+    deadline-cancelled runs, lost workers).
+
+Three metric kinds, each optionally labelled (the gateway labels by
+endpoint, admission by refusal reason):
+
+  * **counters** — monotonic totals (``inc``);
+  * **gauges** — last-written instantaneous values (``gauge``), e.g.
+    queue depth and admission pending at snapshot time;
+  * **histograms** — bounded sliding windows of observations
+    (``observe``) exported as count/mean/max plus p50/p99 over the most
+    recent ``window`` samples, so quantiles track *current* behaviour
+    under sustained load instead of averaging over the process lifetime.
+
+``snapshot()`` returns a plain-JSON dict (`Gateway.metrics()` /
+``Gateway.metrics_snapshot()`` surface it); everything is safe to call
+from any thread.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from typing import Deque, Dict, Tuple
+
+
+class _Window:
+    """One histogram series: bounded observation window + lifetime count.
+
+    Not thread-safe on its own — MetricsRegistry serializes access under
+    its lock (same discipline as admission's TokenBucket).
+    """
+
+    __slots__ = ("samples", "count", "total", "max")
+
+    def __init__(self, window: int):
+        self.samples: Deque[float] = deque(maxlen=window)
+        self.count = 0
+        self.total = 0.0
+        self.max = 0.0
+
+    def observe(self, value: float) -> None:
+        self.samples.append(value)
+        self.count += 1
+        self.total += value
+        if value > self.max:
+            self.max = value
+
+    def quantile(self, q: float) -> float:
+        if not self.samples:
+            return 0.0
+        xs = sorted(self.samples)
+        return xs[min(int(len(xs) * q), len(xs) - 1)]
+
+    def export(self) -> Dict[str, float]:
+        return {"count": self.count,
+                "mean": round(self.total / max(self.count, 1), 6),
+                "max": round(self.max, 6),
+                "p50": round(self.quantile(0.50), 6),
+                "p99": round(self.quantile(0.99), 6)}
+
+
+class MetricsRegistry:
+    """Thread-safe counters/gauges/histograms keyed by (name, label)."""
+
+    def __init__(self, window: int = 2048):
+        if window < 1:
+            raise ValueError("window must be >= 1")
+        self.window = window
+        self._lock = threading.Lock()
+        self._counters: Dict[Tuple[str, str], float] = {}  # guard: _lock
+        self._gauges: Dict[Tuple[str, str], float] = {}    # guard: _lock
+        self._hists: Dict[Tuple[str, str], _Window] = {}   # guard: _lock
+        self._started = time.time()
+
+    # -- write side ---------------------------------------------------------
+
+    def inc(self, name: str, label: str = "", n: float = 1) -> None:
+        """Add ``n`` to the counter ``name{label}``."""
+        with self._lock:
+            key = (name, label)
+            self._counters[key] = self._counters.get(key, 0) + n
+
+    def gauge(self, name: str, value: float, label: str = "") -> None:
+        """Set the instantaneous value of gauge ``name{label}``."""
+        with self._lock:
+            self._gauges[(name, label)] = value
+
+    def observe(self, name: str, value: float, label: str = "") -> None:
+        """Record one observation into histogram ``name{label}``."""
+        with self._lock:
+            win = self._hists.get((name, label))
+            if win is None:
+                win = self._hists[(name, label)] = _Window(self.window)
+            win.observe(float(value))
+
+    # -- read side ----------------------------------------------------------
+
+    def counter(self, name: str, label: str = "") -> float:
+        with self._lock:
+            return self._counters.get((name, label), 0)
+
+    def counter_total(self, name: str) -> float:
+        """Sum of a counter across every label (e.g. all endpoints)."""
+        with self._lock:
+            return sum(v for (n, _), v in self._counters.items() if n == name)
+
+    def quantile(self, name: str, q: float, label: str = "") -> float:
+        with self._lock:
+            win = self._hists.get((name, label))
+            return win.quantile(q) if win is not None else 0.0
+
+    def snapshot(self) -> Dict:
+        """Plain-JSON export: ``{kind: {name: {label: value}}}`` (the empty
+        label serializes as ``""``) plus registry uptime."""
+        with self._lock:
+            out: Dict = {"uptime_s": round(time.time() - self._started, 3),
+                         "counters": {}, "gauges": {}, "histograms": {}}
+            for (name, label), v in sorted(self._counters.items()):
+                out["counters"].setdefault(name, {})[label] = v
+            for (name, label), v in sorted(self._gauges.items()):
+                out["gauges"].setdefault(name, {})[label] = v
+            for (name, label), win in sorted(self._hists.items()):
+                out["histograms"].setdefault(name, {})[label] = win.export()
+            return out

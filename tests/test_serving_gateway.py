@@ -315,3 +315,321 @@ def test_batcher_max_wait_flushes_partial_batch():
     waited = time.perf_counter() - t0
     assert len(batch) == 1
     assert waited < 1.0     # interactive max_wait is 10ms, not the timeout
+
+
+# -- catalog branch lifecycle (the headline leak fix) ------------------------
+
+
+def test_catalog_delete_branch(cat):
+    cat.create_branch("scratch")
+    assert "scratch" in cat.list_branches()
+    # the branch saw its own commit; deleting it must not disturb main
+    cat.write_table("extra",
+                    ColumnTable.from_pydict({"y": np.asarray([1.0])}),
+                    branch="scratch")
+    cat.delete_branch("scratch")
+    assert "scratch" not in cat.list_branches()
+    assert cat.read_table("requests").num_rows == 1  # main intact
+    with pytest.raises(KeyError, match="unknown branch"):
+        cat.delete_branch("scratch")
+    with pytest.raises(ValueError, match="refusing"):
+        cat.delete_branch("main")
+
+
+def test_serving_does_not_leak_branches(cat, tmp_path):
+    """Branch count must be constant across many batches — success AND
+    failure paths both delete the throwaway per-batch branch."""
+    gw = _gateway(cat, tmp_path, max_batch_requests=1)
+    try:
+        gw.register("ep", _rowwise_project(), "requests")
+        liar = bp.Project("serve-liar")
+
+        @liar.model(rowwise=True)
+        def drop(data=bp.Model("requests", columns=["x"])):
+            x = np.asarray(data.column("x").to_numpy())
+            return {"x": x[: max(len(x) - 1, 0)]}
+
+        gw.register("bad", liar, "requests")
+        before = set(cat.list_branches())
+        tickets = [gw.submit("ep", _req([float(i)])) for i in range(20)]
+        for t in tickets:
+            t.result(timeout=60)
+        failed = gw.submit("bad", _req([1.0, 2.0]))
+        with pytest.raises(GatewayError, match="not row-preserving"):
+            failed.result(timeout=60)
+        # tickets resolve before the finally-block cleanup runs; give the
+        # last batch's deletion a moment, then the count must be back
+        deadline = time.perf_counter() + 5.0
+        while (set(cat.list_branches()) != before
+               and time.perf_counter() < deadline):
+            time.sleep(0.01)
+        assert set(cat.list_branches()) == before
+    finally:
+        gw.close()
+    assert set(cat.list_branches()) == before
+
+
+# -- close-vs-submit race (stranded-ticket fix) ------------------------------
+
+
+def test_close_fails_stranded_tickets(cat, tmp_path):
+    """A request enqueued concurrently with close() — after the
+    dispatcher stopped looking — must fail with GatewayError at close,
+    never hang its caller. Reproduced deterministically by blinding the
+    dispatcher thread's view of the batcher."""
+    gw = _gateway(cat, tmp_path)
+    try:
+        gw.register("ep", _rowwise_project(), "requests")
+        real_next = gw._batcher.next_batch
+        dispatcher = gw._dispatcher
+        blinded = threading.Event()
+        blind_calls = [0]
+
+        def blind_for_dispatcher(timeout=None):
+            if threading.current_thread() is dispatcher:
+                # second blinded call proves any in-flight REAL call
+                # (which would still see the queue) already returned
+                blind_calls[0] += 1
+                if blind_calls[0] >= 2:
+                    blinded.set()
+                time.sleep(0.01)
+                return None
+            return real_next(timeout)
+
+        gw._batcher.next_batch = blind_for_dispatcher
+        assert blinded.wait(5)
+        t = gw.submit("ep", _req([1.0]))   # queued; dispatcher never sees it
+        assert not t.done()
+    finally:
+        gw.close()
+    with pytest.raises(GatewayError, match="closed before"):
+        t.result(timeout=5)
+    assert gw.admission.stats()["pending"] == 0
+    assert gw.metrics()["counters"]["stranded_at_close"]["ep"] == 1
+
+
+# -- deadline enforcement ----------------------------------------------------
+
+
+def test_deadline_measured_from_arrival(cat, tmp_path):
+    """SLO deadlines start at request ARRIVAL: a request whose queue wait
+    alone exceeds deadline_s must fail with DeadlineExceeded without ever
+    being submitted (under the old bug the run got the full budget and
+    finished 'on time')."""
+    gw = _gateway(cat, tmp_path)
+    try:
+        gw.register("ep", _rowwise_project(), "requests")
+        # a lone request waits max_wait_s=0.6 for co-riders, blowing the
+        # 0.25s deadline before the batch even forms
+        slo = bp.SLOClass("tight", priority=10, deadline_s=0.25,
+                          max_wait_s=0.6)
+        t = gw.submit("ep", _req([1.0]), slo=slo)
+        with pytest.raises(bp.DeadlineExceeded) as ei:
+            t.result(timeout=10)
+        assert ei.value.run_id == ""          # never reached the engine
+        assert 0.5 <= ei.value.waited_s < 2.0
+        m = gw.metrics()
+        assert m["counters"]["deadline_misses"]["ep"] == 1
+        assert "deadline_cancelled_runs" not in m["counters"]
+    finally:
+        gw.close()
+
+
+def test_engine_cancel_expired_stops_late_run(cat, tmp_path):
+    """A run that outlives its deadline is CANCELLED mid-flight: wait()
+    raises DeadlineExceeded near the deadline (not after the full
+    pipeline duration) and downstream tasks never start."""
+    from repro.core.runtime import Client, LocalCluster
+
+    proj = bp.Project("slow-chain")
+
+    @proj.model(rowwise=True)
+    def slow(data=bp.Model("requests", columns=["x"])):
+        time.sleep(1.2)
+        return {"x": np.asarray(data.column("x").to_numpy()) * 2.0}
+
+    @proj.model(rowwise=True, materialize=True)
+    def after(data=bp.Model("slow")):
+        return {"x": np.asarray(data.column("x").to_numpy()) + 1.0}
+
+    cluster = LocalCluster(cat, cat.store, str(tmp_path / "dp"), n_workers=2)
+    started = []
+    client = Client()
+    client.subscribe(lambda ev: started.append(ev.task_id)
+                     if ev.kind == "task_start" else None)
+    try:
+        t0 = time.perf_counter()
+        handle = bp.submit(proj, cluster=cluster, client=client,
+                           deadline_s=0.3)
+        with pytest.raises(bp.DeadlineExceeded) as ei:
+            handle.wait(timeout=10)
+        wall = time.perf_counter() - t0
+        assert wall < 1.0           # cancelled at ~0.3s, not after 1.2s+
+        assert ei.value.waited_s == pytest.approx(0.3, abs=0.25)
+        assert ei.value.run_id == handle.run_id
+        time.sleep(1.2)             # let the sleeping task drain
+        assert not any("after" in tid for tid in started)
+    finally:
+        cluster.close()
+
+
+def test_gateway_cancels_expired_run(cat, tmp_path):
+    """End-to-end through the gateway: a sleeping endpoint with a tight
+    SLO is cancelled by the engine and surfaces as DeadlineExceeded with
+    the run id; metrics count both the miss and the cancelled run."""
+    proj = bp.Project("serve-slow")
+
+    @proj.model(rowwise=True, materialize=True)
+    def slow(data=bp.Model("requests", columns=["x"])):
+        time.sleep(1.0)
+        return {"x": np.asarray(data.column("x").to_numpy()) * 2.0}
+
+    gw = _gateway(cat, tmp_path)
+    try:
+        gw.register("ep", proj, "requests")
+        slo = bp.SLOClass("snap", priority=10, deadline_s=0.3, max_wait_s=0.0)
+        t = gw.submit("ep", _req([1.0]), slo=slo)
+        t0 = time.perf_counter()
+        with pytest.raises(bp.DeadlineExceeded) as ei:
+            t.result(timeout=10)
+        assert time.perf_counter() - t0 < 0.9
+        assert ei.value.run_id.startswith("gw-ep-")
+        m = gw.metrics()
+        assert m["counters"]["deadline_misses"]["ep"] == 1
+        assert m["counters"]["deadline_cancelled_runs"]["ep"] == 1
+    finally:
+        gw.close()
+
+
+# -- streaming responses -----------------------------------------------------
+
+
+def _unmaterialized_project():
+    proj = bp.Project("serve-stream")
+
+    @proj.model(rowwise=True)
+    def scaled(data=bp.Model("requests", columns=["x"])):
+        return {"x": np.asarray(data.column("x").to_numpy()) * 2.0}
+
+    return proj
+
+
+def test_iter_result_streams_byte_identical_chunks(cat, tmp_path):
+    """iter_result() must yield this request's exact row range of the
+    coalesced output — sliced across chunk boundaries — and concatenate
+    byte-identical to result()."""
+    gw = _gateway(cat, tmp_path, max_batch_requests=8)
+    try:
+        gw.register("ep", _unmaterialized_project(), "requests",
+                    chunk_rows=4)
+        reqs = [_req(list(np.arange(float(n)) + 10 * n)) for n in (3, 4, 5)]
+        tickets = [gw.submit("ep", r, slo="batch") for r in reqs]
+        saw_multi_chunk = False
+        for t, r in zip(tickets, reqs):
+            whole = t.result(timeout=60)
+            chunks = list(t.iter_result())
+            saw_multi_chunk |= len(chunks) > 1
+            got = np.concatenate([c.column("x").to_numpy() for c in chunks])
+            assert got.tolist() == whole.column("x").to_numpy().tolist()
+            assert got.tolist() == (r.column("x").to_numpy() * 2.0).tolist()
+        # 12 coalesced rows at chunk_rows=4 -> some request spans chunks
+        assert saw_multi_chunk
+    finally:
+        gw.close()
+
+
+def test_iter_result_falls_back_for_materialized_target(cat, tmp_path):
+    gw = _gateway(cat, tmp_path)
+    try:
+        gw.register("ep", _rowwise_project(), "requests")
+        t = gw.submit("ep", _req([1.0, 2.0]))
+        whole = t.result(timeout=60)
+        chunks = list(t.iter_result())
+        got = np.concatenate([c.column("x").to_numpy() for c in chunks])
+        assert got.tolist() == whole.column("x").to_numpy().tolist()
+    finally:
+        gw.close()
+
+
+# -- result cache ------------------------------------------------------------
+
+
+def test_idempotent_endpoint_serves_repeat_from_cache(cat, tmp_path):
+    gw = _gateway(cat, tmp_path, max_batch_requests=1)
+    try:
+        gw.register("ep", _rowwise_project(), "requests", idempotent=True)
+        first = gw.invoke("ep", _req([1.0, 2.0]))
+        runs_after_first = gw.stats()["runs"]
+        again = gw.invoke("ep", _req([1.0, 2.0]))
+        assert again.equals(first)
+        assert gw.stats()["runs"] == runs_after_first   # no second run
+        m = gw.metrics()
+        assert m["counters"]["result_cache_hits"]["ep"] == 1
+        # different content -> miss -> a real run
+        other = gw.invoke("ep", _req([9.0]))
+        assert other.column("x").to_numpy().tolist() == [19.0]
+        assert gw.stats()["runs"] == runs_after_first + 1
+    finally:
+        gw.close()
+
+
+def test_non_idempotent_endpoint_never_caches(cat, tmp_path):
+    gw = _gateway(cat, tmp_path, max_batch_requests=1)
+    try:
+        gw.register("ep", _rowwise_project(), "requests")
+        gw.invoke("ep", _req([1.0]))
+        gw.invoke("ep", _req([1.0]))
+        assert gw.stats()["runs"] == 2
+        assert "result_cache_hits" not in gw.metrics()["counters"]
+    finally:
+        gw.close()
+
+
+# -- metrics -----------------------------------------------------------------
+
+
+def test_metrics_snapshot_exports_serving_counters(cat, tmp_path):
+    import json
+
+    gw = _gateway(cat, tmp_path, max_pending=1, max_batch_requests=1)
+    try:
+        gw.register("ep", _rowwise_project(), "requests")
+        t1 = gw.submit("ep", _req([1.0]))
+        with pytest.raises(AdmissionError):
+            gw.submit("ep", _req([2.0]))   # shed at the front door
+        t1.result(timeout=60)
+        gw.invoke("ep", _req([3.0]))
+        path = str(tmp_path / "metrics.json")
+        snap = gw.metrics_snapshot(path)
+        c = snap["counters"]
+        assert c["requests"]["ep"] == 3
+        assert c["shed_requests"]["ep"] == 1
+        assert c["admission_rejected"]["queue_full"] == 1
+        assert c["runs"]["ep"] == 2
+        assert c["engine_tasks_done"]["ep"] > 0
+        h = snap["histograms"]
+        assert h["queue_wait_s"]["ep"]["count"] == 2
+        assert h["batch_occupancy"]["ep"]["mean"] == 1.0
+        assert h["run_latency_s"]["ep"]["p99"] > 0
+        assert snap["gauges"]["queue_depth"][""] == 0
+        assert snap["stats"]["runs"] == 2
+        with open(path) as f:
+            assert json.load(f) == snap
+    finally:
+        gw.close()
+
+
+def test_metrics_registry_window_quantiles():
+    from repro.serving import MetricsRegistry
+
+    m = MetricsRegistry(window=100)
+    for v in range(1, 101):
+        m.observe("lat", v / 100.0)
+    assert m.quantile("lat", 0.5) == pytest.approx(0.51, abs=0.02)
+    assert m.quantile("lat", 0.99) == pytest.approx(1.0, abs=0.02)
+    m.inc("hits", "a")
+    m.inc("hits", "b", 2)
+    assert m.counter_total("hits") == 3
+    snap = m.snapshot()
+    assert snap["histograms"]["lat"][""]["count"] == 100
+    assert snap["counters"]["hits"] == {"a": 1, "b": 2}
